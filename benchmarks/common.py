@@ -1,0 +1,30 @@
+"""Shared benchmark utilities. All paper-table benchmarks run at a reduced
+CPU scale (this container) with the scale factor recorded in the output;
+full-scale numbers come from the dry-run/roofline path."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, List
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timeit(fn: Callable, *args, repeat: int = 1) -> float:
+    """Seconds for one call (min over repeats), blocking on jax outputs."""
+    import jax
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best

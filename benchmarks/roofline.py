@@ -1,0 +1,82 @@
+"""Roofline report: reads the dry-run JSONs and emits the per-(arch x shape)
+three-term table, dominant bottleneck, MODEL_FLOPS/HLO_FLOPS utility ratio,
+and the suggested hillclimb targets. Single-pod (16x16) per the brief.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import Row
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+# active params per token (MoE: routed top-k + shared only), precomputed from
+# the configs; used for MODEL_FLOPS = 6 * N_active * tokens.
+def _active_params(arch_cfg, n_params_total):
+    c = arch_cfg
+    if c.n_experts:
+        # subtract the inactive routed expert weights
+        per_expert = 3 * c.d_model * c.moe_d_ff
+        n_moe_layers = sum(1 for j in range(c.n_layers) if c.is_moe_layer(j))
+        inactive = n_moe_layers * per_expert * (c.n_experts - c.top_k)
+        return n_params_total - inactive
+    return n_params_total
+
+
+def run(mesh: str = "16x16"):
+    from repro.configs import ARCHS
+    rows = []
+    table = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        r = json.loads(f.read_text())
+        cfg = ARCHS[r["arch"]]
+        shape_tokens = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+                        "decode_32k": 128, "long_500k": 1}[r["shape"]]
+        n_active = _active_params(cfg, r["n_params"])
+        mult = 6 if r["kind"] == "train" else 2
+        model_flops = mult * n_active * shape_tokens / r["n_chips"]
+        hlo = r["cost"]["flops_per_device"]
+        util = model_flops / hlo if hlo else 0.0
+        rl = r["roofline"]
+        dom = rl["dominant"]
+        total = rl["compute_s"] + rl["memory_s"] + rl["collective_s"]
+        frac = rl[dom] / total if total else 0.0
+        table.append((r["arch"], r["shape"], rl, dom, util,
+                      r["memory"]["peak_estimate_gib"]))
+        rows.append(Row(
+            f"roofline/{r['arch']}__{r['shape']}", rl[dom] * 1e6,
+            f"compute_s={rl['compute_s']:.3e};memory_s={rl['memory_s']:.3e};"
+            f"collective_s={rl['collective_s']:.3e};dominant={dom};"
+            f"model/hlo_flops={util:.3f};peak_gib={r['memory']['peak_estimate_gib']}"))
+    return rows
+
+
+def print_markdown(mesh: str = "16x16"):
+    """Full markdown table for EXPERIMENTS.md §Roofline."""
+    from repro.configs import ARCHS
+    print(f"| arch | shape | compute_s | memory_s (lb) | collective_s | "
+          f"dominant | MODEL/HLO flops | peak GiB/dev (TPU model) | "
+          f"(XLA-CPU ub) |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        r = json.loads(f.read_text())
+        cfg = ARCHS[r["arch"]]
+        shape_tokens = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+                        "decode_32k": 128, "long_500k": 1}[r["shape"]]
+        n_active = _active_params(cfg, r["n_params"])
+        mult = 6 if r["kind"] == "train" else 2
+        model_flops = mult * n_active * shape_tokens / r["n_chips"]
+        hlo = r["cost"]["flops_per_device"]
+        util = model_flops / hlo if hlo else 0.0
+        rl = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3e} | "
+              f"{rl['memory_s']:.3e} | {rl['collective_s']:.3e} | "
+              f"{rl['dominant'].replace('_s', '')} | {util:.3f} | "
+              f"{r['memory'].get('modeled_peak_gib_tpu', '-')} | "
+              f"{r['memory']['peak_estimate_gib']} |")
+
+
+if __name__ == "__main__":
+    import sys
+    print_markdown(sys.argv[1] if len(sys.argv) > 1 else "16x16")

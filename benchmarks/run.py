@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Scales are CPU-container defaults;
+full-scale shape coverage lives in the dry-run/roofline path.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names (e.g. table1,fig1)")
+    args = ap.parse_args()
+
+    from benchmarks import (fig1_accuracy_vs_m, fig2_speedup, rff_vs_nystrom,
+                            roofline, table1_formulations, table2_basis,
+                            table4_cost_slicing, table5_ppacksvm)
+    benches = {
+        "table1": table1_formulations.run,
+        "fig1": fig1_accuracy_vs_m.run,
+        "table2": table2_basis.run,
+        "table4": table4_cost_slicing.run,
+        "fig2": fig2_speedup.run,
+        "table5": table5_ppacksvm.run,
+        "rff": rff_vs_nystrom.run,
+        "roofline": roofline.run,
+    }
+    only = set(args.only.split(",")) if args.only else set(benches)
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in benches.items():
+        if name not in only:
+            continue
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(row.csv(), flush=True)
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+        print(f"# {name} finished in {time.time() - t0:.1f}s", flush=True)
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

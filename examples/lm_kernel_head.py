@@ -1,0 +1,73 @@
+"""The paper's technique as a first-class framework feature: a Nystrom
+kernel head trained with TRON on frozen transformer features.
+
+A tiny LM backbone embeds synthetic token sequences; sequence classification
+is then learnt by (a) a LINEAR head and (b) the paper's Nystrom kernel
+machine (formulation (4) + TRON) on the same pooled features. The kernel
+head wins on this nonlinearly-separable task — the reason kernel heads on
+features are useful at all.
+
+  PYTHONPATH=src python examples/lm_kernel_head.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.core import KernelSpec, TronConfig, random_basis, solve
+from repro.models.common import unzip
+from repro.models.registry import make_model
+from repro.models.transformer import forward_lm
+
+cfg = ARCHS["tinyllama-1.1b"].reduced()
+model = make_model(cfg)
+params, _ = unzip(model.init(jax.random.PRNGKey(0)))
+
+key = jax.random.PRNGKey(1)
+n, nt, S = 2048, 512, 32
+tokens = jax.random.randint(key, (n + nt, S), 0, cfg.vocab)
+
+
+@jax.jit
+def features(toks):
+    logits, _, _ = forward_lm(params, cfg, {"tokens": toks}, remat=False)
+    # mean-pool the last hidden layer's logits as frozen features
+    return jnp.tanh(logits.mean(axis=1))
+
+
+print("extracting frozen backbone features...")
+F = jnp.concatenate([features(tokens[i: i + 256])
+                     for i in range(0, n + nt, 256)])
+
+# task: labels from an RBF teacher ON THE FEATURES — nonlinear structure a
+# linear probe cannot capture but a kernel head should (the reason one puts
+# a kernel machine on top of representations at all).
+kc, ka = jax.random.split(jax.random.PRNGKey(7))
+centers = F[jax.random.choice(kc, n + nt, (16,), replace=False)]
+alpha = jax.random.normal(ka, (16,))
+d2 = jnp.sum((F[:, None, :] - centers[None]) ** 2, axis=-1)
+sig_t = 0.35 * jnp.sqrt(jnp.median(d2))   # local kernels (avoid the
+teacher = jnp.exp(-d2 / (2 * sig_t ** 2)) @ alpha   # near-linear regime)
+labels = jnp.sign(teacher - jnp.median(teacher))
+
+Ftr, ytr, Fte, yte = F[:n], labels[:n], F[n:], labels[n:]
+
+t0 = time.time()
+lin = solve(Ftr, ytr, Ftr[:128], lam=1e-3, kernel=KernelSpec("linear"),
+            cfg=TronConfig(max_iter=100))
+acc_lin = lin.accuracy(Fte, yte)
+print(f"linear head:        test_acc={acc_lin:.4f} ({time.time() - t0:.1f}s)")
+
+t0 = time.time()
+basis = random_basis(jax.random.PRNGKey(2), Ftr, 256)
+rbf = solve(Ftr, ytr, basis, lam=1e-3,
+            kernel=KernelSpec("gaussian", sigma=float(sig_t) * 1.5),
+            cfg=TronConfig(max_iter=100))
+acc_rbf = rbf.accuracy(Fte, yte)
+print(f"nystrom kernel head: test_acc={acc_rbf:.4f} "
+      f"(m=256, TRON iters={int(rbf.stats.n_iter)}, {time.time() - t0:.1f}s)")
+assert acc_rbf >= acc_lin, "kernel head should beat linear on nonlinear task"

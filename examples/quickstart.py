@@ -1,0 +1,34 @@
+"""Quickstart: train a Nystrom kernel SVM with distributed TRON (paper
+Algorithm 1) end-to-end on synthetic covtype-like data, a few hundred TRON
+iterations — the paper's kind of 'end-to-end driver'.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (KernelSpec, TronConfig, predict, random_basis, solve)
+from repro.data import make_dataset
+
+t0 = time.time()
+X, y, Xt, yt, spec = make_dataset("covtype", jax.random.PRNGKey(0),
+                                  scale=0.02, d_cap=54)
+print(f"data: n={X.shape[0]:,} d={X.shape[1]} (covtype-like)")
+
+kern = KernelSpec("gaussian", sigma=1.2)
+for m in (64, 256, 1024):
+    basis = random_basis(jax.random.PRNGKey(1), X, m)
+    t = time.time()
+    mach = solve(X, y, basis, lam=0.01, kernel=kern,
+                 cfg=TronConfig(max_iter=300, grad_rtol=1e-4))
+    acc = mach.accuracy(Xt, yt)
+    print(f"m={m:5d}: test_acc={acc:.4f} TRON iters={int(mach.stats.n_iter)} "
+          f"(fg={int(mach.stats.n_fg)}, Hd={int(mach.stats.n_hd)}) "
+          f"solve={time.time() - t:.2f}s")
+
+print(f"total {time.time() - t0:.1f}s — accuracy rises with m (paper Fig. 1)")

@@ -1,0 +1,39 @@
+"""Minimal numpy-based pytree checkpointing (no orbax in this container).
+
+Flattens the pytree with jax.tree_util key paths, stores leaves in a single
+.npz plus a treedef manifest. Atomic via tmp-file rename. Good enough for
+the example drivers; a real deployment would swap in orbax behind the same
+two calls.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _key_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def save_checkpoint(path: str, tree: Any, metadata: dict | None = None):
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {_key_str(p): np.asarray(v) for p, v in leaves_with_paths}
+    manifest = {"keys": list(arrays.keys()), "metadata": metadata or {}}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
+    os.close(fd)
+    np.savez(tmp, __manifest__=json.dumps(manifest), **arrays)
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def load_checkpoint(path: str, like: Any) -> Any:
+    with np.load(path, allow_pickle=False) as data:
+        leaves_with_paths = jax.tree_util.tree_flatten_with_path(like)[0]
+        treedef = jax.tree_util.tree_structure(like)
+        leaves = [np.asarray(data[_key_str(p)]) for p, _ in leaves_with_paths]
+    return jax.tree_util.tree_unflatten(treedef, leaves)

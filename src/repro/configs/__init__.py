@@ -1,0 +1,27 @@
+"""Assigned architecture configs (10, spanning 6 families) + paper datasets.
+
+Every config cites its source model card / paper. ``get_arch(name)`` returns
+the exact published configuration; ``--arch <id>`` in the launchers selects
+one. ``reduced()`` on any config gives the CPU smoke-test variant.
+"""
+from repro.configs.phi3_vision_4p2b import CONFIG as phi3_vision_4p2b
+from repro.configs.mamba2_1p3b import CONFIG as mamba2_1p3b
+from repro.configs.llama32_1b import CONFIG as llama32_1b
+from repro.configs.qwen3_4b import CONFIG as qwen3_4b
+from repro.configs.jamba_v01_52b import CONFIG as jamba_v01_52b
+from repro.configs.deepseek_v2_236b import CONFIG as deepseek_v2_236b
+from repro.configs.granite_34b import CONFIG as granite_34b
+from repro.configs.whisper_small import CONFIG as whisper_small
+from repro.configs.tinyllama_1p1b import CONFIG as tinyllama_1p1b
+from repro.configs.grok1_314b import CONFIG as grok1_314b
+
+ARCHS = {c.name: c for c in [
+    phi3_vision_4p2b, mamba2_1p3b, llama32_1b, qwen3_4b, jamba_v01_52b,
+    deepseek_v2_236b, granite_34b, whisper_small, tinyllama_1p1b, grok1_314b,
+]}
+
+
+def get_arch(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,11 @@
+"""granite-34b [dense] — Granite Code 34B: GPT-BigCode-style, MQA (kv=1),
+88 layers, gelu MLP (d_ff = 4*d_model => ~34B params; a swiglu MLP at this
+d_ff would be ~47B, contradicting the model name). [arXiv:2405.04324]"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-34b", family="dense",
+    n_layers=88, d_model=6144, n_heads=48, n_kv_heads=1, head_dim=128,
+    d_ff=24576, vocab=49152, mlp_variant="gelu",
+    citation="arXiv:2405.04324",
+)

@@ -1,0 +1,10 @@
+"""grok-1-314b [moe] — 8 experts top-2, GQA kv=8. [hf:xai-org/grok-1]"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="grok-1-314b", family="moe",
+    n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=32768, vocab=131072,
+    n_experts=8, top_k=2, moe_d_ff=32768, moe_every=1,
+    citation="hf:xai-org/grok-1",
+)

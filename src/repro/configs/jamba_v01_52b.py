@@ -1,0 +1,16 @@
+"""jamba-v0.1-52b [hybrid] — Mamba+attention 1:7 interleave, MoE 16e top-2
+on every other layer. [arXiv:2403.19887]
+
+Adaptation note (DESIGN.md): Jamba's mamba layers are Mamba-1; we use the
+repo's Mamba-2/SSD block (state=16 kept from the Jamba card)."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b", family="hybrid",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab=65536,
+    attn_period=8, attn_index=4,     # 1 attention layer per 8 (1:7)
+    n_experts=16, top_k=2, moe_d_ff=14336, moe_every=2, moe_offset=1,
+    ssm_state=16, ssm_headdim=64, ssm_expand=2, ssm_chunk=256, conv_width=4,
+    citation="arXiv:2403.19887",
+)

@@ -1,0 +1,12 @@
+"""phi-3-vision-4.2b [vlm] — phi3-mini LM backbone + CLIP vision stub.
+[hf:microsoft/Phi-3-vision-128k-instruct]"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi-3-vision-4.2b", family="vlm",
+    n_layers=32, d_model=3072, n_heads=32, n_kv_heads=32, head_dim=96,
+    d_ff=8192, vocab=32064,
+    n_patches=1024,                  # stubbed ViT/projector output tokens
+    rope_theta=10_000.0, mlp_variant="swiglu",
+    citation="hf:microsoft/Phi-3-vision-128k-instruct",
+)

@@ -1,0 +1,12 @@
+"""whisper-small [audio] — enc-dec; conv/mel frontend STUBBED (input_specs
+provides precomputed frame embeddings). [arXiv:2212.04356]"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-small", family="audio",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, head_dim=64,
+    d_ff=3072, vocab=51865,
+    is_encdec=True, encoder_layers=12, encoder_seq=1500,
+    mlp_variant="gelu",
+    citation="arXiv:2212.04356",
+)

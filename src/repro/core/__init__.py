@@ -1,0 +1,24 @@
+"""Core library: the paper's contribution.
+
+Formulation (4) of the Nystrom-approximated kernel machine, the TRON
+solver, and the distributed Algorithm 1 (shard_map + psum AllReduce).
+"""
+from repro.core.losses import LOSSES, get_loss, SQUARED_HINGE, LOGISTIC, SQUARED
+from repro.core.nystrom import KernelSpec, gram, build_C, build_W, predict
+from repro.core.formulation import Formulation4, to_linearized, beta_from_w
+from repro.core.tron import TronConfig, TronResult, tron
+from repro.core.solver import NystromMachine, solve
+from repro.core.distributed import DistConfig, DistributedNystrom
+from repro.core.basis import random_basis, kmeans, select_basis
+from repro.core.stagewise import stagewise_solve, StageResult
+
+__all__ = [
+    "LOSSES", "get_loss", "SQUARED_HINGE", "LOGISTIC", "SQUARED",
+    "KernelSpec", "gram", "build_C", "build_W", "predict",
+    "Formulation4", "to_linearized", "beta_from_w",
+    "TronConfig", "TronResult", "tron",
+    "NystromMachine", "solve",
+    "DistConfig", "DistributedNystrom",
+    "random_basis", "kmeans", "select_basis",
+    "stagewise_solve", "StageResult",
+]

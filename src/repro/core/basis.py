@@ -1,0 +1,104 @@
+"""Basis point selection (paper §3.2).
+
+Two strategies, matching the paper's recipe:
+  * random subset of the training points — cheap, used when m is large;
+  * distributed K-means — each node computes local assignments and partial
+    centroid sums, combined with AllReduce(psum); used when m is small
+    (Table 2 shows the accuracy edge at small m and the cost blow-up at
+    large m). The paper runs only ~3 Lloyd iterations; so do we by default.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.nystrom import sqdist
+
+
+def random_basis(key: jax.Array, X: jnp.ndarray, m: int) -> jnp.ndarray:
+    """m training points chosen uniformly without replacement (paper step 2).
+
+    With X row-sharded this is a gather by global indices — the cross-device
+    traffic is exactly the paper's 'broadcast of basis points' (O(m d))."""
+    n = X.shape[0]
+    idx = jax.random.choice(key, n, shape=(m,), replace=False)
+    return jnp.take(X, idx, axis=0)
+
+
+def _kmeans_step_local(Xl, centers):
+    """Local Lloyd step: assignments + partial sums (runs per shard)."""
+    d2 = sqdist(Xl, centers)                       # (n_local, m)
+    assign = jnp.argmin(d2, axis=1)
+    onehot = jax.nn.one_hot(assign, centers.shape[0], dtype=Xl.dtype)
+    psums = onehot.T @ Xl                          # (m, d) partial sums
+    pcounts = jnp.sum(onehot, axis=0)              # (m,)
+    inertia = jnp.sum(jnp.min(d2, axis=1))
+    return psums, pcounts, inertia
+
+
+def kmeans(key: jax.Array, X: jnp.ndarray, m: int, n_iter: int = 3,
+           mesh: Optional[Mesh] = None,
+           data_axes: Tuple[str, ...] = ("data",)) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(Distributed) K-means. Returns (centers, inertia_trace).
+
+    When ``mesh`` is given, the Lloyd step runs under shard_map with X
+    row-sharded and the partial sums AllReduced — the paper's distributed
+    K-means. Without a mesh it is the identical math on one device.
+    """
+    centers0 = random_basis(key, X, m)
+
+    if mesh is None:
+        def step(centers, _):
+            psums, pcounts, inertia = _kmeans_step_local(X, centers)
+            new = psums / jnp.maximum(pcounts, 1.0)[:, None]
+            new = jnp.where(pcounts[:, None] > 0, new, centers)
+            return new, inertia
+        centers, trace = jax.lax.scan(step, centers0, None, length=n_iter)
+        return centers, trace
+
+    def wrapped(Xl, centers):
+        # local Lloyd partials + AllReduce(psum) — the distributed step
+        psums, pcounts, inertia = _kmeans_step_local(Xl, centers)
+        psums, pcounts, inertia = jax.lax.psum(
+            (psums, pcounts, inertia), data_axes)
+        return psums, pcounts, inertia
+
+    body = shard_map(wrapped, mesh=mesh,
+                     in_specs=(P(data_axes, None), P()),
+                     out_specs=(P(), P(), P()), check_vma=False)
+
+    @jax.jit
+    def run(X, centers0):
+        def step(centers, _):
+            psums, pcounts, inertia = body(X, centers)
+            new = psums / jnp.maximum(pcounts, 1.0)[:, None]
+            new = jnp.where(pcounts[:, None] > 0, new, centers)
+            return new, inertia
+        return jax.lax.scan(step, centers0, None, length=n_iter)
+
+    with mesh:
+        return run(X, centers0)
+
+
+def select_basis(key: jax.Array, X: jnp.ndarray, m: int, *,
+                 strategy: str = "auto", kmeans_threshold: int = 4096,
+                 n_features_threshold: int = 4096, n_iter: int = 3,
+                 mesh: Optional[Mesh] = None,
+                 data_axes: Tuple[str, ...] = ("data",)) -> jnp.ndarray:
+    """Paper §3.2 policy: K-means when m (and d) are small, random otherwise."""
+    if strategy == "auto":
+        strategy = ("kmeans"
+                    if m <= kmeans_threshold and X.shape[1] <= n_features_threshold
+                    else "random")
+    if strategy == "random":
+        return random_basis(key, X, m)
+    if strategy == "kmeans":
+        centers, _ = kmeans(key, X, m, n_iter=n_iter, mesh=mesh,
+                            data_axes=data_axes)
+        return centers
+    raise ValueError(f"unknown basis strategy {strategy!r}")

@@ -1,0 +1,269 @@
+"""Algorithm 1 — distributed TRON for formulation (4) — mapped to JAX.
+
+Paper (Hadoop/AllReduce-tree)          ->  this module (TPU mesh)
+-------------------------------------------------------------------------
+step 1  rows of T scattered to p nodes ->  X, y sharded over the data axes
+step 2  basis points broadcast         ->  basis replicated (P())
+step 3  node-local row block of C      ->  C sharded P(data_axes, model_axis)
+step 4  f/g/Hd = local matvec + AllReduce
+                                       ->  shard_map body + lax.psum
+The paper's proposed hyper-node extension ("row partitioning per hyper-node,
+column partitioning within") is exactly the optional ``model_axis``: rows of
+C over the data axes, columns over the model axis (2-D partition of C and W).
+
+Three execution modes:
+  * ``shard_map``  — the faithful Algorithm 1: collectives are explicit
+    psums, one per paper AllReduce call.
+  * ``auto``       — same math as plain jnp under jit with sharded operands;
+    XLA SPMD chooses the collective schedule (used in §Perf to compare
+    against the hand-written schedule).
+  * ``materialize=False`` — C is never stored: every f/g/Hd recomputes its
+    C tiles on the fly (paper §3.1 "kernel caching / compute on the fly",
+    adapted to TPU by fusing gram+matvec; optionally the Pallas kmvp kernel).
+
+beta (and CG direction d) are replicated, matching the paper ("beta is
+broadcast to all nodes"); every m-vector reduction is a single psum.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.core.losses import Loss, get_loss
+from repro.core.nystrom import KernelSpec, gram
+from repro.core.tron import TronConfig, TronResult, tron
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: Optional[str] = None   # column partition (hyper-node scheme)
+    mode: str = "shard_map"            # shard_map | auto
+    materialize: bool = True           # store C, or recompute on the fly
+    backend: str = "jnp"               # gram backend: jnp | pallas
+
+
+def _dp_index(data_axes):
+    """Linearized index of this device along the (possibly nested) data axes."""
+    idx = jax.lax.axis_index(data_axes[0])
+    for ax in data_axes[1:]:
+        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+    return idx
+
+
+def _psum_dp(x, data_axes):
+    return jax.lax.psum(x, data_axes)
+
+
+class DistributedNystrom:
+    """Distributed solver for formulation (4) on a device mesh."""
+
+    def __init__(self, mesh: Mesh, lam: float, loss: Loss | str,
+                 kernel: KernelSpec, dist: DistConfig = DistConfig()):
+        self.mesh = mesh
+        self.lam = float(lam)
+        self.loss = get_loss(loss) if isinstance(loss, str) else loss
+        self.kernel = kernel
+        self.dist = dist
+        da, ma = dist.data_axes, dist.model_axis
+        self.row_spec = P(da)                    # y, o, D
+        self.x_spec = P(da, None)                # X rows
+        self.c_spec = P(da, ma)                  # C 2-D partition
+        self.w_spec = P(da, ma)                  # W 2-D partition (row blocks)
+        self.rep_spec = P()                      # beta, d, basis
+
+    # ------------------------------------------------------------------ setup
+    def shardings(self):
+        ns = lambda spec: NamedSharding(self.mesh, spec)
+        return dict(x=ns(self.x_spec), y=ns(self.row_spec), c=ns(self.c_spec),
+                    w=ns(self.w_spec), rep=ns(self.rep_spec))
+
+    def precompute(self, X, basis):
+        """Steps 2-3: broadcast basis, build sharded C and W."""
+        sh = self.shardings()
+        kern, backend = self.kernel, self.dist.backend
+
+        @partial(jax.jit, out_shardings=(sh["c"], sh["w"]))
+        def _build(X, basis):
+            C = gram(X, basis, kern, backend)
+            W = gram(basis, basis, kern, backend)
+            return C, W
+
+        return _build(X, basis)
+
+    # -------------------------------------------------------------- closures
+    def _local_fgrad(self, Cb, Wb, yb, beta):
+        """Node-local body of paper steps 4a+4b; returns psum-reduced f,g,D."""
+        da, ma = self.dist.data_axes, self.dist.model_axis
+        m = beta.shape[0]
+        m_dp = Wb.shape[0]          # W row-block size (m / |data axes|)
+        m_mp = Cb.shape[1]          # column-block size (m / |model axis|)
+
+        # column slice of beta this device multiplies against
+        if ma is not None:
+            col0 = jax.lax.axis_index(ma) * m_mp
+        else:
+            col0 = 0
+        beta_cols = jax.lax.dynamic_slice(beta, (col0,), (m_mp,))
+
+        o_part = Cb @ beta_cols
+        o = jax.lax.psum(o_part, ma) if ma else o_part          # AllReduce (4a)
+
+        Wb_part = Wb @ beta_cols if ma else Wb @ beta
+        Wbeta_rows = jax.lax.psum(Wb_part, ma) if ma else Wb_part
+
+        row0 = _dp_index(da) * m_dp
+        beta_rows = jax.lax.dynamic_slice(beta, (row0,), (m_dp,))
+        reg_part = beta_rows @ Wbeta_rows
+        loss_part = jnp.sum(self.loss.value(o, yb))
+        # paper step 4a: both sums AllReduced over the data tree in one shot
+        reg, lsum = _psum_dp(jnp.stack([reg_part, loss_part]), da)
+        f = 0.5 * self.lam * reg + lsum
+
+        r = self.loss.grad(o, yb)
+        g_loss_part = r @ Cb                                     # (m_mp,)
+        g_reg_rows = self.lam * Wbeta_rows                       # (m_dp,)
+        g_local = jnp.zeros((m,), beta.dtype)
+        g_local = jax.lax.dynamic_update_slice(g_local, g_reg_rows, (row0,))
+        g_loss = jnp.zeros((m,), beta.dtype)
+        g_loss = jax.lax.dynamic_update_slice(g_loss, g_loss_part, (col0,))
+        # NOTE: g_loss contributions overlap across data shards -> psum over
+        # all axes gives the complete gradient (AllReduce 4b).
+        g = _psum_dp(g_local, da) + jax.lax.psum(
+            _psum_dp(g_loss, da), ma) if ma else _psum_dp(g_local + g_loss, da)
+
+        D = self.loss.diag(o, yb)
+        return f, g, D
+
+    def _local_hessd(self, Cb, Wb, Db, d):
+        """Node-local body of paper step 4c (gradient path with y=0, D fixed)."""
+        da, ma = self.dist.data_axes, self.dist.model_axis
+        m = d.shape[0]
+        m_dp = Wb.shape[0]
+        m_mp = Cb.shape[1]
+        col0 = jax.lax.axis_index(ma) * m_mp if ma else 0
+        d_cols = jax.lax.dynamic_slice(d, (col0,), (m_mp,))
+
+        o_part = Cb @ d_cols
+        o = jax.lax.psum(o_part, ma) if ma else o_part           # AllReduce
+        Wd_part = Wb @ d_cols if ma else Wb @ d
+        Wd_rows = jax.lax.psum(Wd_part, ma) if ma else Wd_part
+
+        row0 = _dp_index(da) * m_dp
+        h_loss_part = (Db * o) @ Cb
+        h = jnp.zeros((m,), d.dtype)
+        h = jax.lax.dynamic_update_slice(h, self.lam * Wd_rows, (row0,))
+        h2 = jnp.zeros((m,), d.dtype)
+        h2 = jax.lax.dynamic_update_slice(h2, h_loss_part, (col0,))
+        if ma:
+            return _psum_dp(h, da) + jax.lax.psum(_psum_dp(h2, da), ma)
+        return _psum_dp(h + h2, da)                              # AllReduce
+
+    # ------------------------------------------------- on-the-fly (no C in HBM)
+    def _slice_basis(self, basis, m):
+        """(row-block for W rows, col-block for C/W cols) of the basis set."""
+        da, ma = self.dist.data_axes, self.dist.model_axis
+        dp_total = 1
+        for ax in da:
+            dp_total *= jax.lax.axis_size(ax)
+        m_dp = m // dp_total
+        row0 = _dp_index(da) * m_dp
+        basis_rows = jax.lax.dynamic_slice_in_dim(basis, row0, m_dp, 0)
+        if ma is not None:
+            m_mp = m // jax.lax.axis_size(ma)
+            col0 = jax.lax.axis_index(ma) * m_mp
+            basis_cols = jax.lax.dynamic_slice_in_dim(basis, col0, m_mp, 0)
+        else:
+            basis_cols = basis
+        return basis_rows, basis_cols
+
+    def _otf_blocks(self, Xl, basis, m):
+        """Recompute this device's C and W blocks in-register (paper §3.1:
+        'compute kernel elements on the fly'; TPU version = gram fused into
+        the matvec, optionally via the Pallas kmvp kernel)."""
+        basis_rows, basis_cols = self._slice_basis(basis, m)
+        Cb = gram(Xl, basis_cols, self.kernel, self.dist.backend)
+        Wb = gram(basis_rows, basis_cols, self.kernel, self.dist.backend)
+        return Cb, Wb
+
+    def make_otf_closures(self, X, y, basis):
+        """(fgrad, hessd) that never materialize C globally."""
+        m = basis.shape[0]
+
+        def fg_local(Xl, yb, basis, beta):
+            Cb, Wb = self._otf_blocks(Xl, basis, m)
+            return self._local_fgrad(Cb, Wb, yb, beta)
+
+        def hd_local(Xl, yb, basis, D, d):
+            Cb, Wb = self._otf_blocks(Xl, basis, m)
+            del yb
+            return self._local_hessd(Cb, Wb, D, d)
+
+        smap = partial(shard_map, mesh=self.mesh, check_vma=False)
+        fg_body = smap(fg_local,
+                       in_specs=(self.x_spec, self.row_spec, self.rep_spec,
+                                 self.rep_spec),
+                       out_specs=(self.rep_spec, self.rep_spec, self.row_spec))
+        hd_body = smap(hd_local,
+                       in_specs=(self.x_spec, self.row_spec, self.rep_spec,
+                                 self.row_spec, self.rep_spec),
+                       out_specs=self.rep_spec)
+        fgrad = lambda beta: fg_body(X, y, basis, beta)
+        hessd = lambda D, d: hd_body(X, y, basis, D, d)
+        return fgrad, hessd
+
+    def make_closures(self, C, W, y):
+        """(fgrad, hessd) closures over sharded C, W, y for TRON."""
+        da, ma = self.dist.data_axes, self.dist.model_axis
+        if self.dist.mode == "auto":
+            # plain global math; XLA SPMD inserts the collectives
+            def fgrad(beta, C=C, W=W, y=y):
+                o = C @ beta
+                Wb = W @ beta
+                f = 0.5 * self.lam * beta @ Wb + jnp.sum(self.loss.value(o, y))
+                g = self.lam * Wb + self.loss.grad(o, y) @ C
+                return f, g, self.loss.diag(o, y)
+
+            def hessd(D, d, C=C, W=W):
+                return self.lam * (W @ d) + (D * (C @ d)) @ C
+
+            return fgrad, hessd
+
+        smap = partial(shard_map, mesh=self.mesh, check_vma=False)
+        fg_body = smap(
+            self._local_fgrad,
+            in_specs=(self.c_spec, self.w_spec, self.row_spec, self.rep_spec),
+            out_specs=(self.rep_spec, self.rep_spec, self.row_spec),
+        )
+        hd_body = smap(
+            self._local_hessd,
+            in_specs=(self.c_spec, self.w_spec, self.row_spec, self.rep_spec),
+            out_specs=self.rep_spec,
+        )
+        fgrad = lambda beta: fg_body(C, W, y, beta)
+        hessd = lambda D, d: hd_body(C, W, D, d)
+        return fgrad, hessd
+
+    # ------------------------------------------------------------------ solve
+    def solve(self, X, y, basis, beta0=None,
+              cfg: TronConfig = TronConfig()) -> TronResult:
+        if self.dist.materialize:
+            C, W = self.precompute(X, basis)
+            fgrad, hessd = self.make_closures(C, W, y)
+        else:
+            fgrad, hessd = self.make_otf_closures(X, y, basis)
+        if beta0 is None:
+            beta0 = jnp.zeros((basis.shape[0],), X.dtype)
+
+        @jax.jit
+        def _run(beta0):
+            return tron(fgrad, hessd, beta0, cfg)
+
+        with self.mesh:
+            return _run(beta0)

@@ -1,0 +1,85 @@
+"""Formulations (3) and (4) of the Nystrom-approximated kernel machine.
+
+The paper's central object is formulation (4):
+
+    min_beta  f(beta) = lam/2 * beta^T W beta + sum_i l(c_i beta, y_i)
+
+with gradient      grad = lam * W beta + C^T (dL/do)
+and Gauss-Newton   H d  = lam * W d    + C^T D C d .
+
+Everything here is *local* math over explicit (C, W) blocks; the distributed
+Algorithm 1 (repro.core.distributed) composes these same functions inside
+shard_map with psum AllReduce, exactly mirroring the paper's node-local
+compute + AllReduce structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core.losses import Loss
+
+
+@dataclasses.dataclass(frozen=True)
+class Formulation4:
+    """f / grad / Hd for formulation (4) given materialized C, W.
+
+    All methods are jit-traceable. ``aux`` returned by fgrad carries the
+    Gauss-Newton diagonal D so Hd does not recompute outputs (matching the
+    paper's TRON usage: one f/g per outer iteration, several Hd sharing D).
+    """
+
+    lam: float
+    loss: Loss
+
+    def outputs(self, C, beta):
+        return C @ beta
+
+    def value(self, C, W, y, beta):
+        o = C @ beta
+        reg = 0.5 * self.lam * beta @ (W @ beta)
+        return reg + jnp.sum(self.loss.value(o, y))
+
+    def fgrad(self, C, W, y, beta) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Returns (f, grad, D). Cost O(nm): two matvecs with C."""
+        o = C @ beta
+        Wb = W @ beta
+        f = 0.5 * self.lam * beta @ Wb + jnp.sum(self.loss.value(o, y))
+        # NOTE: C^T v is written v @ C — XLA CPU otherwise materializes a
+        # full transposed copy of C INSIDE the TRON while-loop body (not
+        # hoisted), costing ~20x per CG step. See EXPERIMENTS.md §Perf-K1.
+        g = self.lam * Wb + self.loss.grad(o, y) @ C
+        D = self.loss.diag(o, y)
+        return f, g, D
+
+    def hessd(self, C, W, D, d) -> jnp.ndarray:
+        """Gauss-Newton product (lam W + C^T D C) d; O(nm)."""
+        return self.lam * (W @ d) + (D * (C @ d)) @ C
+
+
+def to_linearized(C, W, jitter: float = 1e-8, rank: int | None = None):
+    """Formulation (3) setup: A = C U Lam^{-1/2} via eigendecomposition of W.
+
+    This is the *baseline* path the paper argues against at large m:
+    O(m^3) eigendecomposition + O(n m^2) to form A (or O(n m mtil) with a
+    rank-mtil truncation). Returns (A, U, lam_vals) so solutions map back:
+    beta = U Lam^{-1/2} w.
+    """
+    m = W.shape[0]
+    lam_vals, U = jnp.linalg.eigh(W + jitter * jnp.eye(m, dtype=W.dtype))
+    if rank is not None:
+        lam_vals = lam_vals[-rank:]
+        U = U[:, -rank:]
+    good = lam_vals > (jitter * 10.0)
+    inv_sqrt = jnp.where(good, 1.0 / jnp.sqrt(jnp.maximum(lam_vals, jitter)), 0.0)
+    A = C @ (U * inv_sqrt[None, :])
+    return A, U, lam_vals
+
+
+def beta_from_w(U, lam_vals, w, jitter: float = 1e-8):
+    """Map linearized solution w back to beta-space: beta = U Lam^{-1/2} w."""
+    good = lam_vals > (jitter * 10.0)
+    inv_sqrt = jnp.where(good, 1.0 / jnp.sqrt(jnp.maximum(lam_vals, jitter)), 0.0)
+    return U @ (inv_sqrt * w)

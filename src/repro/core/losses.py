@@ -1,0 +1,82 @@
+"""Loss functions for kernel machines (paper §2, §3).
+
+Each loss provides value / derivative / (pseudo-)Hessian-diagonal so that
+TRON's Gauss-Newton product ``Hd = lam*W d + C^T D C d`` is generic over the
+machine type: squared-hinge -> SVM (the paper's main loss), logistic ->
+kernel logistic regression, squared -> kernel ridge regression.
+
+All are elementwise over the margin/output vector ``o = C beta``; reductions
+are left to the caller so that the distributed path can psum partial sums.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Loss:
+    """Differentiable loss l(o, y) with elementwise value/grad/diag."""
+
+    name: str
+    value: Callable  # (o, y) -> per-example loss
+    grad: Callable   # (o, y) -> dl/do
+    diag: Callable   # (o, y) -> d^2 l/do^2  (Gauss-Newton diagonal D)
+
+
+def _sqhinge_value(o, y):
+    return 0.5 * jnp.square(jnp.maximum(1.0 - y * o, 0.0))
+
+
+def _sqhinge_grad(o, y):
+    active = (1.0 - y * o) > 0.0
+    return jnp.where(active, o - y, 0.0)
+
+
+def _sqhinge_diag(o, y):
+    return jnp.where((1.0 - y * o) > 0.0, 1.0, 0.0)
+
+
+def _logistic_value(o, y):
+    # log(1 + exp(-y o)) computed stably
+    z = -y * o
+    return jnp.logaddexp(0.0, z)
+
+
+def _logistic_grad(o, y):
+    z = -y * o
+    s = jnp.where(z > 0, 1.0 / (1.0 + jnp.exp(-z)), jnp.exp(z) / (1.0 + jnp.exp(z)))
+    return -y * s
+
+
+def _logistic_diag(o, y):
+    z = -y * o
+    s = jnp.where(z > 0, 1.0 / (1.0 + jnp.exp(-z)), jnp.exp(z) / (1.0 + jnp.exp(z)))
+    return s * (1.0 - s)
+
+
+def _squared_value(o, y):
+    return 0.5 * jnp.square(o - y)
+
+
+def _squared_grad(o, y):
+    return o - y
+
+
+def _squared_diag(o, y):
+    return jnp.ones_like(o)
+
+
+SQUARED_HINGE = Loss("squared_hinge", _sqhinge_value, _sqhinge_grad, _sqhinge_diag)
+LOGISTIC = Loss("logistic", _logistic_value, _logistic_grad, _logistic_diag)
+SQUARED = Loss("squared", _squared_value, _squared_grad, _squared_diag)
+
+LOSSES = {l.name: l for l in (SQUARED_HINGE, LOGISTIC, SQUARED)}
+
+
+def get_loss(name: str) -> Loss:
+    if name not in LOSSES:
+        raise KeyError(f"unknown loss {name!r}; available: {sorted(LOSSES)}")
+    return LOSSES[name]

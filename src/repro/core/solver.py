@@ -1,0 +1,55 @@
+"""Single-machine convenience facade over formulation (4) + TRON.
+
+This is the 'one node' row of the paper's tables; the distributed path is
+repro.core.distributed.DistributedNystrom with identical math.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formulation import Formulation4
+from repro.core.losses import Loss, get_loss
+from repro.core.nystrom import KernelSpec, build_C, build_W, predict
+from repro.core.tron import TronConfig, TronResult, tron
+
+
+@dataclasses.dataclass
+class NystromMachine:
+    """A trained Nystrom kernel machine: basis points + beta."""
+
+    basis: jnp.ndarray
+    beta: jnp.ndarray
+    kernel: KernelSpec
+    stats: TronResult
+
+    def decision(self, X, backend: str = "jnp"):
+        return predict(X, self.basis, self.beta, self.kernel, backend)
+
+    def accuracy(self, X, y, backend: str = "jnp") -> float:
+        o = self.decision(X, backend)
+        return float(jnp.mean(jnp.sign(o) == y))
+
+
+def solve(X, y, basis, *, lam: float, loss: Loss | str = "squared_hinge",
+          kernel: KernelSpec = KernelSpec(), cfg: TronConfig = TronConfig(),
+          beta0: Optional[jnp.ndarray] = None,
+          backend: str = "jnp") -> NystromMachine:
+    loss = get_loss(loss) if isinstance(loss, str) else loss
+    C = build_C(X, basis, kernel, backend)
+    W = build_W(basis, kernel, backend)
+    form = Formulation4(lam=lam, loss=loss)
+    if beta0 is None:
+        beta0 = jnp.zeros((basis.shape[0],), X.dtype)
+
+    @jax.jit
+    def _run(C, W, y, beta0):
+        return tron(lambda b: form.fgrad(C, W, y, b),
+                    lambda D, d: form.hessd(C, W, D, d), beta0, cfg)
+
+    stats = _run(C, W, y, beta0)
+    return NystromMachine(basis=basis, beta=stats.beta, kernel=kernel,
+                          stats=stats)

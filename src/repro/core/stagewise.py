@@ -1,0 +1,76 @@
+"""Stage-wise addition of basis points (paper §3, 'Stage-wise addition').
+
+The advantage of formulation (4) the paper highlights: growing m needs no
+incremental SVD. We warm-start by zero-padding beta for the new points and
+only the new columns of C (and new rows/cols of W) are computed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formulation import Formulation4
+from repro.core.losses import Loss
+from repro.core.nystrom import KernelSpec, gram
+from repro.core.tron import TronConfig, tron
+
+
+@dataclasses.dataclass
+class StageResult:
+    m: int
+    f: float
+    gnorm: float
+    n_iter: int
+    beta: jnp.ndarray
+
+
+def stagewise_solve(X, y, basis_stages: List[jnp.ndarray], *, lam: float,
+                    loss: Loss, kernel: KernelSpec,
+                    cfg: TronConfig = TronConfig(),
+                    backend: str = "jnp",
+                    callback: Optional[Callable] = None) -> List[StageResult]:
+    """Solve (4) with basis sets growing stage by stage.
+
+    ``basis_stages[k]`` holds only the points ADDED at stage k. Returns the
+    per-stage results; beta of the final stage is the full solution.
+    Incrementality: stage k computes only gram(X, new) and the new W blocks.
+    """
+    form = Formulation4(lam=lam, loss=loss)
+    results: List[StageResult] = []
+    C = None
+    W = None
+    beta = None
+
+    run = jax.jit(lambda C, W, y, b: tron(
+        lambda bb: form.fgrad(C, W, y, bb),
+        lambda D, d: form.hessd(C, W, D, d),
+        b, cfg))
+
+    basis_all = None
+    for stage, new_pts in enumerate(basis_stages):
+        C_new = gram(X, new_pts, kernel, backend)              # only new cols
+        if C is None:
+            C, W, basis_all = C_new, gram(new_pts, new_pts, kernel, backend), new_pts
+            beta = jnp.zeros((new_pts.shape[0],), X.dtype)
+        else:
+            W_cross = gram(basis_all, new_pts, kernel, backend)  # old x new
+            W_new = gram(new_pts, new_pts, kernel, backend)
+            W = jnp.block([[W, W_cross], [W_cross.T, W_new]])
+            C = jnp.concatenate([C, C_new], axis=1)
+            basis_all = jnp.concatenate([basis_all, new_pts], axis=0)
+            # warm start: old beta kept, new coordinates start at zero
+            beta = jnp.concatenate(
+                [beta, jnp.zeros((new_pts.shape[0],), beta.dtype)])
+
+        res = run(C, W, y, beta)
+        beta = res.beta
+        out = StageResult(m=int(basis_all.shape[0]), f=float(res.f),
+                          gnorm=float(res.gnorm), n_iter=int(res.n_iter),
+                          beta=beta)
+        results.append(out)
+        if callback is not None:
+            callback(out)
+    return results

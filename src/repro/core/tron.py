@@ -1,0 +1,201 @@
+"""TRON: Trust-Region Newton method with Steihaug-CG inner solves.
+
+Faithful JAX port of the solver the paper uses (Lin, Weng & Keerthi,
+"Trust region Newton methods for large-scale logistic regression", ICML'07
+— reference [16]; the liblinear tron.cpp update rules). Fully jittable:
+outer iteration and inner CG are ``lax.while_loop``s, so the whole solve —
+including the distributed f/g/Hd closures with their psum AllReduces —
+lowers to a single XLA program. This is the TPU answer to the paper's §4.4
+latency pathology: 5N AllReduce calls become on-device ICI collectives
+inside one compiled loop, with zero per-call host latency.
+
+The solver is generic over two closures:
+    fgrad(beta)  -> (f, g, aux)   # aux = Gauss-Newton diagonal info
+    hessd(aux, d) -> H d
+so the same code runs the local, the shard_map-distributed, and the
+materialization-free (fused Pallas) problem variants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TronConfig:
+    max_iter: int = 200          # outer Newton iterations (paper: N ~ 300)
+    grad_rtol: float = 1e-3      # stop when ||g|| <= grad_rtol * ||g0||
+    cg_rtol: float = 0.1         # inner CG: ||r|| <= cg_rtol * ||g||
+    cg_max_iter: int = 64        # cap on CG steps per outer iteration
+    eta0: float = 1e-4           # step acceptance threshold
+    eta1: float = 0.25
+    eta2: float = 0.75
+    sigma1: float = 0.25         # trust-region shrink/grow factors
+    sigma2: float = 0.5
+    sigma3: float = 4.0
+
+
+class TronResult(NamedTuple):
+    beta: jnp.ndarray
+    f: jnp.ndarray
+    gnorm: jnp.ndarray
+    n_iter: jnp.ndarray   # outer iterations performed
+    n_fg: jnp.ndarray     # function/gradient evaluations (paper step 4a/4b calls)
+    n_hd: jnp.ndarray     # Hessian-vector products     (paper step 4c calls)
+    converged: jnp.ndarray
+
+
+class _CGState(NamedTuple):
+    s: jnp.ndarray
+    r: jnp.ndarray
+    d: jnp.ndarray
+    rtr: jnp.ndarray
+    it: jnp.ndarray
+    active: jnp.ndarray
+
+
+def _steihaug_cg(g, hvp: Callable, delta, tol, max_iter: int):
+    """Steihaug-Toint CG: approximately minimize g.s + 0.5 s'Hs, ||s||<=delta.
+
+    Returns (s, r, n_hd) with r = -g - H s maintained through boundary exits
+    (liblinear trcg semantics) so the caller can form the predicted
+    reduction as -0.5*(g.s - s.r).
+    """
+    m = g.shape[0]
+    zero = jnp.zeros_like(g)
+    init = _CGState(
+        s=zero, r=-g, d=-g,
+        rtr=g @ g,
+        it=jnp.array(0, jnp.int32),
+        active=jnp.asarray(True),
+    )
+
+    def cond(st: _CGState):
+        return st.active & (jnp.sqrt(st.rtr) > tol) & (st.it < max_iter)
+
+    def body(st: _CGState):
+        Hd = hvp(st.d)
+        dHd = st.d @ Hd
+        # Negative curvature or step leaving the region -> go to boundary.
+        alpha = st.rtr / jnp.where(dHd > 0, dHd, 1.0)
+        s_try = st.s + alpha * st.d
+        outside = (jnp.linalg.norm(s_try) >= delta) | (dHd <= 0)
+
+        # tau >= 0 solving ||s + tau d|| = delta
+        sd = st.s @ st.d
+        dd = st.d @ st.d
+        ss = st.s @ st.s
+        rad = jnp.sqrt(jnp.maximum(sd * sd + dd * (delta * delta - ss), 0.0))
+        tau = (rad - sd) / jnp.where(dd > 0, dd, 1.0)
+
+        step = jnp.where(outside, tau, alpha)
+        s_new = st.s + step * st.d
+        r_new = st.r - step * Hd
+        rtr_new = r_new @ r_new
+        beta_cg = rtr_new / jnp.where(st.rtr > 0, st.rtr, 1.0)
+        d_new = r_new + beta_cg * st.d
+        return _CGState(
+            s=s_new, r=r_new, d=d_new, rtr=rtr_new,
+            it=st.it + 1, active=~outside,
+        )
+
+    final = jax.lax.while_loop(cond, body, init)
+    return final.s, final.r, final.it
+
+
+class _TronState(NamedTuple):
+    beta: jnp.ndarray
+    f: jnp.ndarray
+    g: jnp.ndarray
+    aux: jnp.ndarray
+    delta: jnp.ndarray
+    it: jnp.ndarray
+    n_fg: jnp.ndarray
+    n_hd: jnp.ndarray
+    gnorm0: jnp.ndarray
+    active: jnp.ndarray
+
+
+def tron(fgrad: Callable, hessd: Callable, beta0: jnp.ndarray,
+         cfg: TronConfig = TronConfig()) -> TronResult:
+    """Minimize f via trust-region Newton-CG. See module docstring."""
+    f0, g0, aux0 = fgrad(beta0)
+    gnorm0 = jnp.linalg.norm(g0)
+    init = _TronState(
+        beta=beta0, f=f0, g=g0, aux=aux0,
+        delta=gnorm0,
+        it=jnp.array(0, jnp.int32),
+        n_fg=jnp.array(1, jnp.int32),
+        n_hd=jnp.array(0, jnp.int32),
+        gnorm0=gnorm0,
+        active=gnorm0 > 0,
+    )
+
+    def cond(st: _TronState):
+        gnorm = jnp.linalg.norm(st.g)
+        return st.active & (gnorm > cfg.grad_rtol * st.gnorm0) & (st.it < cfg.max_iter)
+
+    def body(st: _TronState):
+        gnorm = jnp.linalg.norm(st.g)
+        hvp = lambda d: hessd(st.aux, d)
+        s, r, cg_steps = _steihaug_cg(
+            st.g, hvp, st.delta, cfg.cg_rtol * gnorm, cfg.cg_max_iter)
+
+        snorm = jnp.linalg.norm(s)
+        gs = st.g @ s
+        prered = -0.5 * (gs - s @ r)
+
+        beta_try = st.beta + s
+        f_new, g_new, aux_new = fgrad(beta_try)
+        actred = st.f - f_new
+
+        # liblinear delta-update rules
+        denom = f_new - st.f - gs
+        alpha = jnp.where(denom <= 0, cfg.sigma3,
+                          jnp.maximum(cfg.sigma1, -0.5 * (gs / jnp.where(denom == 0, 1.0, denom))))
+        # On the very first iteration, recalibrate delta to the step scale.
+        delta = jnp.where(st.it == 0, jnp.minimum(st.delta, snorm), st.delta)
+        delta = jnp.where(
+            actred < cfg.eta0 * prered,
+            jnp.minimum(jnp.maximum(alpha, cfg.sigma1) * snorm, cfg.sigma2 * delta),
+            jnp.where(
+                actred < cfg.eta1 * prered,
+                jnp.maximum(cfg.sigma1 * delta, jnp.minimum(alpha * snorm, cfg.sigma2 * delta)),
+                jnp.where(
+                    actred < cfg.eta2 * prered,
+                    jnp.maximum(cfg.sigma1 * delta, jnp.minimum(alpha * snorm, cfg.sigma3 * delta)),
+                    jnp.maximum(delta, jnp.minimum(alpha * snorm, cfg.sigma3 * delta)),
+                ),
+            ),
+        )
+
+        accept = actred > cfg.eta0 * prered
+        beta = jnp.where(accept, beta_try, st.beta)
+        f = jnp.where(accept, f_new, st.f)
+        g = jnp.where(accept, g_new, st.g)
+        aux = jax.tree.map(lambda a, b: jnp.where(accept, a, b), aux_new, st.aux)
+
+        # Numerical stagnation guards (liblinear): stop on non-positive
+        # predicted reduction or vanishing |actred|,|prered| relative to |f|.
+        feps = jnp.abs(st.f) * 1e-12
+        stagnated = (prered <= 0) | (
+            (jnp.abs(actred) <= feps) & (jnp.abs(prered) <= feps))
+        return _TronState(
+            beta=beta, f=f, g=g, aux=aux, delta=delta,
+            it=st.it + 1,
+            n_fg=st.n_fg + 1,
+            n_hd=st.n_hd + cg_steps,
+            gnorm0=st.gnorm0,
+            active=st.active & ~stagnated,
+        )
+
+    st = jax.lax.while_loop(cond, body, init)
+    gnorm = jnp.linalg.norm(st.g)
+    return TronResult(
+        beta=st.beta, f=st.f, gnorm=gnorm,
+        n_iter=st.it, n_fg=st.n_fg, n_hd=st.n_hd,
+        converged=gnorm <= cfg.grad_rtol * st.gnorm0,
+    )

@@ -1,0 +1,2 @@
+from repro.data.synthetic import (DatasetSpec, PAPER_DATASETS, make_classification,
+                                  make_dataset, make_token_batches)

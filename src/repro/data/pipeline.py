@@ -1,0 +1,81 @@
+"""Sharded data pipeline: host-side batch assembly -> device placement.
+
+Production pattern: the host constructs global batches (here from the
+synthetic generators; a real deployment would swap in file readers behind
+the same iterator contract), places each under the mesh's batch sharding
+(leading dim over the fsdp axes), and keeps ``prefetch`` batches in flight
+so host assembly overlaps device compute.
+
+Also provides the kernel-machine loader used by launch.kernel_train: rows
+of (X, y) sharded over the data axes — paper Algorithm 1 step 1.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.partitioning import fsdp_axes
+
+
+@dataclasses.dataclass
+class ShardedLoader:
+    """Wraps a host-batch iterator with device placement + prefetch."""
+
+    mesh: Mesh
+    make_batch: Callable[[int], Dict[str, Any]]   # step -> host batch
+    prefetch: int = 2
+
+    def _sharding_for(self, x):
+        fa = fsdp_axes(self.mesh)
+        spec = P(fa, *([None] * (x.ndim - 1)))
+        return NamedSharding(self.mesh, spec)
+
+    def _put(self, batch):
+        return {k: jax.device_put(v, self._sharding_for(v))
+                for k, v in batch.items()}
+
+    def __iter__(self) -> Iterator[Dict[str, Any]]:
+        buf = collections.deque()
+        for step in itertools.count():
+            buf.append(self._put(self.make_batch(step)))
+            if len(buf) > self.prefetch:
+                yield buf.popleft()
+
+
+def synthetic_lm_loader(mesh: Mesh, cfg, batch: int, seq: int,
+                        seed: int = 0, prefetch: int = 2) -> ShardedLoader:
+    """Token-stream loader for the LM zoo (matches train.steps batch dicts)."""
+    from repro.models.transformer import D_VISION
+
+    def make_batch(step: int):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+        kt, kf = jax.random.split(key)
+        tokens = jax.random.randint(kt, (batch, seq + 1), 0, cfg.vocab)
+        out = {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+        if cfg.is_encdec:
+            out["frames"] = jax.random.normal(
+                kf, (batch, cfg.encoder_seq, cfg.d_model), cfg.jnp_dtype)
+        if cfg.n_patches:
+            out["patch_embeds"] = jax.random.normal(
+                kf, (batch, cfg.n_patches, D_VISION), cfg.jnp_dtype)
+        return out
+
+    return ShardedLoader(mesh=mesh, make_batch=make_batch, prefetch=prefetch)
+
+
+def shard_kernel_dataset(mesh: Mesh, X, y, data_axes=("data",)):
+    """Paper Algorithm 1 step 1: rows of the training set scattered over the
+    data axes (truncates to a divisible row count)."""
+    n_dp = 1
+    for a in data_axes:
+        n_dp *= mesh.shape[a]
+    n = (X.shape[0] // n_dp) * n_dp
+    Xs = jax.device_put(X[:n], NamedSharding(mesh, P(data_axes, None)))
+    ys = jax.device_put(y[:n], NamedSharding(mesh, P(data_axes)))
+    return Xs, ys

@@ -1,0 +1,136 @@
+"""Fused on-the-fly kernel matvec (kmvp) Pallas kernels.
+
+The paper (§3.1) notes that when the C row-block exceeds node memory,
+kernel elements must be recomputed on the fly ('kernel caching ideas').
+The TPU-native version of that idea is a FUSION: compute each (bn, bm)
+gram tile in VMEM and immediately contract it against the vector, so C
+never exists in HBM at all:
+
+    kmvp_fwd : o = C(x, z) @ beta        (TRON's  C beta)
+    kmvp_t   : g = C(x, z)^T @ v         (TRON's  C^T D r)
+
+HBM traffic drops from O(n m) (read a materialized C per matvec) to
+O((n + m) d / bd') per call — arithmetic intensity rises by ~min(bn, bm),
+moving the op from memory-bound to compute-bound (see EXPERIMENTS.md §Perf).
+
+Grid layouts (sequential TPU grid => safe output accumulation):
+    fwd: (i over n-blocks, j over m-blocks, k over d-blocks), o[i] += E_ij b_j
+    t  : (j over m-blocks, i over n-blocks, k over d-blocks), g[j] += E_ij^T v_i
+Both keep an (bn, bm) f32 VMEM scratch for the squared-distance accumulation
+over k, applying exp once on the last k step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _tile(x_ref, z_ref, acc_ref, k, nk, kind, sigma):
+    """Accumulate the gram tile over d-blocks; return E on the last step."""
+    x = x_ref[...].astype(jnp.float32)
+    z = z_ref[...].astype(jnp.float32)
+    xz = jax.lax.dot_general(x, z, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    if kind == "linear":
+        acc_ref[...] += xz
+    else:
+        xx = jnp.sum(x * x, axis=1, keepdims=True)
+        zz = jnp.sum(z * z, axis=1, keepdims=True).T
+        acc_ref[...] += xx + zz - 2.0 * xz
+
+
+def _finish_tile(acc_ref, kind, sigma):
+    acc = acc_ref[...]
+    if kind == "linear":
+        return acc
+    return jnp.exp(-jnp.maximum(acc, 0.0) / (2.0 * sigma ** 2))
+
+
+def _kmvp_fwd_kernel(x_ref, z_ref, b_ref, o_ref, acc_ref, *, kind, sigma):
+    j, k = pl.program_id(1), pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when((j == 0) & (k == 0))
+    def _init_out():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(k == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    _tile(x_ref, z_ref, acc_ref, k, nk, kind, sigma)
+
+    @pl.when(k == nk - 1)
+    def _contract():
+        E = _finish_tile(acc_ref, kind, sigma)                 # (bn, bm)
+        o_ref[...] += E @ b_ref[...].astype(jnp.float32)       # (bn, 1)
+
+
+def _kmvp_t_kernel(x_ref, z_ref, v_ref, g_ref, acc_ref, *, kind, sigma):
+    i, k = pl.program_id(1), pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when((i == 0) & (k == 0))
+    def _init_out():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    @pl.when(k == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    _tile(x_ref, z_ref, acc_ref, k, nk, kind, sigma)
+
+    @pl.when(k == nk - 1)
+    def _contract():
+        E = _finish_tile(acc_ref, kind, sigma)                 # (bn, bm)
+        g_ref[...] += E.T @ v_ref[...].astype(jnp.float32)     # (bm, 1)
+
+
+def kmvp_fwd_pallas(x, z, beta, *, kind="gaussian", sigma=1.0,
+                    bn=256, bm=256, bd=256, interpret=False):
+    """o = C(x, z) @ beta, C never materialized. beta: (m, 1); o: (n, 1)."""
+    n, d = x.shape
+    m, _ = z.shape
+    assert n % bn == 0 and m % bm == 0 and d % bd == 0
+    grid = (n // bn, m // bm, d // bd)
+    kernel = functools.partial(_kmvp_fwd_kernel, kind=kind, sigma=sigma)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bm, bd), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, 1), lambda i, j, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bn, bm), jnp.float32)],
+        interpret=interpret,
+    )(x, z, beta)
+
+
+def kmvp_t_pallas(x, z, v, *, kind="gaussian", sigma=1.0,
+                  bn=256, bm=256, bd=256, interpret=False):
+    """g = C(x, z)^T @ v, C never materialized. v: (n, 1); g: (m, 1)."""
+    n, d = x.shape
+    m, _ = z.shape
+    assert n % bn == 0 and m % bm == 0 and d % bd == 0
+    grid = (m // bm, n // bn, d // bd)
+    kernel = functools.partial(_kmvp_t_kernel, kind=kind, sigma=sigma)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda j, i, k: (i, k)),
+            pl.BlockSpec((bm, bd), lambda j, i, k: (j, k)),
+            pl.BlockSpec((bn, 1), lambda j, i, k: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda j, i, k: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bn, bm), jnp.float32)],
+        interpret=interpret,
+    )(x, z, v)

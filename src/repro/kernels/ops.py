@@ -1,0 +1,117 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Handles arbitrary shapes/dtypes by zero-padding to block multiples (zero
+rows/cols are exact no-ops for both the gaussian-distance accumulation and
+the matvec contractions), picks VMEM-sane MXU-aligned block sizes, and runs
+``interpret=True`` automatically off-TPU so the same call sites work in this
+CPU container and on real hardware.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import gram as _gram
+from repro.kernels import kmvp as _kmvp
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+def _block(size: int, want: int, align: int) -> int:
+    """Largest aligned block <= want that keeps padding small for tiny sizes."""
+    if size >= want:
+        return want
+    return _round_up(size, align)
+
+
+def _pad_rows(a, to):
+    pad = to - a.shape[0]
+    return a if pad == 0 else jnp.pad(a, ((0, pad), (0, 0)))
+
+
+def _pad_cols(a, to):
+    pad = to - a.shape[1]
+    return a if pad == 0 else jnp.pad(a, ((0, 0), (0, pad)))
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "sigma", "bn", "bm", "bd",
+                                             "interpret"))
+def gram(x, z, *, kind: str = "gaussian", sigma: float = 1.0,
+         bn: int = 256, bm: int = 256, bd: int = 256,
+         interpret: bool | None = None):
+    """C[i,k] = k(x_i, z_k) via the tiled Pallas kernel. Any shapes/dtypes."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n, d = x.shape
+    m = z.shape[0]
+    bn = _block(n, bn, 8)
+    bm = _block(m, bm, 128)
+    bd = _block(d, bd, 128)
+    np_, mp_, dp_ = _round_up(n, bn), _round_up(m, bm), _round_up(d, bd)
+    xp = _pad_cols(_pad_rows(x, np_), dp_)
+    zp = _pad_cols(_pad_rows(z, mp_), dp_)
+    out = _gram.gram_pallas(xp, zp, kind=kind, sigma=sigma, bn=bn, bm=bm,
+                            bd=bd, interpret=interpret)
+    return out[:n, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "sigma", "bn", "bm", "bd",
+                                             "interpret"))
+def kmvp_fwd(x, z, beta, *, kind: str = "gaussian", sigma: float = 1.0,
+             bn: int = 256, bm: int = 256, bd: int = 256,
+             interpret: bool | None = None):
+    """o = C(x, z) @ beta with C fused away (never in HBM)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n, d = x.shape
+    m = z.shape[0]
+    bn = _block(n, bn, 8)
+    bm = _block(m, bm, 128)
+    bd = _block(d, bd, 128)
+    np_, mp_, dp_ = _round_up(n, bn), _round_up(m, bm), _round_up(d, bd)
+    xp = _pad_cols(_pad_rows(x, np_), dp_)
+    zp = _pad_cols(_pad_rows(z, mp_), dp_)
+    bp = _pad_rows(beta.reshape(-1, 1), mp_)   # zero beta for padded basis rows
+    out = _kmvp.kmvp_fwd_pallas(xp, zp, bp, kind=kind, sigma=sigma, bn=bn,
+                                bm=bm, bd=bd, interpret=interpret)
+    return out[:n, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "sigma", "bn", "bm", "bd",
+                                             "interpret"))
+def kmvp_t(x, z, v, *, kind: str = "gaussian", sigma: float = 1.0,
+           bn: int = 256, bm: int = 256, bd: int = 256,
+           interpret: bool | None = None):
+    """g = C(x, z)^T @ v with C fused away (never in HBM)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n, d = x.shape
+    m = z.shape[0]
+    bn = _block(n, bn, 8)
+    bm = _block(m, bm, 128)
+    bd = _block(d, bd, 128)
+    np_, mp_, dp_ = _round_up(n, bn), _round_up(m, bm), _round_up(d, bd)
+    xp = _pad_cols(_pad_rows(x, np_), dp_)
+    zp = _pad_cols(_pad_rows(z, mp_), dp_)
+    vp = _pad_rows(v.reshape(-1, 1), np_)      # zero v for padded example rows
+    out = _kmvp.kmvp_t_pallas(xp, zp, vp, kind=kind, sigma=sigma, bn=bn,
+                              bm=bm, bd=bd, interpret=interpret)
+    return out[:m, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(Cc, Bc, dA, xdt, *, interpret: bool | None = None):
+    """Mamba-2 SSD within-chunk term via the Pallas kernel (any shapes with
+    Q multiple of 8 recommended; grid = (G, H))."""
+    from repro.kernels import ssd as _ssd
+    if interpret is None:
+        interpret = _interpret_default()
+    return _ssd.ssd_chunk_pallas(Cc, Bc, dA, xdt, interpret=interpret)

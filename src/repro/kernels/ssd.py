@@ -1,0 +1,71 @@
+"""Pallas kernel: Mamba-2 SSD within-chunk (quadratic) term.
+
+One grid cell computes, for a single (sequence-chunk, head) pair:
+
+    scores = C_c B_c^T                      (Q x Q, MXU)
+    L      = exp(segsum(dA))  (lower-tri)   (Q x Q, VPU)
+    y      = (scores * L) @ (dt * x)        (Q x P, MXU)
+
+The cumulative-sum for the decay matrix is computed as a lower-triangular
+ones matmul (MXU-friendly; no serial scan in-kernel). VMEM working set per
+cell at (Q=256, N=128, P=64): ~0.8 MB. This is the compute hot spot of the
+ssm/hybrid prefill shapes (mamba2 x prefill_32k runs 128 such chunks per
+layer per sequence).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_chunk_kernel(c_ref, b_ref, da_ref, xdt_ref, o_ref):
+    # blocks: c/b (1, Q, N); da (1, Q); xdt/o (1, Q, P)
+    C = c_ref[0].astype(jnp.float32)                     # (Q, N)
+    B = b_ref[0].astype(jnp.float32)                     # (Q, N)
+    dA = da_ref[0, 0].astype(jnp.float32)                # (Q,)
+    X = xdt_ref[0, 0].astype(jnp.float32)                # (Q, P)
+    Q = C.shape[0]
+
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # MXU
+    # segsum via triangular-ones matmul: cs[i] = sum_{k<=i} dA[k]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    tril = (ii >= jj).astype(jnp.float32)
+    cs = tril @ dA[:, None]                              # (Q, 1) inclusive
+    diff = cs - cs.T                                     # cs_i - cs_j
+    # segsum semantics: sum_{j<k<=i} dA_k = cs_i - cs_j (both inclusive)
+    L = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+    y = jax.lax.dot_general(scores * L, X, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+
+def ssd_chunk_pallas(Cc, Bc, dA, xdt, *, interpret: bool = False):
+    """Within-chunk SSD term, batched over (G, H) grid.
+
+    Cc, Bc: (G, Q, N); dA: (G, H, Q); xdt: (G, H, Q, P) -> y: (G, H, Q, P).
+    """
+    G, Q, N = Cc.shape
+    H = dA.shape[1]
+    P = xdt.shape[-1]
+    grid = (G, H)
+    return pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, N), lambda g, h: (g, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda g, h: (g, 0, 0)),
+            pl.BlockSpec((1, 1, Q), lambda g, h: (g, h, 0)),
+            pl.BlockSpec((1, 1, Q, P), lambda g, h: (g, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Q, P), lambda g, h: (g, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, H, Q, P), jnp.float32),
+        interpret=interpret,
+    )(Cc, Bc, dA, xdt)

@@ -1,0 +1,36 @@
+"""Production mesh factory.
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  512 chips as (pod=2, data=16, model=16) — the "pod" axis is a
+second data-parallel tier (per-pod gradient reduction happens over ICI; the
+pod axis reduction maps to the inter-pod DCI links).
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for {'multi-pod' if multi_pod else 'single-pod'} "
+            f"mesh, have {len(devs)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    return jax.make_mesh(shape, axes, devices=devs[:n],
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over however many devices the test host exposes."""
+    n = math.prod(shape)
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n],
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape))

@@ -1,0 +1,382 @@
+"""Attention: GQA (full / sliding / nystrom) + MLA, train and decode paths.
+
+* full/sliding use a chunked online-softmax (flash-style) scan over key
+  blocks — O(S * blk) memory instead of O(S^2), which is what lets the
+  32k-prefill shapes fit VMEM/HBM budgets.
+* ``nystrom`` is the paper-kindred sub-quadratic variant: the softmax kernel
+  matrix is Nystrom-approximated with segment-mean landmarks and the m x m
+  inverse is obtained by ITERATIVE Newton-Schulz — the same
+  "avoid the explicit pseudo-inverse" insight as the paper's formulation (4).
+* MLA (deepseek-v2) caches only the compressed c_kv + shared rope key; the
+  decode path uses the absorbed form (q W_uk^T c_kv), never expanding heads.
+
+Decode caches:
+  full/nystrom: (k, v) rings of length min(S_max, window or S_max)
+  sliding:      fixed ring buffer of ``window`` slots (sub-quadratic decode)
+  mla:          (c_kv, k_rope) — rank-compressed
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, dense_init, leaf, pscan, rms_norm
+from repro.models.config import ArchConfig
+
+NEG_INF = -1e30
+
+
+# ===================================================================== params
+def init_attention(key, cfg: ArchConfig):
+    d, H, Kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(key, 8)
+    if cfg.use_mla:
+        qk_hd = cfg.qk_nope_dim + cfg.qk_rope_dim
+        p = {
+            "wkv_a": leaf(dense_init(ks[0], (d, cfg.kv_lora_rank + cfg.qk_rope_dim), dt),
+                          "embed", "kv_lora"),
+            "kv_norm": leaf(jnp.ones((cfg.kv_lora_rank,), dt), "kv_lora"),
+            "wkv_b": leaf(dense_init(ks[1], (cfg.kv_lora_rank,
+                                             H * (cfg.qk_nope_dim + cfg.v_head_dim)), dt),
+                          "kv_lora", "heads"),
+            "wo": leaf(dense_init(ks[2], (H * cfg.v_head_dim, d), dt), "heads", "embed"),
+        }
+        if cfg.q_lora_rank:
+            p["wq_a"] = leaf(dense_init(ks[3], (d, cfg.q_lora_rank), dt), "embed", "q_lora")
+            p["q_norm"] = leaf(jnp.ones((cfg.q_lora_rank,), dt), "q_lora")
+            p["wq_b"] = leaf(dense_init(ks[4], (cfg.q_lora_rank, H * qk_hd), dt),
+                             "q_lora", "heads")
+        else:
+            p["wq"] = leaf(dense_init(ks[3], (d, H * qk_hd), dt), "embed", "heads")
+        return p
+    p = {
+        "wq": leaf(dense_init(ks[0], (d, H * hd), dt), "embed", "heads"),
+        "wk": leaf(dense_init(ks[1], (d, Kv * hd), dt), "embed", "kv"),
+        "wv": leaf(dense_init(ks[2], (d, Kv * hd), dt), "embed", "kv"),
+        "wo": leaf(dense_init(ks[3], (H * hd, d), dt), "heads", "embed"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = leaf(jnp.ones((hd,), dt), "head_dim")
+        p["k_norm"] = leaf(jnp.ones((hd,), dt), "head_dim")
+    return p
+
+
+# ============================================================ chunked softmax
+def _flash(q, k, v, q_pos, k_pos0, *, causal: bool, window: int, blk: int):
+    """Online-softmax attention.
+
+    q: (B, Sq, Kv, G, hd); k, v: (B, Sk, Kv, hd)
+    q_pos: (B, Sq) absolute positions; keys occupy k_pos0 .. k_pos0+Sk-1.
+    Returns (B, Sq, Kv, G, hd) in q.dtype; accumulators f32.
+    """
+    B, Sq, Kv, G, hd = q.shape
+    hd_v = v.shape[-1]                                   # may differ (MLA)
+    Sk = k.shape[1]
+    blk = min(blk, Sk)
+    n_blk = (Sk + blk - 1) // blk
+    pad = n_blk * blk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, n_blk, blk, Kv, hd)
+    vb = v.reshape(B, n_blk, blk, Kv, hd_v)
+    scale = hd ** -0.5
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kc, vc, bi = inputs                              # (B, blk, Kv, hd)
+        s = jnp.einsum("bqcgd,bkcd->bqcgk", q.astype(jnp.float32),
+                       kc.astype(jnp.float32)) * scale   # (B,Sq,Kv,G,blk)
+        kpos = k_pos0 + bi * blk + jnp.arange(blk)       # (blk,)
+        qp = q_pos[:, :, None, None, None]               # (B,Sq,1,1,1)
+        kp = kpos[None, None, None, None, :]
+        valid = kp < (k_pos0 + Sk)
+        if causal:
+            valid &= kp <= qp
+        if window > 0:
+            valid &= (qp - kp) < window
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqcgk,bkcd->bqcgd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Kv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Kv, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Kv, G, hd_v), jnp.float32)
+    (m, l, acc), _ = pscan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), jnp.arange(n_blk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+# ========================================================== nystrom attention
+def _newton_schulz_pinv(A, iters: int = 6):
+    """Iterative pseudo-inverse (Nystromformer eq. 12) — the attention-level
+    analogue of the paper's avoidance of eigendecomposition-based W^+."""
+    m = A.shape[-1]
+    I = jnp.eye(m, dtype=A.dtype)
+    a1 = jnp.max(jnp.sum(jnp.abs(A), axis=-2, keepdims=True), axis=-1, keepdims=True)
+    ainf = jnp.max(jnp.sum(jnp.abs(A), axis=-1, keepdims=True), axis=-2, keepdims=True)
+    Z = jnp.swapaxes(A, -1, -2) / (a1 * ainf)
+
+    def body(Z, _):
+        AZ = A @ Z
+        Z = 0.25 * Z @ (13.0 * I - AZ @ (15.0 * I - AZ @ (7.0 * I - AZ)))
+        return Z, None
+
+    Z, _ = pscan(body, Z, None, length=iters)
+    return Z
+
+
+def _nystrom_attention(q, k, v, q_pos, *, n_landmarks: int, causal: bool):
+    """Sub-quadratic attention via landmark (segment-mean) Nystrom approx.
+
+    q: (B,S,Kv,G,hd), k/v: (B,S,Kv,hd). O(S * m) time/memory. The causal
+    variant masks the landmark->key kernel at segment granularity
+    (approximate causality, documented in DESIGN.md).
+    """
+    B, S, Kv, G, hd = q.shape
+    m = min(n_landmarks, S)
+    seg = S // m
+    scale = hd ** -0.5
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # landmarks: segment means (B, m, Kv, [G,] hd)
+    q_lm = jnp.mean(qf[:, : m * seg].reshape(B, m, seg, Kv, G, hd), axis=2)
+    k_lm = jnp.mean(kf[:, : m * seg].reshape(B, m, seg, Kv, hd), axis=2)
+
+    mdim = m
+    s1 = jnp.einsum("bqcgd,bmcd->bqcgm", qf, k_lm) * scale    # query -> landmark
+    s2 = jnp.einsum("bmcgd,bncd->bcgmn", q_lm, k_lm) * scale  # landmark -> landmark
+    s3 = jnp.einsum("bmcgd,bkcd->bcgmk", q_lm, kf) * scale    # landmark -> key
+
+    if causal:
+        # segment-granular causal masks
+        lm_end = (jnp.arange(m) + 1) * seg - 1                # landmark positions
+        kpos = jnp.arange(S)
+        mask1 = lm_end[None, None, None, None, :] <= q_pos[:, :, None, None, None]
+        s1 = jnp.where(mask1, s1, NEG_INF)
+        # ensure each query can reach at least its first landmark
+        first = jnp.zeros_like(mask1).at[..., 0].set(True)
+        s1 = jnp.where(first & ~mask1.any(-1, keepdims=True), 0.0, s1)
+        mask3 = kpos[None, None, None, None, :] <= lm_end[None, None, None, :, None]
+        s3 = jnp.where(mask3, s3, NEG_INF)
+        mask2 = lm_end[None, :] <= lm_end[:, None]
+        s2 = jnp.where(mask2[None, None, None], s2, NEG_INF)
+
+    k1 = jax.nn.softmax(s1, axis=-1)
+    k2 = jax.nn.softmax(s2, axis=-1)
+    k3 = jax.nn.softmax(s3, axis=-1)
+    k3v = jnp.einsum("bcgmk,bkcd->bcgmd", k3, vf)             # (B,Kv,G,m,hd)
+    if causal:
+        # the segment-causal mask makes k2 LOWER-TRIANGULAR, so the
+        # landmark system is solved EXACTLY by a (ridge-regularized)
+        # triangular solve — no pseudo-inverse at all (the strongest form
+        # of the paper's "avoid W^+" insight) and strictly causal: the
+        # inverse of a triangular matrix is triangular, so no future
+        # leakage (tests/test_attention.py::test_nystrom_no_future_leakage).
+        # The 0.25 ridge bounds the solve against small early-landmark
+        # diagonals (ablation in EXPERIMENTS.md: corr .435 -> .611).
+        mI = 0.25 * jnp.eye(mdim, dtype=k2.dtype)
+        zk3v = jax.scipy.linalg.solve_triangular(k2 + mI, k3v, lower=True)
+    else:
+        Z = _newton_schulz_pinv(k2)                           # (B,Kv,G,m,m)
+        zk3v = Z @ k3v                                        # (B,Kv,G,m,hd)
+    out = jnp.einsum("bqcgm,bcgmd->bqcgd", k1, zk3v)
+    return out.astype(q.dtype)
+
+
+def _flash_causal_blocked(q, k, v, *, window: int, blk: int):
+    """Causal flash with BLOCK SKIPPING: query block i only visits key
+    blocks [lo(i) .. i] (lo>0 under a sliding window), so fully-masked
+    blocks cost nothing — ~2x fewer attention FLOPs than masked-dense
+    (triangular sum), window/S fewer under sliding. Exact same outputs
+    (EXPERIMENTS.md §Perf-A1). Assumes contiguous positions 0..S-1
+    (the training/prefill path)."""
+    B, S, Kv, G, hd = q.shape
+    if S % blk != 0 or S <= blk:
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        return _flash(q, k, v, pos, 0, causal=True, window=window, blk=blk)
+    nq = S // blk
+    outs = []
+    for qi in range(nq):
+        qb = q[:, qi * blk:(qi + 1) * blk]
+        lo = 0
+        if window > 0:
+            lo = max(0, (qi * blk - window) // blk * blk)
+        kb = k[:, lo:(qi + 1) * blk]
+        vb = v[:, lo:(qi + 1) * blk]
+        pos = jnp.broadcast_to(
+            (qi * blk + jnp.arange(blk))[None], (B, blk))
+        outs.append(_flash(qb, kb, vb, pos, lo, causal=True,
+                           window=window, blk=blk))
+    return jnp.concatenate(outs, axis=1)
+
+
+# ================================================================== GQA apply
+def _project_qkv(p, cfg: ArchConfig, h, positions):
+    B, S, _ = h.shape
+    H, Kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (h @ p["wq"]).reshape(B, S, H, hd)
+    k = (h @ p["wk"]).reshape(B, S, Kv, hd)
+    v = (h @ p["wv"]).reshape(B, S, Kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_train(p, cfg: ArchConfig, h, positions, *, blk: int = 1024):
+    """Full-sequence causal attention (train/prefill). h: (B, S, d)."""
+    B, S, _ = h.shape
+    H, Kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // Kv
+    q, k, v = _project_qkv(p, cfg, h, positions)
+    qg = q.reshape(B, S, Kv, G, hd)
+    if cfg.attention_variant == "nystrom":
+        out = _nystrom_attention(qg, k, v, positions,
+                                 n_landmarks=cfg.n_landmarks, causal=True)
+    else:
+        window = cfg.window if cfg.attention_variant == "sliding" else 0
+        out = _flash_causal_blocked(qg, k, v, window=window, blk=blk)
+    out = out.reshape(B, S, H * hd)
+    return out @ p["wo"]
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray       # (B, S_cache, Kv, hd) — ring buffer when sliding
+    v: jnp.ndarray
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_seq: int, layers: int):
+    Kv, hd = cfg.n_kv_heads, cfg.hd
+    size = min(max_seq, cfg.window) if cfg.attention_variant == "sliding" else max_seq
+    dt = cfg.jnp_dtype
+    return KVCache(
+        k=jnp.zeros((layers, batch, size, Kv, hd), dt),
+        v=jnp.zeros((layers, batch, size, Kv, hd), dt),
+    )
+
+
+def attn_decode(p, cfg: ArchConfig, h, cache: KVCache, pos):
+    """One-token decode. h: (B, 1, d); cache holds this LAYER's (k, v);
+    pos: scalar int32 — current position. Returns (out, new_cache)."""
+    B = h.shape[0]
+    H, Kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // Kv
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, cfg, h, positions)
+    size = cache.k.shape[1]
+    slot = pos % size if cfg.attention_variant == "sliding" else pos
+    ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+
+    qg = q.reshape(B, 1, Kv, G, hd)
+    scale = hd ** -0.5
+    s = jnp.einsum("bqcgd,bkcd->bqcgk", qg.astype(jnp.float32),
+                   ck.astype(jnp.float32)) * scale          # (B,1,Kv,G,size)
+    if cfg.attention_variant == "sliding":
+        kpos = (pos - (slot - jnp.arange(size)) % size)     # absolute pos per ring slot
+        valid = (kpos >= 0) & (kpos <= pos) & (pos - kpos < size)
+    else:
+        kpos = jnp.arange(size)
+        valid = kpos <= pos
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqcgk,bkcd->bqcgd", w, cv.astype(jnp.float32))
+    out = out.reshape(B, 1, H * hd).astype(h.dtype)
+    return out @ p["wo"], KVCache(k=ck, v=cv)
+
+
+# ================================================================== MLA apply
+def _mla_q(p, cfg: ArchConfig, h, positions):
+    B, S, _ = h.shape
+    H = cfg.n_heads
+    qk_hd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        cq = rms_norm(h @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+        q = (cq @ p["wq_b"]).reshape(B, S, H, qk_hd)
+    else:
+        q = (h @ p["wq"]).reshape(B, S, H, qk_hd)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_train(p, cfg: ArchConfig, h, positions, *, blk: int = 1024):
+    """MLA full-sequence path: expand compressed kv to per-head k/v."""
+    B, S, _ = h.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(p, cfg, h, positions)
+    kv = h @ p["wkv_a"]                                  # (B,S,lora+rope)
+    c_kv, k_rope = jnp.split(kv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    kvb = (c_kv @ p["wkv_b"]).reshape(B, S, H, cfg.qk_nope_dim + cfg.v_head_dim)
+    k_nope, v = jnp.split(kvb, [cfg.qk_nope_dim], axis=-1)
+    # fold the shared rope key into per-head keys; run as standard MHA (G=1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, (B, S, H, cfg.qk_rope_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    qg = q[:, :, :, None, :]                             # (B,S,H,1,hd)
+    out = _flash(qg, k, v, positions, 0, causal=True, window=0, blk=blk)
+    out = out.reshape(B, S, H * cfg.v_head_dim)
+    return out @ p["wo"]
+
+
+class MLACache(NamedTuple):
+    c_kv: jnp.ndarray    # (B, S, kv_lora_rank)
+    k_rope: jnp.ndarray  # (B, S, qk_rope_dim)
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_seq: int, layers: int):
+    dt = cfg.jnp_dtype
+    return MLACache(
+        c_kv=jnp.zeros((layers, batch, max_seq, cfg.kv_lora_rank), dt),
+        k_rope=jnp.zeros((layers, batch, max_seq, cfg.qk_rope_dim), dt),
+    )
+
+
+def mla_decode(p, cfg: ArchConfig, h, cache: MLACache, pos):
+    """Absorbed MLA decode: scores/outputs computed against the COMPRESSED
+    cache (deepseek-v2 serving trick) — no per-head k/v expansion."""
+    B = h.shape[0]
+    H = cfg.n_heads
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, cfg, h, positions)        # (B,1,H,*)
+    kv = h @ p["wkv_a"]
+    c_kv, k_rope = jnp.split(kv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    cc = jax.lax.dynamic_update_slice_in_dim(cache.c_kv, c_kv, pos, axis=1)
+    cr = jax.lax.dynamic_update_slice_in_dim(cache.k_rope, k_rope, pos, axis=1)
+
+    wkv_b = p["wkv_b"].reshape(cfg.kv_lora_rank, H, cfg.qk_nope_dim + cfg.v_head_dim)
+    w_k = wkv_b[:, :, : cfg.qk_nope_dim]                 # (lora, H, nope)
+    w_v = wkv_b[:, :, cfg.qk_nope_dim:]                  # (lora, H, v)
+    # absorb: q_eff = q_nope @ w_k^T  -> score against c_kv directly
+    q_eff = jnp.einsum("bqhn,lhn->bqhl", q_nope.astype(jnp.float32),
+                       w_k.astype(jnp.float32))          # (B,1,H,lora)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    s = (jnp.einsum("bqhl,bkl->bqhk", q_eff, cc.astype(jnp.float32)) +
+         jnp.einsum("bqhr,bkr->bqhk", q_rope.astype(jnp.float32),
+                    cr.astype(jnp.float32))) * scale     # (B,1,H,S)
+    kpos = jnp.arange(cc.shape[1])
+    s = jnp.where(kpos[None, None, None, :] <= pos, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bqhk,bkl->bqhl", w, cc.astype(jnp.float32))  # (B,1,H,lora)
+    out = jnp.einsum("bqhl,lhv->bqhv", ctx, w_v.astype(jnp.float32))
+    out = out.reshape(B, 1, H * cfg.v_head_dim).astype(h.dtype)
+    return out @ p["wo"], MLACache(c_kv=cc, k_rope=cr)

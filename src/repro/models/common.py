@@ -1,0 +1,159 @@
+"""Shared model-building blocks (pure-JAX, pytree params, no flax).
+
+Every parameter leaf is created through ``leaf(value, axes)`` where ``axes``
+names each dim logically ("embed", "heads", "ffn", "vocab", "experts",
+"layer", ...). ``unzip`` splits the annotated tree into (params, axes);
+repro.sharding.partitioning maps logical names -> mesh PartitionSpecs.
+Init functions are jit/eval_shape-traceable, so the dry-run builds the full
+236B/314B parameter trees as ShapeDtypeStructs with zero allocation.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class Leaf:
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+
+# Registered pytree node: value is a child (vmap/jit can batch/trace it),
+# axes ride along as static aux data.
+jax.tree_util.register_pytree_node(
+    Leaf,
+    lambda l: ((l.value,), l.axes),
+    lambda axes, ch: Leaf(ch[0], axes),
+)
+
+
+def leaf(value, *axes):
+    return Leaf(value, tuple(axes))
+
+
+def _is_leaf(x):
+    return isinstance(x, Leaf)
+
+
+def unzip(tree):
+    """Split an annotated tree into (params, axes) plain trees."""
+    params = jax.tree.map(lambda l: l.value, tree, is_leaf=_is_leaf)
+    axes = jax.tree.map(lambda l: l.axes, tree, is_leaf=_is_leaf)
+    return params, axes
+
+
+def prepend_axis(tree, name: str):
+    """Prepend a logical axis name to every Leaf (used after vmap-stacking)."""
+    return jax.tree.map(lambda l: Leaf(l.value, (name,) + l.axes),
+                        tree, is_leaf=_is_leaf)
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init."""
+    if scale is None:
+        scale = shape[0] ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------- scan
+# XLA's cost_analysis counts a while-loop body ONCE regardless of trip count,
+# which would corrupt the roofline FLOP/byte/collective accounting. The
+# dry-run therefore lowers shallow probe models with every scan UNROLLED
+# (exact op counts), extrapolating depth linearly; production lowering keeps
+# rolled scans (small HLO). All model scans go through pscan().
+_UNROLL_SCANS = False
+
+
+@contextlib.contextmanager
+def unrolled_scans():
+    global _UNROLL_SCANS
+    old = _UNROLL_SCANS
+    _UNROLL_SCANS = True
+    try:
+        yield
+    finally:
+        _UNROLL_SCANS = old
+
+
+def pscan(body, carry, xs, length=None):
+    """lax.scan honouring the unrolled_scans() context."""
+    if _UNROLL_SCANS:
+        n = length if length is not None else len(jax.tree.leaves(xs)[0])
+        return jax.lax.scan(body, carry, xs, length=length, unroll=n)
+    return jax.lax.scan(body, carry, xs, length=length)
+
+
+# ----------------------------------------------------------------- norms
+def rms_norm(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------------- rope
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) or (S,). Llama half-split rotation."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                           # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    ang = ang[..., None, :]                                 # (B, S, 1, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- mlp
+def init_mlp(key, d: int, ff: int, variant: str, dtype):
+    ks = jax.random.split(key, 3)
+    if variant == "swiglu":
+        return {
+            "w1": leaf(dense_init(ks[0], (d, ff), dtype), "embed", "ffn"),
+            "w3": leaf(dense_init(ks[1], (d, ff), dtype), "embed", "ffn"),
+            "w2": leaf(dense_init(ks[2], (ff, d), dtype), "ffn", "embed"),
+        }
+    return {  # gelu
+        "w1": leaf(dense_init(ks[0], (d, ff), dtype), "embed", "ffn"),
+        "b1": leaf(jnp.zeros((ff,), dtype), "ffn"),
+        "w2": leaf(dense_init(ks[2], (ff, d), dtype), "ffn", "embed"),
+        "b2": leaf(jnp.zeros((d,), dtype), "embed"),
+    }
+
+
+def apply_mlp(p, x, variant: str):
+    if variant == "swiglu":
+        return (jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])) @ p["w2"]
+    h = jax.nn.gelu(x @ p["w1"] + p["b1"])
+    return h @ p["w2"] + p["b2"]
+
+
+# ----------------------------------------------------------------- loss
+def cross_entropy(logits, labels, z_coef: float = 0.0):
+    """Mean token CE in f32; optional z-loss for stability."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(lse - gold)
+    if z_coef:
+        ce = ce + z_coef * jnp.mean(jnp.square(lse))
+    return ce

@@ -1,0 +1,162 @@
+"""Architecture configuration. One frozen dataclass covers all 6 families;
+family-specific fields are zero/empty when unused. Each assigned arch gets a
+module in repro/configs/ instantiating this with its exact published values.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    d_ff: int = 0
+    vocab: int = 32000
+    # --- attention options -------------------------------------------------
+    attention_variant: str = "full"  # full | sliding | nystrom
+    window: int = 8192               # sliding-window width
+    n_landmarks: int = 128           # nystrom attention landmarks
+    qk_norm: bool = False            # qwen3-style per-head RMSNorm on q,k
+    rope_theta: float = 10_000.0
+    # --- MLA (deepseek-v2) --------------------------------------------------
+    use_mla: bool = False
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # --- MoE -----------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0                # per-expert hidden size
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    moe_every: int = 1               # MoE FFN on layers with i % moe_every == moe_offset
+    moe_offset: int = 0
+    router_aux_coef: float = 0.01    # load-balance loss coefficient
+    # --- SSM (mamba2 / SSD) ---------------------------------------------------
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 64
+    conv_width: int = 4
+    # --- hybrid (jamba) -------------------------------------------------------
+    attn_period: int = 0             # 1 attention layer per `attn_period` layers
+    attn_index: int = 0              # position of the attn layer inside the period
+    # --- enc-dec (whisper) ----------------------------------------------------
+    is_encdec: bool = False
+    encoder_layers: int = 0
+    encoder_seq: int = 1500          # whisper: 30s audio -> 1500 frames
+    # --- vlm ------------------------------------------------------------------
+    n_patches: int = 0               # image patch embeddings prepended (stub frontend)
+    # --- misc ------------------------------------------------------------------
+    periods_per_scan_step: int = 1   # periods grouped per scan step: saves
+                                     # 1/k of the remat carries (k-1 extra
+                                     # within-group recomputes in bwd)
+    shard_carry: bool = False        # shard remat-saved residual stream over
+                                     # the model axis (adds a per-period
+                                     # all-gather; cuts the saved-activation
+                                     # stack by the model-axis size)
+    mlp_variant: str = "swiglu"      # swiglu | gelu
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"          # params/activations dtype for dry-run
+    citation: str = ""
+
+    # ------------------------------------------------------------------ derived
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding rows padded to a multiple of 256 so the vocab dim shards
+        evenly over the 16-way model axis (standard practice; logits for
+        padded ids are masked out of the loss)."""
+        return ((self.vocab + 255) // 256) * 256
+
+    def is_attn_layer(self, i: int) -> bool:
+        if self.family == "ssm":
+            return False
+        if self.family == "hybrid":
+            return i % self.attn_period == self.attn_index
+        return True
+
+    def is_moe_layer(self, i: int) -> bool:
+        if self.n_experts == 0:
+            return False
+        return i % self.moe_every == self.moe_offset
+
+    def with_(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self, **kw) -> "ArchConfig":
+        """Smoke-test variant: same family/topology, tiny dims (brief: <=2
+        layers, d_model <= 512, <= 4 experts)."""
+        small = dict(
+            n_layers=2 if self.family != "hybrid" else max(self.attn_period, 2),
+            d_model=min(self.d_model, 256),
+            n_heads=min(self.n_heads, 4) if self.n_heads else 0,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
+            head_dim=64 if self.n_heads else 0,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab=min(self.vocab, 512),
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            moe_d_ff=min(self.moe_d_ff, 256) if self.moe_d_ff else 0,
+            n_shared_experts=min(self.n_shared_experts, 1),
+            kv_lora_rank=min(self.kv_lora_rank, 64) if self.kv_lora_rank else 0,
+            q_lora_rank=min(self.q_lora_rank, 64) if self.q_lora_rank else 0,
+            qk_nope_dim=32 if self.use_mla else self.qk_nope_dim,
+            qk_rope_dim=16 if self.use_mla else self.qk_rope_dim,
+            v_head_dim=32 if self.use_mla else self.v_head_dim,
+            ssm_state=min(self.ssm_state, 32) if self.ssm_state else 0,
+            ssm_headdim=32 if self.ssm_state else self.ssm_headdim,
+            ssm_chunk=16,
+            encoder_layers=2 if self.is_encdec else 0,
+            encoder_seq=64 if self.is_encdec else self.encoder_seq,
+            n_patches=min(self.n_patches, 16),
+            n_landmarks=16,
+            window=64,
+            dtype="float32",
+        )
+        small.update(kw)
+        return dataclasses.replace(self, **small)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One of the four assigned input shapes."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}

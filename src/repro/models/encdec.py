@@ -1,0 +1,212 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356), transformer backbone only.
+
+Per the brief, the mel-spectrogram + conv frontend is STUBBED: the model
+consumes precomputed frame embeddings (B, T_enc, d_model) supplied by
+input_specs(). Encoder: bidirectional self-attention, GELU MLP, LayerNorm,
+learned positions. Decoder: causal self-attention + cross-attention to the
+encoder output. Decode caches: self-attn KV ring + precomputed cross KV.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import (dense_init, layer_norm, leaf, prepend_axis,
+                                 pscan, rms_norm, unzip)
+from repro.models.config import ArchConfig
+from repro.sharding.ctx import hint
+
+
+def _init_ln(d, dt):
+    return {"w": leaf(jnp.ones((d,), dt), "embed"),
+            "b": leaf(jnp.zeros((d,), dt), "embed")}
+
+
+def _apply_ln(p, x, eps):
+    return layer_norm(x, p["w"], p["b"], eps)
+
+
+def _init_xattn(key, cfg: ArchConfig):
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": leaf(dense_init(ks[0], (d, H * hd), dt), "embed", "heads"),
+        "wk": leaf(dense_init(ks[1], (d, H * hd), dt), "embed", "heads"),
+        "wv": leaf(dense_init(ks[2], (d, H * hd), dt), "embed", "heads"),
+        "wo": leaf(dense_init(ks[3], (H * hd, d), dt), "heads", "embed"),
+    }
+
+
+def _init_gelu_mlp(key, cfg: ArchConfig):
+    from repro.models.common import init_mlp
+    return init_mlp(key, cfg.d_model, cfg.d_ff, "gelu", cfg.jnp_dtype)
+
+
+def init_encdec(key, cfg: ArchConfig, max_dec_seq: int = 4096):
+    dt = cfg.jnp_dtype
+    keys = jax.random.split(key, 8)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": _init_ln(cfg.d_model, dt),
+                "self": _init_xattn(k1, cfg),
+                "ln2": _init_ln(cfg.d_model, dt),
+                "mlp": _init_gelu_mlp(k2, cfg)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": _init_ln(cfg.d_model, dt),
+                "self": attn.init_attention(k1, cfg),
+                "ln_x": _init_ln(cfg.d_model, dt),
+                "cross": _init_xattn(k2, cfg),
+                "ln2": _init_ln(cfg.d_model, dt),
+                "mlp": _init_gelu_mlp(k3, cfg)}
+
+    enc = prepend_axis(jax.vmap(enc_layer)(
+        jax.random.split(keys[0], cfg.encoder_layers)), "layer")
+    dec = prepend_axis(jax.vmap(dec_layer)(
+        jax.random.split(keys[1], cfg.n_layers)), "layer")
+    return {
+        "enc_pos": leaf(dense_init(keys[2], (cfg.encoder_seq, cfg.d_model), dt,
+                                   scale=0.02), None, "embed"),
+        "enc_blocks": enc,
+        "enc_final_ln": _init_ln(cfg.d_model, dt),
+        "embed": leaf(dense_init(keys[3], (cfg.vocab_padded, cfg.d_model), dt, scale=0.02),
+                      "vocab", "embed"),
+        "dec_pos": leaf(dense_init(keys[4], (max_dec_seq, cfg.d_model), dt, scale=0.02),
+                        None, "embed"),
+        "dec_blocks": dec,
+        "dec_final_ln": _init_ln(cfg.d_model, dt),
+    }
+
+
+def _bidir_attn(p, cfg: ArchConfig, q_in, kv_in):
+    """Plain bidirectional MHA (encoder self-attn / decoder cross-attn)."""
+    B, Sq, d = q_in.shape
+    Sk = kv_in.shape[1]
+    H, hd = cfg.n_heads, cfg.hd
+    q = (q_in @ p["wq"]).reshape(B, Sq, H, hd)
+    k = (kv_in @ p["wk"]).reshape(B, Sk, H, hd)
+    v = (kv_in @ p["wv"]).reshape(B, Sk, H, hd)
+    qg = q[:, :, :, None, :]                              # Kv=H, G=1
+    pos_q = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    out = attn._flash(qg, k, v, pos_q, 0, causal=False, window=0, blk=1024)
+    return out.reshape(B, Sq, H * hd) @ p["wo"]
+
+
+def encode(params, cfg: ArchConfig, frames):
+    """frames: (B, T_enc, d_model) — stub frontend output."""
+    h = hint(frames + params["enc_pos"][None, : frames.shape[1]],
+             "batch", None, None)
+
+    def body(h, pp):
+        x = _apply_ln(pp["ln1"], h, cfg.norm_eps)
+        h = h + _bidir_attn(pp["self"], cfg, x, x)
+        x = _apply_ln(pp["ln2"], h, cfg.norm_eps)
+        from repro.models.common import apply_mlp
+        h = h + apply_mlp(pp["mlp"], x, "gelu")
+        return h, None
+
+    h, _ = pscan(jax.checkpoint(body, prevent_cse=False), h,
+                 params["enc_blocks"])
+    return _apply_ln(params["enc_final_ln"], h, cfg.norm_eps)
+
+
+def decoder_forward(params, cfg: ArchConfig, tokens, enc_out):
+    """Teacher-forced decoder. tokens: (B, S)."""
+    B, S = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0) + params["dec_pos"][None, :S]
+    h = hint(h, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(h, pp):
+        x = _apply_ln(pp["ln1"], h, cfg.norm_eps)
+        h = h + attn.attn_train(pp["self"], cfg, x, positions)
+        x = _apply_ln(pp["ln_x"], h, cfg.norm_eps)
+        h = h + _bidir_attn(pp["cross"], cfg, x, enc_out)
+        x = _apply_ln(pp["ln2"], h, cfg.norm_eps)
+        from repro.models.common import apply_mlp
+        h = h + apply_mlp(pp["mlp"], x, "gelu")
+        return h, None
+
+    h, _ = pscan(jax.checkpoint(body, prevent_cse=False), h,
+                 params["dec_blocks"])
+    h = _apply_ln(params["dec_final_ln"], h, cfg.norm_eps)
+    return hint(h @ params["embed"].T, "batch", None, "model")  # tied unembed
+
+
+def encdec_loss(params, cfg: ArchConfig, batch):
+    enc_out = encode(params, cfg, batch["frames"])
+    logits = decoder_forward(params, cfg, batch["tokens"], enc_out)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    vocab_iota = jnp.arange(cfg.vocab_padded)
+    if cfg.vocab_padded != cfg.vocab:
+        lf = jnp.where(vocab_iota < cfg.vocab, lf, -1e30)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.sum(jnp.where(vocab_iota[None, None, :] == labels[..., None],
+                             lf, 0.0), axis=-1)
+    ce = jnp.mean(lse - gold)
+    return ce, {"ce": ce, "aux": jnp.zeros(())}
+
+
+# ------------------------------------------------------------------- decode
+class EncDecCache(NamedTuple):
+    self_kv: attn.KVCache        # (L, B, S, H, hd) decoder self-attn
+    cross_k: jnp.ndarray         # (L, B, T_enc, H*hd) precomputed
+    cross_v: jnp.ndarray
+    pos: jnp.ndarray
+
+
+def init_encdec_cache(params, cfg: ArchConfig, frames, max_seq: int):
+    """Runs the encoder and precomputes per-layer cross K/V."""
+    B = frames.shape[0]
+    enc_out = encode(params, cfg, frames)
+
+    def kv(pp):
+        return enc_out @ pp["cross"]["wk"], enc_out @ pp["cross"]["wv"]
+
+    ck, cv = jax.vmap(kv)(params["dec_blocks"])           # (L, B, T, H*hd)
+    self_kv = attn.init_kv_cache(cfg, B, max_seq, cfg.n_layers)
+    return EncDecCache(self_kv=self_kv, cross_k=ck, cross_v=cv,
+                       pos=jnp.zeros((), jnp.int32))
+
+
+def encdec_decode_step(params, cfg: ArchConfig, tokens, cache: EncDecCache):
+    """One-token decode with cross-attention to cached encoder K/V."""
+    B = tokens.shape[0]
+    H, hd = cfg.n_heads, cfg.hd
+    pos = cache.pos
+    h = jnp.take(params["embed"], tokens, axis=0) + \
+        jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, 0)[None, 0:1]
+
+    def body(h, xs):
+        pp, kvc, ck, cv = xs
+        x = _apply_ln(pp["ln1"], h, cfg.norm_eps)
+        sa, kvc = attn.attn_decode(pp["self"], cfg, x, kvc, pos)
+        h = h + sa
+        x = _apply_ln(pp["ln_x"], h, cfg.norm_eps)
+        q = (x @ pp["cross"]["wq"]).reshape(B, 1, H, hd)
+        k = ck.reshape(B, -1, H, hd)
+        v = cv.reshape(B, -1, H, hd)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) * hd ** -0.5
+        w = jax.nn.softmax(s, axis=-1)
+        ca = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+        h = h + ca.reshape(B, 1, H * hd).astype(h.dtype) @ pp["cross"]["wo"]
+        x = _apply_ln(pp["ln2"], h, cfg.norm_eps)
+        from repro.models.common import apply_mlp
+        h = h + apply_mlp(pp["mlp"], x, "gelu")
+        return h, kvc
+
+    h, new_kv = pscan(
+        body, h, (params["dec_blocks"], cache.self_kv, cache.cross_k,
+                  cache.cross_v))
+    h = _apply_ln(params["dec_final_ln"], h, cfg.norm_eps)
+    logits = h @ params["embed"].T
+    return logits, EncDecCache(self_kv=new_kv, cross_k=cache.cross_k,
+                               cross_v=cache.cross_v, pos=pos + 1)

@@ -1,0 +1,91 @@
+"""Model API registry: uniform (init / loss / decode) surface over families.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of the given assigned input shape — weak-type-correct,
+shardable, no device allocation — consumed by both the dry-run and tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as lm_mod
+from repro.models.common import unzip
+from repro.models.config import ArchConfig, ShapeSpec, INPUT_SHAPES
+from repro.models.transformer import D_VISION
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ArchConfig
+    init: Callable          # key -> annotated param tree (use common.unzip)
+    loss: Callable          # (params, batch) -> (loss, metrics)
+    init_cache: Callable    # (params, batch, max_seq) -> cache
+    decode_step: Callable   # (params, tokens, cache) -> (logits, cache)
+
+
+def make_model(cfg: ArchConfig, *, max_dec_seq: int = 4096) -> ModelAPI:
+    if cfg.is_encdec:
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: encdec_mod.init_encdec(key, cfg, max_dec_seq),
+            loss=lambda p, b: encdec_mod.encdec_loss(p, cfg, b),
+            init_cache=lambda p, b, s: encdec_mod.init_encdec_cache(
+                p, cfg, b["frames"], s),
+            decode_step=lambda p, t, c: encdec_mod.encdec_decode_step(
+                p, cfg, t, c),
+        )
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key: lm_mod.init_lm(key, cfg),
+        loss=lambda p, b: lm_mod.lm_loss(p, cfg, b),
+        init_cache=lambda p, b, s: lm_mod.init_cache(
+            cfg, b["tokens"].shape[0], s),
+        decode_step=lambda p, t, c: lm_mod.decode_step(p, cfg, t, c),
+    )
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct batch for (cfg, shape). For train/prefill the model
+    consumes the full assigned sequence (VLM: patches + text sum to seq_len;
+    whisper: encoder frames + decoder tokens). For decode shapes the batch
+    is the ONE-token step input; the KV cache spec comes from cache_specs."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+    f = functools.partial(jax.ShapeDtypeStruct, dtype=cfg.jnp_dtype)
+    if shape.kind in ("train", "prefill"):
+        if cfg.is_encdec:
+            # encoder consumes its fixed frame count; decoder gets the rest
+            s_dec = S - cfg.encoder_seq
+            assert s_dec > 0, (
+                f"enc-dec shape needs seq_len > encoder_seq "
+                f"({S} <= {cfg.encoder_seq})")
+            return {"frames": f((B, cfg.encoder_seq, cfg.d_model)),
+                    "tokens": i32((B, s_dec)), "labels": i32((B, s_dec))}
+        if cfg.n_patches:
+            s_txt = S - cfg.n_patches
+            return {"tokens": i32((B, s_txt)), "labels": i32((B, s_txt)),
+                    "patch_embeds": f((B, cfg.n_patches, D_VISION))}
+        return {"tokens": i32((B, S)), "labels": i32((B, S))}
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": i32((B, 1))}
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """Abstract KV/state-cache pytree for a decode shape (eval_shape only)."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.is_encdec:
+        model = make_model(cfg, max_dec_seq=S)
+        params_spec = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        params_spec, _ = unzip(params_spec)
+        frames = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model),
+                                      cfg.jnp_dtype)
+        return jax.eval_shape(
+            lambda p, fr: encdec_mod.init_encdec_cache(p, cfg, fr, S),
+            params_spec, frames)
+    return jax.eval_shape(lambda: lm_mod.init_cache(cfg, B, S))

@@ -1,0 +1,172 @@
+"""Mamba-2 (SSD, state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD algorithm: within-chunk quadratic (attention-like, MXU-friendly)
+term + inter-chunk state recurrence carried by lax.scan — the TPU-idiomatic
+split of the paper's blocked algorithm. Decode is an O(1) per-token state
+update (this is what makes long_500k native for ssm/hybrid archs).
+
+Projections are kept as separate matrices (z, x, B, C, dt) so each shards
+cleanly over the model axis without resharding the fused projection.
+Adaptations vs the CUDA reference (noted in DESIGN.md): causal conv applied
+to x only; B/C shared across heads (single group); chunk state carried in
+f32.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, leaf, pscan, rms_norm
+from repro.models.config import ArchConfig
+
+
+def init_ssm(key, cfg: ArchConfig):
+    d, di, N, Hs = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(key, 8)
+    return {
+        "in_z": leaf(dense_init(ks[0], (d, di), dt), "embed", "ssm_inner"),
+        "in_x": leaf(dense_init(ks[1], (d, di), dt), "embed", "ssm_inner"),
+        "in_B": leaf(dense_init(ks[2], (d, N), dt), "embed", "state"),
+        "in_C": leaf(dense_init(ks[3], (d, N), dt), "embed", "state"),
+        "in_dt": leaf(dense_init(ks[4], (d, Hs), dt), "embed", "ssm_heads"),
+        "conv_w": leaf(dense_init(ks[5], (cfg.conv_width, di), dt, scale=0.5),
+                       "conv", "ssm_inner"),
+        "conv_b": leaf(jnp.zeros((di,), dt), "ssm_inner"),
+        "A_log": leaf(jnp.log(jnp.linspace(1.0, 16.0, Hs)).astype(jnp.float32),
+                      "ssm_heads"),
+        "dt_bias": leaf(jnp.zeros((Hs,), jnp.float32), "ssm_heads"),
+        "D": leaf(jnp.ones((Hs,), jnp.float32), "ssm_heads"),
+        "out_norm": leaf(jnp.ones((di,), dt), "ssm_inner"),
+        "out_w": leaf(dense_init(ks[6], (di, d), dt), "ssm_inner", "embed"),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: (B, S, di); w: (W, di) depthwise causal conv."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i: i + x.shape[1], :] * w[i] for i in range(W))
+    return out + b
+
+
+def _segsum(dA):
+    """Cumulative decay matrix: L[i,j] = sum_{j<k<=i} dA_k for j<=i else -inf.
+    dA: (..., Q). Returns (..., Q, Q) lower-triangular log-decay."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # sum_{j<k<=i}
+    ii = jnp.arange(Q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(xh, dt, Bm, Cm, A, chunk: int):
+    """Chunked SSD. xh: (B,S,H,P); dt: (B,S,H) (post-softplus);
+    Bm, Cm: (B,S,N); A: (H,) negative decay rates. Returns (B,S,H,P).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    xc = xh.reshape(Bsz, nc, Q, H, P).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    dA = dtc * A[None, None, None, :]                   # (B,nc,Q,H) log-decay
+
+    # ---- within-chunk (quadratic, MXU) term
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, -1, -2)))      # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)      # (B,nc,Q,Q)
+    M = scores[:, :, None] * L                          # (B,nc,H,Q,Q)
+    xdt = xc * dtc[..., None]                           # (B,nc,Q,H,P)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", M, xdt)
+
+    # ---- chunk summary states
+    dA_cs = jnp.cumsum(dA, axis=2)                      # (B,nc,Q,H)
+    dA_tot = dA_cs[:, :, -1:, :]                        # (B,nc,1,H)
+    decay_to_end = jnp.exp(dA_tot - dA_cs)              # (B,nc,Q,H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchnp",
+                        Bc, dtc * decay_to_end, xc)     # (B,nc,H,N,P)
+
+    # ---- inter-chunk recurrence (sequential scan over chunks)
+    def step(h, inp):
+        st, da_tot = inp                                # (B,H,N,P), (B,H)
+        h_new = jnp.exp(da_tot)[:, :, None, None] * h + st
+        return h_new, h                                 # emit PREVIOUS state
+
+    h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    _, h_prev = pscan(
+        step, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(dA_tot[:, :, 0, :], 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                 # (B,nc,H,N,P)
+
+    # ---- inter-chunk contribution
+    decay_from_start = jnp.exp(dA_cs)                   # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", Cc, decay_from_start, h_prev)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y.astype(xh.dtype)
+
+
+def ssm_train(p, cfg: ArchConfig, h):
+    """Full-sequence SSD block. h: (B, S, d)."""
+    B, S, d = h.shape
+    Hs, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    z = h @ p["in_z"]
+    x = _causal_conv(h @ p["in_x"], p["conv_w"], p["conv_b"])
+    x = jax.nn.silu(x)
+    Bm = h @ p["in_B"]
+    Cm = h @ p["in_C"]
+    dt = jax.nn.softplus((h @ p["in_dt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                            # (Hs,)
+    xh = x.reshape(B, S, Hs, P)
+    y = ssd_scan(xh, dt, Bm, Cm, A, cfg.ssm_chunk)
+    y = y + xh * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, Hs * P)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    return y @ p["out_w"]
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray    # (B, W-1, di) — last conv_width-1 inputs
+    state: jnp.ndarray   # (B, H, N, P) f32 recurrent state
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, layers: int):
+    di = cfg.d_inner
+    return SSMCache(
+        conv=jnp.zeros((layers, batch, cfg.conv_width - 1, di), cfg.jnp_dtype),
+        state=jnp.zeros((layers, batch, cfg.ssm_heads, cfg.ssm_state,
+                         cfg.ssm_headdim), jnp.float32),
+    )
+
+
+def ssm_decode(p, cfg: ArchConfig, h, cache: SSMCache, pos):
+    """O(1) single-token state update. h: (B, 1, d)."""
+    del pos
+    B = h.shape[0]
+    Hs, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    z = h @ p["in_z"]                                   # (B,1,di)
+    xin = h @ p["in_x"]
+    conv_in = jnp.concatenate([cache.conv, xin], axis=1)  # (B, W, di)
+    x = jnp.einsum("bwd,wd->bd", conv_in, p["conv_w"]) + p["conv_b"]
+    x = jax.nn.silu(x)                                  # (B, di)
+    new_conv = conv_in[:, 1:, :]
+    Bm = (h @ p["in_B"])[:, 0].astype(jnp.float32)      # (B,N)
+    Cm = (h @ p["in_C"])[:, 0].astype(jnp.float32)
+    dt = jax.nn.softplus((h @ p["in_dt"])[:, 0].astype(jnp.float32)
+                         + p["dt_bias"])                # (B,Hs)
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(B, Hs, P).astype(jnp.float32)
+    decay = jnp.exp(dt * A[None, :])                    # (B,Hs)
+    upd = jnp.einsum("bn,bh,bhp->bhnp", Bm, dt, xh)
+    state = decay[:, :, None, None] * cache.state + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm, state)           # (B,Hs,P)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, Hs * P).astype(h.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    return y @ p["out_w"], SSMCache(conv=new_conv, state=state)

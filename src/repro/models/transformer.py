@@ -1,0 +1,246 @@
+"""Decoder-only LM assembling all families (dense / moe / ssm / hybrid / vlm).
+
+Layer-stacking strategy: layers are grouped into PERIODS (jamba: 8 layers =
+7 mamba + 1 attention; every other FFN is MoE; all other archs: period of 1).
+Within a period the structure is static and unrolled; across periods the
+structure repeats exactly, so parameters are stacked on a leading "layer"
+axis and the period is a single ``lax.scan`` body (wrapped in jax.checkpoint
+for training). This keeps the lowered HLO small — essential for compiling
+88-layer/314B configs on the CPU dry-run host — and is the standard
+production pattern (MaxText does the same).
+
+VLM (phi-3-vision): the stub frontend supplies patch embeddings (B, P, d_vis)
+which a learned projector maps to d_model and prepends to the token
+embeddings; CE loss is masked to text positions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (apply_mlp, cross_entropy, dense_init,
+                                 init_mlp, leaf, prepend_axis, pscan, rms_norm,
+                                 unzip)
+from repro.models.config import ArchConfig
+from repro.sharding.ctx import hint
+
+D_VISION = 1024   # stubbed vision-encoder output dim (CLIP ViT-L/14)
+
+
+def period_len(cfg: ArchConfig) -> int:
+    return cfg.attn_period if cfg.family == "hybrid" else 1
+
+
+def n_periods(cfg: ArchConfig) -> int:
+    pl = period_len(cfg)
+    assert cfg.n_layers % pl == 0, (cfg.n_layers, pl)
+    return cfg.n_layers // pl
+
+
+# ==================================================================== params
+def init_lm(key, cfg: ArchConfig):
+    """Annotated param tree; call common.unzip to split params/axes."""
+    dt = cfg.jnp_dtype
+    pl_ = period_len(cfg)
+    np_ = n_periods(cfg)
+    keys = jax.random.split(key, 8)
+
+    def period_params(k):
+        sub = {}
+        kj = jax.random.split(k, pl_ * 4)
+        for j in range(pl_):
+            is_attn = cfg.is_attn_layer(j)
+            is_moe = cfg.is_moe_layer(j)
+            sub[f"ln1_{j}"] = leaf(jnp.ones((cfg.d_model,), dt), "embed")
+            if is_attn:
+                sub[f"mixer_{j}"] = attn.init_attention(kj[4 * j], cfg)
+            else:
+                sub[f"mixer_{j}"] = ssm_mod.init_ssm(kj[4 * j], cfg)
+            if cfg.family == "ssm":
+                continue  # mamba2: no separate FFN (d_ff = 0)
+            sub[f"ln2_{j}"] = leaf(jnp.ones((cfg.d_model,), dt), "embed")
+            if is_moe:
+                sub[f"ffn_{j}"] = moe_mod.init_moe(kj[4 * j + 1], cfg)
+            else:
+                sub[f"ffn_{j}"] = init_mlp(kj[4 * j + 1], cfg.d_model,
+                                           cfg.d_ff, cfg.mlp_variant, dt)
+        return sub
+
+    # stack periods on a leading "layer" axis via vmap over keys
+    period_keys = jax.random.split(keys[0], np_)
+    stacked = prepend_axis(jax.vmap(period_params)(period_keys), "layer")
+
+    p = {
+        "embed": leaf(dense_init(keys[1], (cfg.vocab_padded, cfg.d_model), dt, scale=0.02),
+                      "vocab", "embed"),
+        "final_norm": leaf(jnp.ones((cfg.d_model,), dt), "embed"),
+        "blocks": stacked,
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = leaf(dense_init(keys[2], (cfg.d_model, cfg.vocab_padded), dt),
+                            "embed", "vocab")
+    if cfg.n_patches:
+        p["vision_proj"] = leaf(dense_init(keys[3], (D_VISION, cfg.d_model), dt),
+                                "vision", "embed")
+    return p
+
+
+# ==================================================================== forward
+def _mixer_train(pj, cfg: ArchConfig, j: int, h, positions):
+    if cfg.is_attn_layer(j):
+        if cfg.use_mla:
+            return attn.mla_train(pj, cfg, h, positions), 0.0
+        return attn.attn_train(pj, cfg, h, positions), 0.0
+    return ssm_mod.ssm_train(pj, cfg, h), 0.0
+
+
+def _ffn_train(pj, cfg: ArchConfig, j: int, h):
+    if cfg.is_moe_layer(j):
+        return moe_mod.apply_moe(pj, cfg, h)
+    return apply_mlp(pj, h, cfg.mlp_variant), 0.0
+
+
+def period_body(cfg: ArchConfig, h, positions, pp):
+    """One period (pl_ layers), pre-norm residual blocks."""
+    aux = 0.0
+    for j in range(period_len(cfg)):
+        hn = rms_norm(h, pp[f"ln1_{j}"], cfg.norm_eps)
+        mix, a1 = _mixer_train(pp[f"mixer_{j}"], cfg, j, hn, positions)
+        h = h + mix
+        if cfg.family != "ssm":
+            hn = rms_norm(h, pp[f"ln2_{j}"], cfg.norm_eps)
+            ff, a2 = _ffn_train(pp[f"ffn_{j}"], cfg, j, hn)
+            h = h + ff
+            aux = aux + a1 + a2
+    return h, aux
+
+
+def embed_inputs(params, cfg: ArchConfig, batch: Dict[str, Any]):
+    """Token (+ patch) embedding. Returns (h, positions, loss_mask)."""
+    tokens = batch["tokens"]
+    B, S_tok = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.n_patches and "patch_embeds" in batch:
+        pe = batch["patch_embeds"] @ params["vision_proj"]   # (B, P, d)
+        h = jnp.concatenate([pe.astype(h.dtype), h], axis=1)[:, : S_tok + cfg.n_patches]
+        S = h.shape[1]
+        mask = jnp.concatenate(
+            [jnp.zeros((B, pe.shape[1])), jnp.ones((B, S_tok))], axis=1)
+    else:
+        S = S_tok
+        mask = jnp.ones((B, S))
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return hint(h, "batch", None, None), positions, mask
+
+
+def forward_lm(params, cfg: ArchConfig, batch, *, remat: bool = True):
+    """Full-sequence forward. Returns (logits, aux_loss, loss_mask)."""
+    h, positions, mask = embed_inputs(params, cfg, batch)
+
+    carry_spec = ("batch", None, "model") if cfg.shard_carry else \
+        ("batch", None, None)
+    pps = max(cfg.periods_per_scan_step, 1)
+    blocks = params["blocks"]
+    if pps > 1:
+        assert n_periods(cfg) % pps == 0, (n_periods(cfg), pps)
+        blocks = jax.tree.map(
+            lambda x: x.reshape(x.shape[0] // pps, pps, *x.shape[1:]), blocks)
+
+    def body(carry, pp):
+        h, aux = carry
+        if pps > 1:
+            for j in range(pps):
+                h, a = period_body(cfg, h, positions,
+                                   jax.tree.map(lambda x: x[j], pp))
+                aux = aux + a
+        else:
+            h, a = period_body(cfg, h, positions, pp)
+            aux = aux + a
+        return (hint(h, *carry_spec), aux), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (h, aux), _ = pscan(body, (h, 0.0), blocks)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = hint(h @ unembed, "batch", None, "model")
+    return logits, aux, mask
+
+
+def lm_loss(params, cfg: ArchConfig, batch, *, remat: bool = True):
+    logits, aux, mask = forward_lm(params, cfg, batch, remat=remat)
+    labels = batch["labels"]
+    if cfg.n_patches and "patch_embeds" in batch:
+        # loss over text positions only; logits for text start after patches
+        P = batch["patch_embeds"].shape[1]
+        logits = logits[:, P:, :]
+    logits_f = logits.astype(jnp.float32)
+    vocab_iota = jnp.arange(cfg.vocab_padded)
+    if cfg.vocab_padded != cfg.vocab:   # mask the padded vocab ids out
+        logits_f = jnp.where(vocab_iota < cfg.vocab, logits_f, -1e30)
+    lse = jax.scipy.special.logsumexp(logits_f, axis=-1)
+    # label logit via fused masked-reduce: partition-friendly over a
+    # vocab-sharded logits tensor (no gather / no one-hot materialization)
+    gold = jnp.sum(jnp.where(vocab_iota[None, None, :] == labels[..., None],
+                             logits_f, 0.0), axis=-1)
+    ce = jnp.mean(lse - gold)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ===================================================================== decode
+class LMCache(NamedTuple):
+    layers: Any          # dict keyed by f"{kind}_{j}" of stacked caches
+    pos: jnp.ndarray     # scalar int32 — next position to write
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int) -> LMCache:
+    np_ = n_periods(cfg)
+    caches = {}
+    for j in range(period_len(cfg)):
+        if cfg.is_attn_layer(j):
+            if cfg.use_mla:
+                caches[f"mla_{j}"] = attn.init_mla_cache(cfg, batch, max_seq, np_)
+            else:
+                caches[f"kv_{j}"] = attn.init_kv_cache(cfg, batch, max_seq, np_)
+        else:
+            caches[f"ssm_{j}"] = ssm_mod.init_ssm_cache(cfg, batch, np_)
+    return LMCache(layers=caches, pos=jnp.zeros((), jnp.int32))
+
+
+def decode_step(params, cfg: ArchConfig, tokens, cache: LMCache):
+    """One-token decode. tokens: (B, 1). Returns (logits, new_cache)."""
+    pos = cache.pos
+    h = jnp.take(params["embed"], tokens, axis=0)
+
+    def body(h, xs):
+        pp, layer_caches = xs
+        new_caches = {}
+        for j in range(period_len(cfg)):
+            hn = rms_norm(h, pp[f"ln1_{j}"], cfg.norm_eps)
+            if cfg.is_attn_layer(j):
+                key = f"mla_{j}" if cfg.use_mla else f"kv_{j}"
+                fn = attn.mla_decode if cfg.use_mla else attn.attn_decode
+                mix, nc = fn(pp[f"mixer_{j}"], cfg, hn, layer_caches[key], pos)
+                new_caches[key] = nc
+            else:
+                mix, nc = ssm_mod.ssm_decode(pp[f"mixer_{j}"], cfg, hn,
+                                             layer_caches[f"ssm_{j}"], pos)
+                new_caches[f"ssm_{j}"] = nc
+            h = h + mix
+            if cfg.family != "ssm":
+                hn = rms_norm(h, pp[f"ln2_{j}"], cfg.norm_eps)
+                ff, _ = _ffn_train(pp[f"ffn_{j}"], cfg, j, hn)
+                h = h + ff
+        return h, new_caches
+
+    h, new_layer_caches = pscan(body, h, (params["blocks"], cache.layers))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = h @ unembed
+    return logits, LMCache(layers=new_layer_caches, pos=pos + 1)

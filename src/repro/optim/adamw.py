@@ -1,0 +1,57 @@
+"""AdamW from scratch (no optax in this container).
+
+``state_dtype`` controls the m/v moment dtype: float32 default; bfloat16 for
+the 236B/314B dry-run configs so optimizer state fits the 16 GB/chip HBM
+budget (documented trade-off in EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: str = "float32"
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype), \
+            m_new.astype(dt), v_new.astype(dt)
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}

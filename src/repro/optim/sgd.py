@@ -1,0 +1,18 @@
+"""Plain SGD with momentum (used by small examples and tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params):
+    return {"mom": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+
+def sgd_update(grads, state, params, *, lr: float = 1e-2, momentum: float = 0.9):
+    new_mom = jax.tree.map(
+        lambda m, g: momentum * m + g.astype(jnp.float32), state["mom"], grads)
+    new_params = jax.tree.map(
+        lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+        params, new_mom)
+    return new_params, {"mom": new_mom}

@@ -1,0 +1,3 @@
+from repro.sharding.partitioning import (FSDP, DEFAULT_RULES, spec_for_axes,
+                                         param_specs, param_shardings,
+                                         batch_specs, cache_pspecs)

@@ -1,0 +1,49 @@
+"""Activation-sharding hint context.
+
+Model code calls ``hint(x, "batch", None, "model")`` at key activations;
+outside a ``use_shard_hints(mesh)`` context this is a no-op (tests, single
+device), inside it becomes with_sharding_constraint(NamedSharding(mesh, ...)).
+The special entry "batch" resolves to the mesh's fsdp axes, entries naming
+absent mesh axes resolve to None. Lowering (jit.lower / first call) must
+happen inside the context — dryrun.py and the launchers do this.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+
+@contextlib.contextmanager
+def use_shard_hints(mesh: Mesh):
+    global _MESH
+    old = _MESH
+    _MESH = mesh
+    try:
+        yield
+    finally:
+        _MESH = old
+
+
+def hint(x, *entries):
+    if _MESH is None:
+        return x
+    names = set(_MESH.axis_names)
+    spec = []
+    for e in entries:
+        if e == "batch":
+            fa = tuple(a for a in ("pod", "data") if a in names)
+            spec.append(fa if fa else None)
+        elif e is None:
+            spec.append(None)
+        elif isinstance(e, tuple):
+            t = tuple(a for a in e if a in names)
+            spec.append(t if t else None)
+        else:
+            spec.append(e if e in names else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, P(*spec)))

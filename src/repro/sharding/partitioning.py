@@ -1,0 +1,115 @@
+"""Logical-axis -> mesh-axis partitioning rules.
+
+Parameters are annotated with logical axis names at creation (models/common
+Leaf). Rules map each name to a mesh axis (or None). The standard 2-D layout:
+
+    "embed"  -> fsdp axes (("pod","data") multi-pod, ("data",) single-pod)
+    "ffn"/"heads"/"kv"/"vocab"/"ssm_inner" -> "model"  (tensor parallel)
+    "experts" -> None (expert weights are 2-D sharded via embed x ffn,
+                 which works for ANY expert count — grok's 8 < 16-way axis)
+
+Decode caches shard sequence over "model" (context parallelism) and batch
+over fsdp; long_500k (batch=1) shards sequence over BOTH.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+FSDP = "__fsdp__"   # sentinel resolved to the mesh's data axes
+
+DEFAULT_RULES = {
+    "embed": FSDP,
+    "vocab": "model",
+    "heads": "model",
+    "kv": "model",
+    "ffn": "model",
+    "ssm_inner": "model",
+    "experts": None,
+    "layer": None,
+    "kv_lora": None,
+    "q_lora": None,
+    "state": None,
+    "ssm_heads": None,
+    "head_dim": None,
+    "conv": None,
+    "vision": None,
+    None: None,
+}
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def spec_for_axes(axes, mesh: Mesh, rules=None) -> P:
+    rules = rules or DEFAULT_RULES
+    fa = fsdp_axes(mesh)
+    out = []
+    for name in axes:
+        r = rules.get(name, None)
+        out.append(fa if r == FSDP else r)
+    return P(*out)
+
+
+def param_specs(axes_tree, mesh: Mesh, rules=None):
+    """Tree of PartitionSpecs from the annotated-axes tree."""
+    return jax.tree.map(
+        lambda axes: spec_for_axes(axes, mesh, rules),
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def param_shardings(axes_tree, mesh: Mesh, rules=None):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(axes_tree, mesh, rules),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ------------------------------------------------------------------- inputs
+def batch_specs(batch_tree, mesh: Mesh):
+    """Batch inputs: leading (batch) dim over the fsdp axes."""
+    fa = fsdp_axes(mesh)
+
+    def spec(x):
+        return P(fa, *([None] * (len(x.shape) - 1)))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def cache_pspecs(cache_tree, mesh: Mesh, *, shard_seq_over_fsdp: bool = False):
+    """Decode-cache sharding. Cache leaves are (L, B, S, ...) for KV/MLA
+    caches, (L, B, W, di) for SSM conv, (L, B, H, N, P) for SSM state.
+
+    Axis assignment is divisibility-GUARDED (jit input shardings require
+    exact divisibility): batch over fsdp when it divides; dim 2 (sequence /
+    heads) over "model" — plus fsdp too when batch=1 (long_500k, context
+    parallelism); when dim 2 does not divide (conv windows, whisper's 1500
+    encoder frames) the LAST dim (d_inner / H*hd) takes the model axis.
+    """
+    fa = fsdp_axes(mesh)
+    fsdp_sz = 1
+    for a in fa:
+        fsdp_sz *= mesh.shape[a]
+    model_sz = mesh.shape.get("model", 1)
+
+    def spec(x):
+        nd = len(x.shape)
+        if nd <= 1:
+            return P()
+        out = [None] * nd
+        if not shard_seq_over_fsdp and x.shape[1] % fsdp_sz == 0:
+            out[1] = fa
+        if nd >= 4:
+            seq_ax = (*fa, "model") if shard_seq_over_fsdp else ("model",)
+            seq_sz = (fsdp_sz if shard_seq_over_fsdp else 1) * model_sz
+            if x.shape[2] % seq_sz == 0:
+                out[2] = seq_ax if len(seq_ax) > 1 else "model"
+            elif x.shape[-1] % model_sz == 0:
+                out[-1] = "model"
+        elif nd == 3 and x.shape[-1] % model_sz == 0:
+            out[-1] = "model"
+        return P(*out)
+
+    return jax.tree.map(spec, cache_tree)

@@ -1,0 +1,94 @@
+"""train_step / serve_step factories — the units the dry-run lowers.
+
+train_step: loss -> grad -> AdamW update (grads f32, params cfg dtype,
+moments cfg.state_dtype). serve_step: one-token decode against the cache.
+Both are pure functions of (state..., batch) so jit in/out shardings fully
+determine the distribution.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import ModelAPI
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+
+def make_train_step(model: ModelAPI, opt_cfg: AdamWConfig,
+                    microbatches: int = 1, acc_dtype=None):
+    """AdamW train step with optional gradient accumulation.
+
+    ``microbatches > 1`` splits the global batch on the leading dim and
+    scans over the slices accumulating grads — activation memory drops by
+    the microbatch factor (how the 256x4096-token train shapes fit the
+    16 GB/chip budget; see EXPERIMENTS.md §Dry-run). The scan goes through
+    models.common.pscan so dry-run cost probes stay exact.
+    """
+    from repro.models.common import pscan
+
+    def loss_fn(p, b):
+        loss, metrics = model.loss(p, b)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                    *x.shape[1:]), batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            adt = acc_dtype or jnp.float32
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+            (grads, loss), _ = pscan(acc_body, (g0, jnp.zeros(())), micro,
+                                     length=microbatches)
+            grads = jax.tree.map(
+                lambda g, p: (g / microbatches).astype(p.dtype), grads, params)
+            loss = loss / microbatches
+            metrics = {"ce": loss, "aux": jnp.zeros(())}
+        new_params, new_opt = adamw_update(grads, opt_state, params, opt_cfg)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        return new_params, new_opt, {**metrics, "loss": loss, "gnorm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(model: ModelAPI):
+    """Forward-only over the full sequence; emits last-position logits
+    (what a serving system computes before switching to decode)."""
+    from repro.models import encdec as encdec_mod
+    from repro.models import transformer as lm_mod
+
+    cfg = model.cfg
+
+    def prefill_step(params, batch):
+        if cfg.is_encdec:
+            enc_out = encdec_mod.encode(params, cfg, batch["frames"])
+            logits = encdec_mod.decoder_forward(params, cfg, batch["tokens"],
+                                                enc_out)
+        else:
+            logits, _, _ = lm_mod.forward_lm(params, cfg, batch, remat=False)
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_serve_step(model: ModelAPI):
+    def serve_step(params, tokens, cache):
+        logits, new_cache = model.decode_step(params, tokens, cache)
+        next_tokens = jnp.argmax(logits[:, -1:, :], axis=-1)
+        return next_tokens, logits, new_cache
+
+    return serve_step

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# NOTE: do NOT set --xla_force_host_platform_device_count here (brief:
+# smoke tests run on 1 device; multi-device tests spawn subprocesses).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,91 @@
+"""Distributed Algorithm 1 correctness — runs in a subprocess with 8
+simulated devices (XLA_FLAGS must be set before jax imports, and the main
+test process must keep seeing 1 device per the project brief)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core import (DistConfig, DistributedNystrom, KernelSpec,
+                        TronConfig, random_basis, solve)
+from repro.core.basis import kmeans
+from repro.data import make_classification
+
+key = jax.random.PRNGKey(0)
+X, y = make_classification(key, 2048, 16, clusters_per_class=4)
+kern = KernelSpec("gaussian", sigma=2.0)
+basis = random_basis(jax.random.PRNGKey(2), X, 128)
+ref = solve(X, y, basis, lam=0.5, kernel=kern, cfg=TronConfig(max_iter=50))
+
+out = {"n_devices": len(jax.devices())}
+cases = [
+    ((8,), ("data",), None, "shard_map", True),
+    ((8,), ("data",), None, "auto", True),
+    ((4, 2), ("data", "model"), "model", "shard_map", True),
+    ((4, 2), ("data", "model"), "model", "auto", True),
+    ((4, 2), ("data", "model"), "model", "shard_map", False),  # on-the-fly C
+    ((2, 2, 2), ("pod", "data", "model"), "model", "shard_map", True),
+]
+for shape, names, ma, mode, mat in cases:
+    mesh = jax.make_mesh(shape, names,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    da = tuple(a for a in names if a != "model")
+    dc = DistConfig(data_axes=da, model_axis=ma, mode=mode, materialize=mat)
+    solver = DistributedNystrom(mesh, 0.5, "squared_hinge", kern, dc)
+    Xs = jax.device_put(X, NamedSharding(mesh, P(da, None)))
+    ys = jax.device_put(y, NamedSharding(mesh, P(da)))
+    res = solver.solve(Xs, ys, basis, cfg=TronConfig(max_iter=50))
+    tag = f"{shape}-{mode}-{'mat' if mat else 'otf'}"
+    out[tag] = {
+        "f": float(res.f), "ref_f": float(ref.stats.f),
+        "max_dbeta": float(jnp.max(jnp.abs(res.beta - ref.beta))),
+    }
+
+# distributed k-means == single-device k-means
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+c_local, _ = kmeans(jax.random.PRNGKey(5), X, 16, n_iter=3)
+Xs = jax.device_put(X, NamedSharding(mesh, P(("data",), None)))
+c_dist, _ = kmeans(jax.random.PRNGKey(5), Xs, 16, n_iter=3, mesh=mesh,
+                   data_axes=("data",))
+out["kmeans_max_diff"] = float(jnp.max(jnp.abs(c_local - c_dist)))
+print(json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_eight_devices(results):
+    assert results["n_devices"] == 8
+
+
+@pytest.mark.parametrize("tag", [
+    "(8,)-shard_map-mat", "(8,)-auto-mat",
+    "(4, 2)-shard_map-mat", "(4, 2)-auto-mat",
+    "(4, 2)-shard_map-otf", "(2, 2, 2)-shard_map-mat",
+])
+def test_distributed_matches_local(results, tag):
+    r = results[tag]
+    assert abs(r["f"] - r["ref_f"]) / abs(r["ref_f"]) < 1e-4, r
+    assert r["max_dbeta"] < 1e-4, r
+
+
+def test_distributed_kmeans_matches_local(results):
+    assert results["kmeans_max_diff"] < 1e-4

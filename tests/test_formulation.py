@@ -1,0 +1,74 @@
+"""Formulation (4): analytic grad/Hd vs autodiff; equivalence with (3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Formulation4, KernelSpec, TronConfig, build_C, build_W,
+                        get_loss, random_basis, solve)
+from repro.core.linearized import solve_linearized
+from repro.core.nystrom import nystrom_approx_kernel
+from repro.data import make_classification
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    X, y = make_classification(key, 512, 10, clusters_per_class=3)
+    kern = KernelSpec("gaussian", sigma=2.0)
+    basis = random_basis(jax.random.PRNGKey(1), X, 64)
+    C = build_C(X, basis, kern)
+    W = build_W(basis, kern)
+    return X, y, basis, kern, C, W
+
+
+@pytest.mark.parametrize("loss_name", ["squared_hinge", "logistic", "squared"])
+def test_grad_matches_autodiff(setup, loss_name):
+    X, y, basis, kern, C, W = setup
+    form = Formulation4(lam=0.7, loss=get_loss(loss_name))
+    beta = jax.random.normal(jax.random.PRNGKey(2), (64,)) * 0.1
+    f, g, D = form.fgrad(C, W, y, beta)
+    f2, g2 = jax.value_and_grad(lambda b: form.value(C, W, y, b))(beta)
+    np.testing.assert_allclose(f, f2, rtol=1e-5)
+    np.testing.assert_allclose(g, g2, rtol=1e-4, atol=1e-4)
+
+
+def test_hessd_matches_gauss_newton(setup):
+    """For the squared loss the Gauss-Newton product IS the Hessian product."""
+    X, y, basis, kern, C, W = setup
+    form = Formulation4(lam=0.7, loss=get_loss("squared"))
+    beta = jax.random.normal(jax.random.PRNGKey(3), (64,)) * 0.1
+    d = jax.random.normal(jax.random.PRNGKey(4), (64,))
+    _, _, D = form.fgrad(C, W, y, beta)
+    hd = form.hessd(C, W, D, d)
+    hd2 = jax.jvp(jax.grad(lambda b: form.value(C, W, y, b)), (beta,), (d,))[1]
+    np.testing.assert_allclose(hd, hd2, rtol=1e-4, atol=1e-4)
+
+
+def test_formulations_3_and_4_equivalent(setup):
+    X, y, basis, kern, C, W = setup
+    mach4 = solve(X, y, basis, lam=1.0, kernel=kern,
+                  cfg=TronConfig(max_iter=100, grad_rtol=1e-5))
+    res3 = solve_linearized(X, y, basis, lam=1.0,
+                            loss=get_loss("squared_hinge"), kernel=kern,
+                            cfg=TronConfig(max_iter=100, grad_rtol=1e-5))
+    o4 = C @ mach4.beta
+    o3 = C @ res3.beta
+    # same optimum => same decision function values
+    np.testing.assert_allclose(o3, o4, rtol=5e-2, atol=5e-2)
+    assert abs(float(mach4.stats.f) - res3.f) / abs(res3.f) < 1e-2
+
+
+def test_nystrom_approximation_improves_with_m():
+    """||K - C W^+ C^T|| decreases as m grows (paper §2.1)."""
+    key = jax.random.PRNGKey(5)
+    X, _ = make_classification(key, 256, 8, clusters_per_class=3)
+    kern = KernelSpec("gaussian", sigma=2.0)
+    K = build_C(X, X, kern)
+    errs = []
+    for m in (16, 64, 256):
+        basis = random_basis(jax.random.PRNGKey(6), X, m)
+        Kt = nystrom_approx_kernel(X, basis, kern)
+        errs.append(float(jnp.linalg.norm(K - Kt)))
+    assert errs[0] > errs[1] > errs[2]
+    assert errs[2] < 1e-2 * float(jnp.linalg.norm(K))  # m=n => near-exact

@@ -1,0 +1,111 @@
+"""End-to-end kernel machine behaviour (paper's empirical claims, scaled)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (KernelSpec, TronConfig, get_loss, random_basis,
+                        select_basis, solve)
+from repro.core import ppacksvm as pps
+from repro.core.stagewise import stagewise_solve
+from repro.data import make_classification, make_dataset
+
+
+@pytest.fixture(scope="module")
+def data():
+    X_all, y_all = make_classification(jax.random.PRNGKey(0), 6144, 16,
+                                       clusters_per_class=8, margin=1.0)
+    return (X_all[:4096], y_all[:4096], X_all[4096:], y_all[4096:])
+
+
+def test_accuracy_increases_with_m(data):
+    """Fig. 1: test accuracy rises with basis size and saturates."""
+    X, y, Xt, yt = data
+    kern = KernelSpec("gaussian", sigma=2.0)
+    accs = []
+    for m in (16, 64, 512):
+        basis = random_basis(jax.random.PRNGKey(1), X, m)
+        mach = solve(X, y, basis, lam=1.0, kernel=kern,
+                     cfg=TronConfig(max_iter=60))
+        accs.append(mach.accuracy(Xt, yt))
+    assert accs[0] < accs[1] < accs[2] + 1e-3
+    assert accs[2] > 0.97
+
+
+def test_nonlinear_beats_linear(data):
+    X, y, Xt, yt = data
+    basis = random_basis(jax.random.PRNGKey(1), X, 256)
+    rbf = solve(X, y, basis, lam=1.0, kernel=KernelSpec("gaussian", sigma=2.0))
+    lin = solve(X, y, basis, lam=1.0, kernel=KernelSpec("linear"))
+    assert rbf.accuracy(Xt, yt) > lin.accuracy(Xt, yt) + 0.05
+
+
+def test_kmeans_basis_beats_random_at_small_m(data):
+    """Table 2: K-means selection helps when m is small."""
+    X, y, Xt, yt = data
+    kern = KernelSpec("gaussian", sigma=2.0)
+    accs = {}
+    for strat in ("random", "kmeans"):
+        basis = select_basis(jax.random.PRNGKey(7), X, 24, strategy=strat,
+                             n_iter=5)
+        mach = solve(X, y, basis, lam=1.0, kernel=kern,
+                     cfg=TronConfig(max_iter=60))
+        accs[strat] = mach.accuracy(Xt, yt)
+    assert accs["kmeans"] >= accs["random"] - 0.02  # usually strictly better
+
+
+def test_stagewise_matches_from_scratch(data):
+    """Stage-wise basis addition reaches the same optimum as one shot."""
+    X, y, Xt, yt = data
+    kern = KernelSpec("gaussian", sigma=2.0)
+    basis = random_basis(jax.random.PRNGKey(2), X, 128)
+    stages = [basis[:32], basis[32:64], basis[64:]]
+    loss = get_loss("squared_hinge")
+    cfg = TronConfig(max_iter=80, grad_rtol=1e-4)
+    results = stagewise_solve(X, y, stages, lam=1.0, loss=loss, kernel=kern,
+                              cfg=cfg)
+    mach = solve(X, y, basis, lam=1.0, kernel=kern, cfg=cfg)
+    assert results[-1].m == 128
+    # same final objective value
+    assert abs(results[-1].f - float(mach.stats.f)) / float(mach.stats.f) < 1e-2
+    # objective decreases as basis grows
+    assert results[0].f >= results[1].f >= results[2].f
+
+
+def test_ppacksvm_baseline_reasonable(data):
+    X, y, Xt, yt = data
+    kern = KernelSpec("gaussian", sigma=2.0)
+    res = pps.ppacksvm(jax.random.PRNGKey(3), X[:2048], y[:2048], lam=1e-3,
+                       kernel=kern, epochs=2, pack_size=64)
+    o = pps.predict(res.alpha, X[:2048], Xt, kern)
+    acc = float(jnp.mean(jnp.sign(o) == yt))
+    assert acc > 0.9
+    assert res.n_rounds == (2048 * 2) // 64
+
+
+def test_paper_dataset_simulators():
+    for name in ("vehicle", "covtype", "ccat", "mnist8m"):
+        X, y, Xt, yt, spec = make_dataset(name, jax.random.PRNGKey(0),
+                                          scale=0.005, d_cap=64)
+        assert X.shape[0] >= 256 and X.shape[1] <= 64
+        assert set(jnp.unique(y).tolist()) <= {-1.0, 1.0}
+
+
+def test_rff_baseline_and_nystrom_edge(data):
+    """Paper §5: RFF alternative; data-dependent Nystrom >= RFF at small m."""
+    from repro.core.rff import rff_features, sample_rff, solve_rff
+    X, y, Xt, yt = data
+    sigma = 2.0
+    # RFF approximates the kernel in expectation
+    basis = sample_rff(jax.random.PRNGKey(0), X.shape[1], 2048, sigma)
+    approx = rff_features(X[:64], basis) @ rff_features(X[:64], basis).T
+    from repro.core import KernelSpec, build_C
+    exact = build_C(X[:64], X[:64], KernelSpec("gaussian", sigma=sigma))
+    assert float(jnp.max(jnp.abs(approx - exact))) < 0.15
+    # accuracy at equal budget
+    m = 48
+    rff = solve_rff(jax.random.PRNGKey(1), X, y, m, lam=1.0, sigma=sigma,
+                    cfg=TronConfig(max_iter=60))
+    nys = solve(X, y, random_basis(jax.random.PRNGKey(2), X, m), lam=1.0,
+                kernel=KernelSpec("gaussian", sigma=sigma),
+                cfg=TronConfig(max_iter=60))
+    assert nys.accuracy(Xt, yt) >= rff.accuracy(Xt, yt) - 0.03

@@ -1,0 +1,64 @@
+"""TRON solver unit tests: exactness on quadratics, monotonicity, counts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tron import TronConfig, tron
+
+
+def quad_problem(key, m=32, cond=100.0):
+    k1, k2 = jax.random.split(key)
+    Q = jax.random.normal(k1, (m, m))
+    evals = jnp.logspace(0, np.log10(cond), m)
+    U, _ = jnp.linalg.qr(Q)
+    H = (U * evals) @ U.T
+    b = jax.random.normal(k2, (m,))
+    return H, b
+
+
+def test_tron_solves_quadratic_exactly():
+    H, b = quad_problem(jax.random.PRNGKey(0))
+    # f = 0.5 x'Hx - b'x; grad = Hx - b; Hd = Hd
+    fgrad = lambda x: (0.5 * x @ (H @ x) - b @ x, H @ x - b, jnp.zeros(()))
+    hessd = lambda aux, d: H @ d
+    res = tron(fgrad, hessd, jnp.zeros_like(b),
+               TronConfig(max_iter=100, grad_rtol=1e-6, cg_rtol=1e-3,
+                          cg_max_iter=200))
+    x_star = jnp.linalg.solve(H, b)
+    np.testing.assert_allclose(res.beta, x_star, rtol=1e-3, atol=1e-4)
+    assert bool(res.converged)
+
+
+def test_tron_monotone_decrease():
+    H, b = quad_problem(jax.random.PRNGKey(1), m=16)
+    fs = []
+
+    def fgrad(x):
+        f = 0.5 * x @ (H @ x) - b @ x
+        fs.append(float(f)) if not isinstance(f, jax.core.Tracer) else None
+        return f, H @ x - b, jnp.zeros(())
+
+    # run eagerly (no jit) to observe f values
+    res = tron(fgrad, lambda a, d: H @ d, jnp.ones_like(b),
+               TronConfig(max_iter=50))
+    f0 = 0.5 * jnp.ones_like(b) @ (H @ jnp.ones_like(b)) - b @ jnp.ones_like(b)
+    assert float(res.f) < float(f0)
+
+
+def test_tron_counts_and_stats():
+    H, b = quad_problem(jax.random.PRNGKey(2), m=8, cond=10)
+    res = tron(lambda x: (0.5 * x @ (H @ x) - b @ x, H @ x - b, jnp.zeros(())),
+               lambda a, d: H @ d, jnp.zeros_like(b), TronConfig(max_iter=50))
+    assert int(res.n_fg) == int(res.n_iter) + 1
+    assert int(res.n_hd) >= int(res.n_iter)   # >=1 CG step per outer iter
+    assert float(res.gnorm) < 1e-2 * float(jnp.linalg.norm(b))
+
+
+def test_tron_jittable():
+    H, b = quad_problem(jax.random.PRNGKey(3), m=8)
+    run = jax.jit(lambda b0: tron(
+        lambda x: (0.5 * x @ (H @ x) - b @ x, H @ x - b, jnp.zeros(())),
+        lambda a, d: H @ d, b0, TronConfig(max_iter=50)))
+    res = run(jnp.zeros_like(b))
+    assert bool(res.converged)
