@@ -9,7 +9,8 @@ from __future__ import annotations
 import jax
 
 from benchmarks.common import Row, timeit
-from repro.core import KernelSpec, TronConfig, random_basis, solve
+from repro.api import KernelMachine, MachineConfig
+from repro.core import KernelSpec, TronConfig, random_basis
 from repro.data import make_dataset
 
 
@@ -18,15 +19,14 @@ def run(scale: float = 0.01, ms=(16, 64, 256, 1024)):
     for ds, sigma in (("covtype", 1.2), ("ccat", 2.0)):
         X, y, Xt, yt, spec = make_dataset(ds, jax.random.PRNGKey(0),
                                           scale=scale, d_cap=64)
-        kern = KernelSpec("gaussian", sigma=sigma)
+        config = MachineConfig(kernel=KernelSpec("gaussian", sigma=sigma),
+                               lam=1.0, tron=TronConfig(max_iter=80))
         accs = []
         for m in ms:
             basis = random_basis(jax.random.PRNGKey(1), X, m)
-            t = timeit(lambda: solve(X, y, basis, lam=1.0, kernel=kern,
-                                     cfg=TronConfig(max_iter=80)).stats.beta)
-            mach = solve(X, y, basis, lam=1.0, kernel=kern,
-                         cfg=TronConfig(max_iter=80))
-            acc = mach.accuracy(Xt, yt)
+            t = timeit(lambda: KernelMachine(config)
+                       .fit(X, y, basis).state_["beta"])
+            acc = KernelMachine(config).fit(X, y, basis).score(Xt, yt)
             accs.append(acc)
             rows.append(Row(f"fig1/{ds}_m{m}", t * 1e6, f"test_acc={acc:.4f}"))
         monotone = all(accs[i] <= accs[i + 1] + 0.01 for i in range(len(accs) - 1))

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import DistConfig, DistributedNystrom, KernelSpec, TronConfig
+from repro.core import compat
+from repro.core.compat import make_mesh
 from repro.core.tron import tron
 
 RESULTS = Path(__file__).resolve().parent / "results" / "kernel_machine"
@@ -92,9 +94,8 @@ def lower_kernel_machine(n, m, d, mode, materialize, mesh, c_dtype=jnp.float32):
 
 def main():
     RESULTS.mkdir(parents=True, exist_ok=True)
-    mesh = jax.make_mesh((16, 16), ("data", "model"),
-                         devices=jax.devices()[:256],
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((16, 16), ("data", "model"),
+                     devices=jax.devices()[:256])
     n, d = 8_000_000, 784
     print("| n | m | plan | compute_s | memory_s (HLO ub) | stream_s (analytic) | "
           "collective_s | dominant | C bytes/dev |")
@@ -109,7 +110,7 @@ def main():
                 n, m, d, mode, mat, mesh,
                 c_dtype=jnp.bfloat16 if plan == "bf16C" else jnp.float32)
             compiled = lowered.compile()
-            cost = compiled.cost_analysis()
+            cost = compat.cost_analysis(compiled)
             colls = _coll_bytes(compiled.as_text())
             flops = float(cost.get("flops", 0))
             byts = float(cost.get("bytes accessed", 0))

@@ -9,26 +9,25 @@ from __future__ import annotations
 import jax
 
 from benchmarks.common import Row, timeit
-from repro.core import KernelSpec, TronConfig, random_basis, solve
-from repro.core.rff import solve_rff
+from repro.api import KernelMachine, MachineConfig
+from repro.core import KernelSpec, TronConfig, random_basis
 from repro.data import make_dataset
 
 
 def run(scale: float = 0.01, ms=(32, 128, 512)):
     X, y, Xt, yt, spec = make_dataset("covtype", jax.random.PRNGKey(0),
                                       scale=scale, d_cap=54)
-    sigma = 1.2
-    kern = KernelSpec("gaussian", sigma=sigma)
-    cfg = TronConfig(max_iter=80)
+    config = MachineConfig(kernel=KernelSpec("gaussian", sigma=1.2),
+                           lam=0.01, tron=TronConfig(max_iter=80), seed=2)
     rows = []
     wins = 0
     for m in ms:
-        mach = solve(X, y, random_basis(jax.random.PRNGKey(1), X, m),
-                     lam=0.01, kernel=kern, cfg=cfg)
-        acc_nys = mach.accuracy(Xt, yt)
-        rff = solve_rff(jax.random.PRNGKey(2), X, y, m, lam=0.01, sigma=sigma,
-                        cfg=cfg)
-        acc_rff = rff.accuracy(Xt, yt)
+        nys = KernelMachine(config).fit(
+            X, y, random_basis(jax.random.PRNGKey(1), X, m))
+        acc_nys = nys.score(Xt, yt)
+        rff = KernelMachine(config.replace(solver="rff",
+                                           rff_features=m)).fit(X, y)
+        acc_rff = rff.score(Xt, yt)
         wins += acc_nys >= acc_rff
         rows.append(Row(f"rff_vs_nystrom/m{m}", 0.0,
                         f"nystrom_acc={acc_nys:.4f};rff_acc={acc_rff:.4f}"))

@@ -11,27 +11,26 @@ import time
 import jax
 
 from benchmarks.common import Row, timeit
-from repro.core import KernelSpec, TronConfig, get_loss, random_basis, solve
-from repro.core.linearized import solve_linearized
+from repro.api import KernelMachine, MachineConfig
+from repro.core import KernelSpec, TronConfig, random_basis
 from repro.data import make_dataset
 
 
 def run(scale: float = 0.05, ms=(128, 512, 2048)):
     X, y, Xt, yt, spec = make_dataset("vehicle", jax.random.PRNGKey(0),
                                       scale=scale, d_cap=100)
-    kern = KernelSpec("gaussian", sigma=2.0)
-    loss = get_loss("squared_hinge")
-    cfg = TronConfig(max_iter=100)
+    config = MachineConfig(kernel=KernelSpec("gaussian", sigma=2.0),
+                           lam=spec.lam, tron=TronConfig(max_iter=100))
     rows = []
     for m in ms:
         basis = random_basis(jax.random.PRNGKey(1), X, m)
-        t4 = timeit(lambda: solve(X, y, basis, lam=spec.lam, kernel=kern,
-                                  cfg=cfg).stats.beta)
+        t4 = timeit(lambda: KernelMachine(config)
+                    .fit(X, y, basis).state_["beta"])
         t0 = time.perf_counter()
-        res3 = solve_linearized(X, y, basis, lam=spec.lam, loss=loss,
-                                kernel=kern, cfg=cfg)
+        km3 = KernelMachine(config.replace(solver="linearized")).fit(
+            X, y, basis)
         t3 = time.perf_counter() - t0
-        frac_a = res3.time_eig_and_A / t3
+        frac_a = km3.result_.extras["time_eig_and_A"] / t3
         rows.append(Row(f"table1/form4_m{m}", t4 * 1e6,
                         f"total_s={t4:.3f};n={X.shape[0]}"))
         rows.append(Row(f"table1/form3_m{m}", t3 * 1e6,

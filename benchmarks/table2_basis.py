@@ -11,31 +11,30 @@ import time
 import jax
 
 from benchmarks.common import Row
-from repro.core import KernelSpec, TronConfig, kmeans, random_basis, solve
+from repro.api import KernelMachine, MachineConfig
+from repro.core import KernelSpec, TronConfig, kmeans, random_basis
 from repro.data import make_dataset
 
 
 def run(scale: float = 0.01, ms=(16, 512)):
     X, y, Xt, yt, spec = make_dataset("covtype", jax.random.PRNGKey(0),
                                       scale=scale, d_cap=54)
-    kern = KernelSpec("gaussian", sigma=1.2)
-    cfg = TronConfig(max_iter=80)
+    config = MachineConfig(kernel=KernelSpec("gaussian", sigma=1.2), lam=1.0,
+                           tron=TronConfig(max_iter=80))
     rows = []
     edge = {}
     for m in ms:
         # --- random
         t0 = time.perf_counter()
         basis_r = random_basis(jax.random.PRNGKey(1), X, m)
-        mach_r = solve(X, y, basis_r, lam=1.0, kernel=kern, cfg=cfg)
-        acc_r = mach_r.accuracy(Xt, yt)
+        acc_r = KernelMachine(config).fit(X, y, basis_r).score(Xt, yt)
         t_r = time.perf_counter() - t0
         # --- kmeans (3 Lloyd iterations, like the paper)
         t0 = time.perf_counter()
         centers, _ = kmeans(jax.random.PRNGKey(1), X, m, n_iter=3)
         centers.block_until_ready()
         t_km = time.perf_counter() - t0
-        mach_k = solve(X, y, centers, lam=1.0, kernel=kern, cfg=cfg)
-        acc_k = mach_k.accuracy(Xt, yt)
+        acc_k = KernelMachine(config).fit(X, y, centers).score(Xt, yt)
         t_k = time.perf_counter() - t0
         edge[m] = acc_k - acc_r
         rows.append(Row(f"table2/random_m{m}", t_r * 1e6,

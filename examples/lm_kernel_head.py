@@ -17,8 +17,9 @@ sys.path.insert(0, "src")
 import jax
 import jax.numpy as jnp
 
+from repro.api import KernelMachine, MachineConfig
 from repro.configs import ARCHS
-from repro.core import KernelSpec, TronConfig, random_basis, solve
+from repro.core import KernelSpec, TronConfig, random_basis
 from repro.models.common import unzip
 from repro.models.registry import make_model
 from repro.models.transformer import forward_lm
@@ -57,17 +58,18 @@ labels = jnp.sign(teacher - jnp.median(teacher))
 Ftr, ytr, Fte, yte = F[:n], labels[:n], F[n:], labels[n:]
 
 t0 = time.time()
-lin = solve(Ftr, ytr, Ftr[:128], lam=1e-3, kernel=KernelSpec("linear"),
-            cfg=TronConfig(max_iter=100))
-acc_lin = lin.accuracy(Fte, yte)
+lin = KernelMachine(MachineConfig(kernel=KernelSpec("linear"), lam=1e-3,
+                                  tron=TronConfig(max_iter=100))
+                    ).fit(Ftr, ytr, Ftr[:128])
+acc_lin = lin.score(Fte, yte)
 print(f"linear head:        test_acc={acc_lin:.4f} ({time.time() - t0:.1f}s)")
 
 t0 = time.time()
 basis = random_basis(jax.random.PRNGKey(2), Ftr, 256)
-rbf = solve(Ftr, ytr, basis, lam=1e-3,
-            kernel=KernelSpec("gaussian", sigma=float(sig_t) * 1.5),
-            cfg=TronConfig(max_iter=100))
-acc_rbf = rbf.accuracy(Fte, yte)
+rbf = KernelMachine(MachineConfig(
+    kernel=KernelSpec("gaussian", sigma=float(sig_t) * 1.5), lam=1e-3,
+    tron=TronConfig(max_iter=100))).fit(Ftr, ytr, basis)
+acc_rbf = rbf.score(Fte, yte)
 print(f"nystrom kernel head: test_acc={acc_rbf:.4f} "
-      f"(m=256, TRON iters={int(rbf.stats.n_iter)}, {time.time() - t0:.1f}s)")
+      f"(m=256, TRON iters={rbf.result_.n_iter}, {time.time() - t0:.1f}s)")
 assert acc_rbf >= acc_lin, "kernel head should beat linear on nonlinear task"

@@ -1,6 +1,7 @@
-"""Quickstart: train a Nystrom kernel SVM with distributed TRON (paper
-Algorithm 1) end-to-end on synthetic covtype-like data, a few hundred TRON
-iterations — the paper's kind of 'end-to-end driver'.
+"""Quickstart: train a Nystrom kernel SVM through the unified KernelMachine
+estimator on synthetic covtype-like data — the paper's end-to-end driver.
+The solver (TRON on formulation (4)) and execution plan (local | shard_map |
+auto | otf) are config fields, not code paths; swap them freely.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,9 +11,9 @@ import time
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import (KernelSpec, TronConfig, predict, random_basis, solve)
+from repro.api import KernelMachine, MachineConfig
+from repro.core import KernelSpec, TronConfig, random_basis
 from repro.data import make_dataset
 
 t0 = time.time()
@@ -20,15 +21,20 @@ X, y, Xt, yt, spec = make_dataset("covtype", jax.random.PRNGKey(0),
                                   scale=0.02, d_cap=54)
 print(f"data: n={X.shape[0]:,} d={X.shape[1]} (covtype-like)")
 
-kern = KernelSpec("gaussian", sigma=1.2)
+config = MachineConfig(kernel=KernelSpec("gaussian", sigma=1.2), lam=0.01,
+                       solver="tron", plan="local",
+                       tron=TronConfig(max_iter=300, grad_rtol=1e-4))
 for m in (64, 256, 1024):
     basis = random_basis(jax.random.PRNGKey(1), X, m)
     t = time.time()
-    mach = solve(X, y, basis, lam=0.01, kernel=kern,
-                 cfg=TronConfig(max_iter=300, grad_rtol=1e-4))
-    acc = mach.accuracy(Xt, yt)
-    print(f"m={m:5d}: test_acc={acc:.4f} TRON iters={int(mach.stats.n_iter)} "
-          f"(fg={int(mach.stats.n_fg)}, Hd={int(mach.stats.n_hd)}) "
-          f"solve={time.time() - t:.2f}s")
+    km = KernelMachine(config).fit(X, y, basis)
+    r = km.result_
+    print(f"m={m:5d}: test_acc={km.score(Xt, yt):.4f} TRON iters={r.n_iter} "
+          f"(fg={r.n_fg}, Hd={r.n_hd}) solve={time.time() - t:.2f}s")
 
-print(f"total {time.time() - t0:.1f}s — accuracy rises with m (paper Fig. 1)")
+# the same machine, saved and reloaded for serving
+km.save("/tmp/quickstart_machine.npz")
+km2 = KernelMachine.load("/tmp/quickstart_machine.npz")
+assert km2.score(Xt, yt) == km.score(Xt, yt)
+print(f"total {time.time() - t0:.1f}s — accuracy rises with m (paper Fig. 1); "
+      f"checkpoint round-trip OK")

@@ -1,6 +1,6 @@
 """Stage-wise basis addition (paper §3, a key advantage of formulation (4)):
-grow m in stages, warm-starting beta and computing only the NEW columns of C.
-Compares warm-started stagewise against solving each stage from scratch.
+grow m via KernelMachine.partial_fit — beta warm-started, only the NEW
+columns of C computed. Compares against solving each stage from scratch.
 
   PYTHONPATH=src python examples/stagewise_basis_growth.py
 """
@@ -10,43 +10,35 @@ import time
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import (KernelSpec, TronConfig, get_loss, predict,
-                        random_basis, solve)
-from repro.core.stagewise import stagewise_solve
+from repro.api import KernelMachine, MachineConfig
+from repro.core import KernelSpec, TronConfig, random_basis
 from repro.data import make_dataset
 
 X, y, Xt, yt, spec = make_dataset("covtype", jax.random.PRNGKey(0),
                                   scale=0.015, d_cap=54)
-kern = KernelSpec("gaussian", sigma=1.2)
-cfg = TronConfig(max_iter=200, grad_rtol=1e-4)
+config = MachineConfig(kernel=KernelSpec("gaussian", sigma=1.2), lam=0.01,
+                       tron=TronConfig(max_iter=200, grad_rtol=1e-4))
 
 full = random_basis(jax.random.PRNGKey(1), X, 1024)
 stages = [full[:128], full[128:384], full[384:1024]]
 
-print("== stage-wise (warm-started) ==")
+print("== stage-wise (partial_fit, warm-started) ==")
 t0 = time.time()
-iters_warm = []
-def cb(res):
-    o = predict(Xt, full[: res.m], res.beta, kern)
-    acc = float(jnp.mean(jnp.sign(o) == yt))
-    iters_warm.append(res.n_iter)
-    print(f"  m={res.m:5d}: f={res.f:10.2f} iters={res.n_iter:3d} "
-          f"test_acc={acc:.4f}")
-results = stagewise_solve(X, y, stages, lam=0.01,
-                          loss=get_loss("squared_hinge"), kernel=kern,
-                          cfg=cfg, callback=cb)
+km = KernelMachine(config)
+for new_pts in stages:
+    km.partial_fit(X, y, new_pts)
+    r = km.result_
+    print(f"  m={r.m:5d}: f={r.f:10.2f} iters={r.n_iter:3d} "
+          f"test_acc={km.score(Xt, yt):.4f}")
 t_warm = time.time() - t0
 
 print("== from scratch at each m ==")
 t0 = time.time()
-iters_cold = []
 for m in (128, 384, 1024):
-    mach = solve(X, y, full[:m], lam=0.01, kernel=kern, cfg=cfg)
-    iters_cold.append(int(mach.stats.n_iter))
-    print(f"  m={m:5d}: f={float(mach.stats.f):10.2f} "
-          f"iters={int(mach.stats.n_iter):3d}")
+    cold = KernelMachine(config).fit(X, y, full[:m])
+    print(f"  m={m:5d}: f={cold.result_.f:10.2f} "
+          f"iters={cold.result_.n_iter:3d}")
 t_cold = time.time() - t0
 
 n = X.shape[0]

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Repo verification gate.
+#
+#   scripts/verify.sh          fast gate: not-slow tests + API/serving smoke
+#   scripts/verify.sh --full   tier-1 (the full pytest suite) + the smoke
+#
+# The fast gate is what you run in the inner loop (a couple of minutes);
+# the slow marker holds the 8-fake-device subprocess suites
+# (test_distributed, test_dryrun_path, test_decode_consistency).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+export JAX_PLATFORMS=${JAX_PLATFORMS:-cpu}
+
+if [[ "${1:-}" == "--full" ]]; then
+    echo "== tier-1: full pytest suite =="
+    python -m pytest -x -q
+else
+    echo "== fast gate: pytest -m 'not slow' =="
+    python -m pytest -x -q -m "not slow"
+fi
+
+echo "== API smoke: train -> save -> load -> serve =="
+python -m repro.launch.kernel_serve --selftest
+
+echo "== verify OK =="

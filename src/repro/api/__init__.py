@@ -1,0 +1,18 @@
+"""repro.api — the unified KernelMachine estimator surface.
+
+One config-driven estimator over formulation (4) with two registries:
+solvers (tron | linearized | rff | ppacksvm) and execution plans
+(local | shard_map | auto | otf). See repro.api.machine for the tour.
+"""
+from repro.api.config import MachineConfig
+from repro.api.result import FitResult
+from repro.api.machine import KernelMachine
+from repro.api.registry import (available_plans, available_solvers,
+                                get_plan, get_solver, register_plan,
+                                register_solver, valid_combinations, validate)
+
+__all__ = [
+    "KernelMachine", "MachineConfig", "FitResult",
+    "available_plans", "available_solvers", "get_plan", "get_solver",
+    "register_plan", "register_solver", "valid_combinations", "validate",
+]

@@ -1,0 +1,70 @@
+"""Frozen, JSON-round-trippable configuration for :class:`KernelMachine`.
+
+One config drives every solver x execution-plan combination: the paper's
+point is that formulation (4) is *one* objective, so the knobs that pick a
+training strategy (solver name, plan name, mesh axes) are data, not code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core.losses import Loss, get_loss
+from repro.core.nystrom import KernelSpec
+from repro.core.tron import TronConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineConfig:
+    """Everything needed to train and serve one kernel machine.
+
+    ``solver`` / ``plan`` name entries in :mod:`repro.api.registry`; the
+    remaining fields parameterize the objective (kernel, loss, lam), the
+    optimizer (tron), and the solver/plan specifics.
+    """
+
+    kernel: KernelSpec = KernelSpec()
+    loss: str = "squared_hinge"        # by name -> repro.core.losses.get_loss
+    lam: float = 1.0
+    solver: str = "tron"               # tron | linearized | rff | ppacksvm
+    plan: str = "local"                # local | shard_map | auto | otf
+    tron: TronConfig = TronConfig()
+    backend: str = "jnp"               # gram backend: jnp | pallas
+    seed: int = 0                      # rff draw / ppacksvm shuffle / basis pick
+
+    # basis selection when fit() is called without an explicit basis
+    m: int = 256
+    basis_strategy: str = "random"     # random | kmeans | auto
+
+    # solver-specific knobs
+    rff_features: int = 256            # feature count for solver="rff"
+    ppack_epochs: int = 1
+    ppack_size: int = 64
+    linearized_rank: Optional[int] = None
+
+    # execution-plan knobs (distributed plans)
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: Optional[str] = None
+
+    def __post_init__(self):
+        get_loss(self.loss)  # fail fast on unknown loss names
+
+    def get_loss(self) -> Loss:
+        return get_loss(self.loss)
+
+    def replace(self, **kw) -> "MachineConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------- round-trip
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["data_axes"] = list(self.data_axes)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "MachineConfig":
+        d = dict(d)
+        d["kernel"] = KernelSpec(**d["kernel"])
+        d["tron"] = TronConfig(**d["tron"])
+        d["data_axes"] = tuple(d["data_axes"])
+        return cls(**d)

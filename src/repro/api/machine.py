@@ -1,0 +1,166 @@
+"""`KernelMachine`: the one estimator every entrypoint targets.
+
+    config = MachineConfig(kernel=KernelSpec("gaussian", sigma=2.0),
+                           lam=0.5, solver="tron", plan="shard_map")
+    km = KernelMachine(config).fit(X, y, basis)
+    yhat = km.predict(Xt)
+    km.save("machine.npz")
+    km2 = KernelMachine.load("machine.npz")
+
+Swapping single-node for distributed training, stage-wise growth, RFF, or
+the baselines is a config edit, not a code path change — the paper's
+"one objective, many execution strategies" claim made into an API.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.config import MachineConfig
+from repro.api.registry import validate
+from repro.api.result import FitResult
+from repro.checkpoint import load_arrays, save_checkpoint
+from repro.core.basis import select_basis
+from repro.core.nystrom import build_C, build_W, gram
+
+# solver/plan registration happens on import
+import repro.api.plans    # noqa: F401
+import repro.api.solvers  # noqa: F401
+
+_CKPT_FORMAT = 1
+
+
+class KernelMachine:
+    """Estimator over formulation (4) with pluggable solver and plan.
+
+    Attributes set by fitting:
+      ``state_``    — flat dict of arrays (the deployable model)
+      ``history_``  — one :class:`FitResult` per fit/partial_fit call
+      ``result_``   — the latest :class:`FitResult`
+    """
+
+    def __init__(self, config: MachineConfig = MachineConfig(), *, mesh=None):
+        validate(config.solver, config.plan)   # fail at construction, not fit
+        self.config = config
+        self.mesh = mesh
+        self.state_: Optional[dict] = None
+        self.history_: List[FitResult] = []
+        self._cw = None          # (C, W) cache for local stage-wise growth
+        self._cw_shape = None    # X shape the cache was built against
+
+    # ------------------------------------------------------------------- fit
+    @property
+    def result_(self) -> Optional[FitResult]:
+        return self.history_[-1] if self.history_ else None
+
+    def fit(self, X, y, basis=None, *, beta0=None, key=None):
+        """Train from scratch. ``basis`` defaults to ``config.basis_strategy``
+        selection of ``config.m`` points (ignored by rff/ppacksvm solvers)."""
+        entry = validate(self.config.solver, self.config.plan)
+        if key is None:
+            key = jax.random.PRNGKey(self.config.seed)
+        if basis is None and entry.needs_basis:
+            basis = select_basis(key, X, self.config.m,
+                                 strategy=self.config.basis_strategy,
+                                 mesh=self.mesh,
+                                 data_axes=self.config.data_axes)
+        state, res = entry.fit(self.config, X, y, basis, beta0,
+                               mesh=self.mesh, plan=self.config.plan, key=key)
+        self.state_ = state
+        self.history_ = [res]
+        self._cw = self._cw_shape = None
+        return self
+
+    def partial_fit(self, X, y, new_basis, *, key=None):
+        """Stage-wise basis growth (paper §3): add ``new_basis`` points,
+        warm-start beta (old coordinates kept, new ones zero) and re-solve.
+
+        Under the ``local`` plan only the NEW columns of C (and new blocks
+        of W) are computed — the incrementality the paper highlights as
+        formulation (4)'s advantage over (3)'s incremental SVD. Distributed
+        plans rebuild their sharded (C, W) but keep the warm start. ``X, y``
+        must be the same dataset across calls.
+        """
+        entry = validate(self.config.solver, self.config.plan)
+        if not entry.grows:
+            raise ValueError(
+                f"solver {self.config.solver!r} does not support stage-wise "
+                f"basis growth (partial_fit); use solver='tron'")
+        new_basis = jnp.asarray(new_basis)
+        kern, backend = self.config.kernel, self.config.backend
+        local = self.config.plan == "local"
+
+        if self.state_ is None:
+            basis = new_basis
+            beta0 = jnp.zeros((basis.shape[0],), X.dtype)
+            if local:
+                self._cw = (build_C(X, basis, kern, backend),
+                            build_W(basis, kern, backend))
+                self._cw_shape = X.shape
+        else:
+            old_basis, old_beta = self.state_["basis"], self.state_["beta"]
+            basis = jnp.concatenate([old_basis, new_basis], axis=0)
+            beta0 = jnp.concatenate(
+                [old_beta, jnp.zeros((new_basis.shape[0],), old_beta.dtype)])
+            if local:
+                if self._cw is not None and self._cw_shape == X.shape:
+                    C, W = self._cw          # only new columns/blocks below
+                else:                        # e.g. fit() first, then grow
+                    C = build_C(X, old_basis, kern, backend)
+                    W = build_W(old_basis, kern, backend)
+                C_new = gram(X, new_basis, kern, backend)
+                W_cross = gram(old_basis, new_basis, kern, backend)
+                W_new = gram(new_basis, new_basis, kern, backend)
+                C = jnp.concatenate([C, C_new], axis=1)
+                W = jnp.block([[W, W_cross], [W_cross.T, W_new]])
+                self._cw = (C, W)
+                self._cw_shape = X.shape
+
+        state, res = entry.fit(self.config, X, y, basis, beta0,
+                               mesh=self.mesh, plan=self.config.plan,
+                               key=key, CW=self._cw if local else None)
+        self.state_ = state
+        self.history_.append(res)
+        return self
+
+    # --------------------------------------------------------------- predict
+    def _require_fitted(self):
+        if self.state_ is None:
+            raise RuntimeError("KernelMachine is not fitted; call fit() or "
+                               "load() first")
+
+    def decision_function(self, X, *, backend: Optional[str] = None):
+        """Raw margin o(x); jit-traceable given fixed state."""
+        self._require_fitted()
+        entry = validate(self.config.solver, self.config.plan)
+        return entry.decision(self.config, self.state_, X, backend=backend)
+
+    def predict(self, X):
+        return jnp.sign(self.decision_function(X))
+
+    def score(self, X, y) -> float:
+        return float(jnp.mean(jnp.sign(self.decision_function(X)) == y))
+
+    # ------------------------------------------------------------- save/load
+    def save(self, path: str):
+        """Persist state + config via repro.checkpoint (single .npz)."""
+        self._require_fitted()
+        meta = {"format": _CKPT_FORMAT, "config": self.config.to_dict(),
+                "history": [
+                    {"solver": r.solver, "plan": r.plan, "m": r.m, "f": r.f,
+                     "n_iter": r.n_iter, "converged": r.converged}
+                    for r in self.history_]}
+        save_checkpoint(path, dict(self.state_), metadata=meta)
+        return path
+
+    @classmethod
+    def load(cls, path: str, *, mesh=None) -> "KernelMachine":
+        arrays, meta = load_arrays(path)
+        if meta.get("format") != _CKPT_FORMAT:
+            raise ValueError(f"{path}: not a KernelMachine checkpoint "
+                             f"(format={meta.get('format')!r})")
+        km = cls(MachineConfig.from_dict(meta["config"]), mesh=mesh)
+        km.state_ = {k: jnp.asarray(v) for k, v in arrays.items()}
+        return km

@@ -1,0 +1,114 @@
+"""Execution plans: where (and how) a TRON solve runs.
+
+Every plan has the same contract — take the global problem
+``(X, y, basis, beta0)`` plus a :class:`MachineConfig`, return a
+``TronResult`` — so solvers compose with plans without knowing which one
+they got:
+
+* ``local``     — one device, materialized (C, W), Formulation4 closures.
+                  Accepts a precomputed ``CW`` cache (stage-wise growth
+                  reuses every already-computed column of C).
+* ``shard_map`` — the paper's Algorithm 1: explicit psum AllReduces, one
+                  per paper step, via DistributedNystrom(mode="shard_map").
+* ``auto``      — same math under jit with sharded operands; XLA SPMD picks
+                  the collective schedule.
+* ``otf``       — compute-on-the-fly: C is never stored, every f/g/Hd
+                  recomputes its gram tiles (optionally the Pallas fused
+                  kmvp path via ``config.backend="pallas"``).
+
+Distributed plans run on ``mesh`` (or a default all-devices data mesh) and
+require n and m divisible by the data-axis extent — checked here with a
+readable error instead of a shard_map trace failure.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.registry import register_plan
+from repro.core.compat import default_mesh
+from repro.core.distributed import DistConfig, DistributedNystrom
+from repro.core.formulation import Formulation4
+from repro.core.nystrom import build_C, build_W
+from repro.core.tron import TronResult, tron
+
+
+@register_plan("local")
+def plan_local(config, mesh, X, y, basis, beta0,
+               CW: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
+               ) -> TronResult:
+    del mesh
+    if CW is None:
+        C = build_C(X, basis, config.kernel, config.backend)
+        W = build_W(basis, config.kernel, config.backend)
+    else:
+        C, W = CW
+    form = Formulation4(lam=config.lam, loss=config.get_loss())
+    cfg = config.tron
+
+    @jax.jit
+    def _run(C, W, y, beta0):
+        return tron(lambda b: form.fgrad(C, W, y, b),
+                    lambda D, d: form.hessd(C, W, D, d), beta0, cfg)
+
+    return _run(C, W, y, beta0)
+
+
+def _axis_extent(mesh, axes) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def _resolve_mesh(config, mesh):
+    if mesh is not None:
+        return mesh
+    return default_mesh(config.data_axes, config.model_axis)
+
+
+def _check_divisible(config, mesh, n: int, m: int, plan: str):
+    dp = _axis_extent(mesh, config.data_axes)
+    mp = mesh.shape[config.model_axis] if config.model_axis else 1
+    if n % dp:
+        raise ValueError(
+            f"plan {plan!r}: n={n} rows must divide evenly over the data axes "
+            f"{config.data_axes} (extent {dp}); truncate or pad the dataset")
+    if m % (dp * mp) or (config.model_axis and m % mp):
+        raise ValueError(
+            f"plan {plan!r}: basis size m={m} must divide evenly over "
+            f"data x model axes (extents {dp} x {mp}) for the 2-D (C, W) "
+            f"partition; round m to a multiple of {dp * mp}")
+
+
+def _distributed(config, mesh, X, y, basis, beta0, *, mode: str,
+                 materialize: bool, plan: str) -> TronResult:
+    mesh = _resolve_mesh(config, mesh)
+    _check_divisible(config, mesh, X.shape[0], basis.shape[0], plan)
+    dc = DistConfig(data_axes=config.data_axes, model_axis=config.model_axis,
+                    mode=mode, materialize=materialize,
+                    backend=config.backend)
+    solver = DistributedNystrom(mesh, config.lam, config.loss, config.kernel,
+                                dc)
+    return solver.solve(X, y, basis, beta0=beta0, cfg=config.tron)
+
+
+@register_plan("shard_map")
+def plan_shard_map(config, mesh, X, y, basis, beta0, CW=None) -> TronResult:
+    del CW  # distributed plans build their own sharded (C, W)
+    return _distributed(config, mesh, X, y, basis, beta0,
+                        mode="shard_map", materialize=True, plan="shard_map")
+
+
+@register_plan("auto")
+def plan_auto(config, mesh, X, y, basis, beta0, CW=None) -> TronResult:
+    del CW
+    return _distributed(config, mesh, X, y, basis, beta0,
+                        mode="auto", materialize=True, plan="auto")
+
+
+@register_plan("otf")
+def plan_otf(config, mesh, X, y, basis, beta0, CW=None) -> TronResult:
+    del CW  # the whole point: C is never materialized
+    return _distributed(config, mesh, X, y, basis, beta0,
+                        mode="shard_map", materialize=False, plan="otf")

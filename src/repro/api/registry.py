@@ -1,0 +1,92 @@
+"""Solver and execution-plan registries.
+
+A *solver* owns the optimization strategy (objective + update rule); an
+*execution plan* owns where the math runs (one device, explicit shard_map
+collectives, XLA-auto SPMD, or materialization-free on-the-fly gram). Any
+solver composes with any plan it declares mathematically valid — the
+composition is checked here, once, with an error message that lists the
+legal choices instead of failing deep inside a trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, FrozenSet, Optional
+
+SolverFn = Callable  # (config, X, y, basis, beta0, *, mesh, plan, key, CW) -> (state, FitResult)
+DecisionFn = Callable  # (config, state, X) -> outputs
+PlanFn = Callable    # (config, mesh, X, y, basis, beta0, CW=None) -> TronResult
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverEntry:
+    name: str
+    fit: SolverFn
+    decision: DecisionFn
+    plans: FrozenSet[str]      # execution plans this solver is valid under
+    grows: bool = False        # supports partial_fit basis growth
+    needs_basis: bool = False  # fit consumes a point basis (else ignores it)
+
+
+_SOLVERS: Dict[str, SolverEntry] = {}
+_PLANS: Dict[str, PlanFn] = {}
+
+
+def register_solver(name: str, *, plans, grows: bool = False,
+                    needs_basis: bool = False,
+                    decision: Optional[DecisionFn] = None):
+    def deco(fn: SolverFn):
+        if name in _SOLVERS:
+            raise ValueError(f"solver {name!r} already registered")
+        _SOLVERS[name] = SolverEntry(name=name, fit=fn, decision=decision,
+                                     plans=frozenset(plans), grows=grows,
+                                     needs_basis=needs_basis)
+        return fn
+    return deco
+
+
+def register_plan(name: str):
+    def deco(fn: PlanFn):
+        if name in _PLANS:
+            raise ValueError(f"plan {name!r} already registered")
+        _PLANS[name] = fn
+        return fn
+    return deco
+
+
+def available_solvers():
+    return sorted(_SOLVERS)
+
+
+def available_plans():
+    return sorted(_PLANS)
+
+
+def get_solver(name: str) -> SolverEntry:
+    if name not in _SOLVERS:
+        raise KeyError(
+            f"unknown solver {name!r}; registered: {available_solvers()}")
+    return _SOLVERS[name]
+
+
+def get_plan(name: str) -> PlanFn:
+    if name not in _PLANS:
+        raise KeyError(
+            f"unknown execution plan {name!r}; registered: {available_plans()}")
+    return _PLANS[name]
+
+
+def validate(solver: str, plan: str) -> SolverEntry:
+    """Check the (solver, plan) composition; raise a helpful error if bad."""
+    entry = get_solver(solver)
+    get_plan(plan)
+    if plan not in entry.plans:
+        raise ValueError(
+            f"solver {solver!r} does not support execution plan {plan!r}; "
+            f"valid plans for it: {sorted(entry.plans)}")
+    return entry
+
+
+def valid_combinations():
+    """[(solver, plan)] for every registered, mathematically valid pairing."""
+    return [(s, p) for s in available_solvers()
+            for p in sorted(_SOLVERS[s].plans) if p in _PLANS]

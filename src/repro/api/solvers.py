@@ -1,0 +1,146 @@
+"""Solver adapters: each optimization strategy behind one fit contract.
+
+    fit(config, X, y, basis, beta0, *, mesh, plan, key, CW=None)
+        -> (state, FitResult)
+
+``state`` is a flat dict of arrays — exactly what predict needs and exactly
+what goes through ``repro.checkpoint`` on save/load:
+
+    tron / linearized : {"basis": (m, d), "beta": (m,)}
+    rff               : {"omega": (d, m), "phase": (m,), "beta": (m,)}
+    ppacksvm          : {"basis": (n, d), "beta": (n,)}   (support = X train)
+
+Plan validity is the mathematically honest set. ``tron`` runs under every
+plan (the paper's claim). ``rff`` also runs under every plan via the exact
+reduction phi(X) -> linear-kernel machine with identity basis (C = phi(X),
+W = I is formulation (4) verbatim). ``linearized`` is pinned to ``local``:
+its O(m^3) eigendecomposition is the inherently-serial step the paper
+argues against. ``ppacksvm`` is pinned to ``local``: sequential SGD with
+O(n/r) communication rounds has no honest mapping onto the fused-loop plans.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.registry import get_plan, register_solver
+from repro.api.result import FitResult
+from repro.core import linearized as lin
+from repro.core import ppacksvm as pps
+from repro.core import rff as rffm
+from repro.core.nystrom import KernelSpec, gram
+
+
+def _key(config, key):
+    return jax.random.PRNGKey(config.seed) if key is None else key
+
+
+def _zeros_like_beta(X, m, beta0):
+    return jnp.zeros((m,), X.dtype) if beta0 is None else beta0
+
+
+# ------------------------------------------------------------------ decisions
+def _decision_nystrom(config, state, X, backend: Optional[str] = None):
+    C = gram(X, state["basis"], config.kernel,
+             backend if backend is not None else config.backend)
+    return C @ state["beta"]
+
+
+def _decision_rff(config, state, X, backend: Optional[str] = None):
+    del backend
+    basis = rffm.RFFBasis(omega=state["omega"], phase=state["phase"],
+                          sigma=config.kernel.sigma)
+    return rffm.rff_features(X, basis) @ state["beta"]
+
+
+# -------------------------------------------------------------------- solvers
+@register_solver("tron", plans={"local", "shard_map", "auto", "otf"},
+                 grows=True, needs_basis=True, decision=_decision_nystrom)
+def fit_tron(config, X, y, basis, beta0=None, *, mesh=None, plan=None,
+             key=None, CW=None):
+    """Formulation (4) + trust-region Newton — the paper's solver."""
+    del key
+    plan = plan or config.plan
+    beta0 = _zeros_like_beta(X, basis.shape[0], beta0)
+    res = get_plan(plan)(config, mesh, X, y, basis, beta0, CW=CW)
+    state = {"basis": basis, "beta": res.beta}
+    return state, FitResult.from_tron(res, solver="tron", plan=plan,
+                                      m=int(basis.shape[0]))
+
+
+@register_solver("linearized", plans={"local"}, needs_basis=True,
+                 decision=_decision_nystrom)
+def fit_linearized(config, X, y, basis, beta0=None, *, mesh=None, plan=None,
+                   key=None, CW=None):
+    """Formulation (3) baseline: eigendecompose W, solve the linear machine."""
+    del mesh, key, CW
+    if beta0 is not None:
+        raise ValueError("solver 'linearized' optimizes in w-space, not "
+                         "beta-space; warm-starting from beta0 is not "
+                         "supported (use solver='tron')")
+    plan = plan or config.plan
+    res = lin.solve_linearized(X, y, basis, lam=config.lam, loss=config.loss,
+                               kernel=config.kernel,
+                               rank=config.linearized_rank, cfg=config.tron,
+                               backend=config.backend)
+    state = {"basis": basis, "beta": res.beta}
+    extras = {"w": res.w, "time_eig_and_A": res.time_eig_and_A,
+              "time_solve": res.time_solve, "linearized": res}
+    return state, FitResult.from_tron(res.stats, solver="linearized",
+                                      plan=plan, m=int(basis.shape[0]),
+                                      extras=extras)
+
+
+@register_solver("rff", plans={"local", "shard_map", "auto", "otf"},
+                 decision=_decision_rff)
+def fit_rff(config, X, y, basis=None, beta0=None, *, mesh=None, plan=None,
+            key=None, CW=None):
+    """Random Fourier features, then the SAME formulation-(4) machinery.
+
+    phi(X) with a linear kernel and identity basis gives C = phi(X), W = I —
+    so every execution plan (including shard_map and on-the-fly) applies
+    unchanged. ``basis`` may be a pre-sampled :class:`RFFBasis`; by default
+    ``config.rff_features`` frequencies are drawn from ``key``.
+    """
+    del CW
+    plan = plan or config.plan
+    if basis is None:
+        basis = rffm.sample_rff(_key(config, key), X.shape[1],
+                                config.rff_features, config.kernel.sigma)
+    elif not isinstance(basis, rffm.RFFBasis):
+        raise TypeError("solver 'rff' expects an RFFBasis (or None to sample "
+                        "one); got an array — use solver 'tron' for Nystrom "
+                        "point bases")
+    A = rffm.rff_features(X, basis)
+    m = basis.m
+    eye = jnp.eye(m, dtype=A.dtype)
+    beta0 = _zeros_like_beta(A, m, beta0)
+    lin_cfg = config.replace(kernel=KernelSpec("linear"), backend="jnp")
+    CW = (A, eye) if plan == "local" else None
+    res = get_plan(plan)(lin_cfg, mesh, A, y, eye, beta0, CW=CW)
+    state = {"omega": basis.omega, "phase": basis.phase, "beta": res.beta}
+    return state, FitResult.from_tron(res, solver="rff", plan=plan, m=m)
+
+
+@register_solver("ppacksvm", plans={"local"}, decision=_decision_nystrom)
+def fit_ppacksvm(config, X, y, basis=None, beta0=None, *, mesh=None,
+                 plan=None, key=None, CW=None):
+    """P-packSVM baseline: packed Pegasos SGD in the full kernel space.
+
+    Hinge loss is built into the update rule (``config.loss`` is ignored);
+    the support set is the training data itself, so the saved state scales
+    with n, not m — the serving-cost contrast the paper draws.
+    """
+    del mesh, CW, beta0, basis
+    plan = plan or config.plan
+    res = pps.ppacksvm(_key(config, key), X, y, lam=config.lam,
+                       kernel=config.kernel, epochs=config.ppack_epochs,
+                       pack_size=config.ppack_size, backend=config.backend)
+    state = {"basis": X, "beta": res.alpha}
+    fit = FitResult(solver="ppacksvm", plan=plan, m=int(X.shape[0]),
+                    f=float("nan"), gnorm=float("nan"),
+                    n_iter=res.n_rounds, n_fg=0, n_hd=0, converged=True,
+                    extras={"n_rounds": res.n_rounds})
+    return state, fit

@@ -1,1 +1,1 @@
-from repro.checkpoint.ckpt import save_checkpoint, load_checkpoint
+from repro.checkpoint.ckpt import save_checkpoint, load_checkpoint, load_arrays

@@ -31,6 +31,19 @@ def save_checkpoint(path: str, tree: Any, metadata: dict | None = None):
     os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
 
 
+def load_arrays(path: str) -> tuple[dict, dict]:
+    """Load a checkpoint without a ``like`` tree: (flat key->array, metadata).
+
+    Keys are the '/'-joined tree paths written by save_checkpoint; a flat
+    dict state round-trips to its own keys. Used by KernelMachine.load,
+    where the state structure is only known from the checkpoint itself.
+    """
+    with np.load(path, allow_pickle=False) as data:
+        manifest = json.loads(data["__manifest__"].item())
+        arrays = {k: np.asarray(data[k]) for k in manifest["keys"]}
+    return arrays, manifest.get("metadata", {})
+
+
 def load_checkpoint(path: str, like: Any) -> Any:
     with np.load(path, allow_pickle=False) as data:
         leaves_with_paths = jax.tree_util.tree_flatten_with_path(like)[0]

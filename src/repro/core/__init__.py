@@ -2,6 +2,10 @@
 
 Formulation (4) of the Nystrom-approximated kernel machine, the TRON
 solver, and the distributed Algorithm 1 (shard_map + psum AllReduce).
+
+The estimator-style surface over all of this is ``repro.api``
+(KernelMachine + solver/plan registries); ``solve``, ``stagewise_solve``
+and ``solve_rff`` remain as deprecated shims.
 """
 from repro.core.losses import LOSSES, get_loss, SQUARED_HINGE, LOGISTIC, SQUARED
 from repro.core.nystrom import KernelSpec, gram, build_C, build_W, predict

@@ -14,9 +14,9 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.compat import shard_map
 from repro.core.nystrom import sqdist
 
 

@@ -33,8 +33,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
+from repro.core.compat import axis_size, shard_map
 from repro.core.losses import Loss, get_loss
 from repro.core.nystrom import KernelSpec, gram
 from repro.core.tron import TronConfig, TronResult, tron
@@ -53,7 +53,7 @@ def _dp_index(data_axes):
     """Linearized index of this device along the (possibly nested) data axes."""
     idx = jax.lax.axis_index(data_axes[0])
     for ax in data_axes[1:]:
-        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        idx = idx * axis_size(ax) + jax.lax.axis_index(ax)
     return idx
 
 
@@ -171,12 +171,12 @@ class DistributedNystrom:
         da, ma = self.dist.data_axes, self.dist.model_axis
         dp_total = 1
         for ax in da:
-            dp_total *= jax.lax.axis_size(ax)
+            dp_total *= axis_size(ax)
         m_dp = m // dp_total
         row0 = _dp_index(da) * m_dp
         basis_rows = jax.lax.dynamic_slice_in_dim(basis, row0, m_dp, 0)
         if ma is not None:
-            m_mp = m // jax.lax.axis_size(ma)
+            m_mp = m // axis_size(ma)
             col0 = jax.lax.axis_index(ma) * m_mp
             basis_cols = jax.lax.dynamic_slice_in_dim(basis, col0, m_mp, 0)
         else:

@@ -18,9 +18,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.formulation import Formulation4, to_linearized, beta_from_w
-from repro.core.losses import Loss
+from repro.core.losses import Loss, get_loss
 from repro.core.nystrom import KernelSpec, build_C, build_W
-from repro.core.tron import TronConfig, tron
+from repro.core.tron import TronConfig, TronResult, tron
 
 
 @dataclasses.dataclass
@@ -31,13 +31,15 @@ class LinearizedResult:
     n_iter: int
     time_eig_and_A: float    # the paper's 'Fraction of time for A' numerator
     time_solve: float
+    stats: Optional[TronResult] = None   # full solver counters for FitResult
 
 
-def solve_linearized(X, y, basis, *, lam: float, loss: Loss,
+def solve_linearized(X, y, basis, *, lam: float, loss: Loss | str,
                      kernel: KernelSpec, rank: Optional[int] = None,
                      cfg: TronConfig = TronConfig(),
                      backend: str = "jnp") -> LinearizedResult:
     """Solve formulation (3); timings split so Table 1 can be reproduced."""
+    loss = get_loss(loss) if isinstance(loss, str) else loss
     C = build_C(X, basis, kernel, backend)
     W = build_W(basis, kernel, backend)
 
@@ -62,4 +64,5 @@ def solve_linearized(X, y, basis, *, lam: float, loss: Loss,
     beta = beta_from_w(U, lam_vals, res.beta)
     return LinearizedResult(w=res.beta, beta=beta, f=float(res.f),
                             n_iter=int(res.n_iter),
-                            time_eig_and_A=t_a, time_solve=t_solve)
+                            time_eig_and_A=t_a, time_solve=t_solve,
+                            stats=res)

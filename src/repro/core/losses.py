@@ -80,3 +80,15 @@ def get_loss(name: str) -> Loss:
     if name not in LOSSES:
         raise KeyError(f"unknown loss {name!r}; available: {sorted(LOSSES)}")
     return LOSSES[name]
+
+
+def register_loss(loss: Loss) -> str:
+    """Add a user-built Loss to the registry so name-keyed configs (and the
+    legacy shims taking Loss objects) can refer to it. Returns the name."""
+    existing = LOSSES.get(loss.name)
+    if existing is not None and existing is not loss:
+        raise ValueError(
+            f"a different loss is already registered as {loss.name!r}; "
+            f"pick a distinct Loss.name")
+    LOSSES[loss.name] = loss
+    return loss.name

@@ -20,9 +20,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.formulation import Formulation4
-from repro.core.losses import Loss, get_loss
-from repro.core.tron import TronConfig, TronResult, tron
+from repro.core.losses import Loss
+from repro.core.tron import TronConfig, TronResult
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,18 +63,23 @@ class RFFMachine:
 def solve_rff(key: jax.Array, X, y, m: int, *, lam: float, sigma: float,
               loss: Loss | str = "squared_hinge",
               cfg: TronConfig = TronConfig()) -> RFFMachine:
-    """Linear machine on RFF features, solved with the same TRON."""
-    loss = get_loss(loss) if isinstance(loss, str) else loss
+    """Deprecated: use ``KernelMachine(MachineConfig(solver="rff", ...))``.
+
+    Thin shim — samples the basis from ``key`` exactly as before, then runs
+    the unified estimator (formulation (4) with C = phi(X), W = I).
+    """
+    import warnings
+
+    from repro.api import KernelMachine, MachineConfig  # lazy: avoid cycle
+    from repro.core.nystrom import KernelSpec
+    from repro.core.solver import loss_name
+
+    warnings.warn("repro.core.rff.solve_rff is deprecated; use "
+                  "repro.api.KernelMachine with solver='rff'",
+                  DeprecationWarning, stacklevel=2)
+    config = MachineConfig(
+        kernel=KernelSpec("gaussian", sigma=sigma), loss=loss_name(loss),
+        lam=lam, solver="rff", plan="local", tron=cfg, rff_features=m)
     basis = sample_rff(key, X.shape[1], m, sigma)
-    A = rff_features(X, basis)
-    form = Formulation4(lam=lam, loss=loss)   # W = I -> linear machine
-    eye = jnp.eye(m, dtype=A.dtype)
-
-    @jax.jit
-    def _run(A, y):
-        return tron(lambda w: form.fgrad(A, eye, y, w),
-                    lambda D, d: form.hessd(A, eye, D, d),
-                    jnp.zeros((m,), A.dtype), cfg)
-
-    stats = _run(A, y)
-    return RFFMachine(basis=basis, w=stats.beta, stats=stats)
+    km = KernelMachine(config).fit(X, y, basis)
+    return RFFMachine(basis=basis, w=km.state_["beta"], stats=km.result_.tron)

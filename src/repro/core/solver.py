@@ -1,25 +1,36 @@
-"""Single-machine convenience facade over formulation (4) + TRON.
+"""DEPRECATED single-machine facade — thin shim over repro.api.
 
-This is the 'one node' row of the paper's tables; the distributed path is
-repro.core.distributed.DistributedNystrom with identical math.
+``solve`` predates the unified estimator; it now builds a
+``KernelMachine(solver="tron", plan="local")`` and repackages the result,
+so legacy scripts keep running while all math lives behind the registry.
+Prefer::
+
+    from repro.api import KernelMachine, MachineConfig
+    km = KernelMachine(MachineConfig(kernel=..., lam=...)).fit(X, y, basis)
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.formulation import Formulation4
-from repro.core.losses import Loss, get_loss
-from repro.core.nystrom import KernelSpec, build_C, build_W, predict
-from repro.core.tron import TronConfig, TronResult, tron
+from repro.core.losses import Loss, register_loss
+from repro.core.nystrom import KernelSpec, predict
+from repro.core.tron import TronConfig, TronResult
+
+
+def loss_name(loss: Loss | str) -> str:
+    """Name for a config-carried loss; registers unknown Loss objects so
+    shims keep accepting arbitrary Loss instances, as they always did."""
+    return loss if isinstance(loss, str) else register_loss(loss)
 
 
 @dataclasses.dataclass
 class NystromMachine:
-    """A trained Nystrom kernel machine: basis points + beta."""
+    """A trained Nystrom kernel machine: basis points + beta. (Legacy result
+    type of ``solve``; the estimator equivalent is ``KernelMachine``.)"""
 
     basis: jnp.ndarray
     beta: jnp.ndarray
@@ -38,18 +49,13 @@ def solve(X, y, basis, *, lam: float, loss: Loss | str = "squared_hinge",
           kernel: KernelSpec = KernelSpec(), cfg: TronConfig = TronConfig(),
           beta0: Optional[jnp.ndarray] = None,
           backend: str = "jnp") -> NystromMachine:
-    loss = get_loss(loss) if isinstance(loss, str) else loss
-    C = build_C(X, basis, kernel, backend)
-    W = build_W(basis, kernel, backend)
-    form = Formulation4(lam=lam, loss=loss)
-    if beta0 is None:
-        beta0 = jnp.zeros((basis.shape[0],), X.dtype)
-
-    @jax.jit
-    def _run(C, W, y, beta0):
-        return tron(lambda b: form.fgrad(C, W, y, b),
-                    lambda D, d: form.hessd(C, W, D, d), beta0, cfg)
-
-    stats = _run(C, W, y, beta0)
-    return NystromMachine(basis=basis, beta=stats.beta, kernel=kernel,
-                          stats=stats)
+    """Deprecated: use ``KernelMachine(MachineConfig(...)).fit(X, y, basis)``."""
+    from repro.api import KernelMachine, MachineConfig  # lazy: avoid cycle
+    warnings.warn("repro.core.solve is deprecated; use "
+                  "repro.api.KernelMachine", DeprecationWarning, stacklevel=2)
+    config = MachineConfig(
+        kernel=kernel, loss=loss_name(loss), lam=lam,
+        solver="tron", plan="local", tron=cfg, backend=backend)
+    km = KernelMachine(config).fit(X, y, basis, beta0=beta0)
+    return NystromMachine(basis=basis, beta=km.state_["beta"], kernel=kernel,
+                          stats=km.result_.tron)

@@ -1,21 +1,24 @@
-"""Stage-wise addition of basis points (paper §3, 'Stage-wise addition').
+"""DEPRECATED stage-wise driver — thin shim over KernelMachine.partial_fit.
 
-The advantage of formulation (4) the paper highlights: growing m needs no
-incremental SVD. We warm-start by zero-padding beta for the new points and
-only the new columns of C (and new rows/cols of W) are computed.
+Stage-wise basis addition (paper §3) now lives on the estimator: each
+``partial_fit(X, y, new_points)`` call zero-pads beta for the new points
+and recomputes only the new columns of C (and new blocks of W) under the
+``local`` plan. This module repackages that history as the legacy
+``StageResult`` list; ``loss`` accepts a name or a Loss object, matching
+every other entrypoint.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, List, Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.formulation import Formulation4
 from repro.core.losses import Loss
-from repro.core.nystrom import KernelSpec, gram
-from repro.core.tron import TronConfig, tron
+from repro.core.nystrom import KernelSpec
+from repro.core.solver import loss_name
+from repro.core.tron import TronConfig
 
 
 @dataclasses.dataclass
@@ -28,48 +31,29 @@ class StageResult:
 
 
 def stagewise_solve(X, y, basis_stages: List[jnp.ndarray], *, lam: float,
-                    loss: Loss, kernel: KernelSpec,
+                    loss: Loss | str, kernel: KernelSpec,
                     cfg: TronConfig = TronConfig(),
                     backend: str = "jnp",
                     callback: Optional[Callable] = None) -> List[StageResult]:
-    """Solve (4) with basis sets growing stage by stage.
+    """Deprecated: use ``KernelMachine(...).partial_fit`` per stage.
 
     ``basis_stages[k]`` holds only the points ADDED at stage k. Returns the
     per-stage results; beta of the final stage is the full solution.
-    Incrementality: stage k computes only gram(X, new) and the new W blocks.
     """
-    form = Formulation4(lam=lam, loss=loss)
+    from repro.api import KernelMachine, MachineConfig  # lazy: avoid cycle
+    warnings.warn("repro.core.stagewise_solve is deprecated; use "
+                  "repro.api.KernelMachine.partial_fit",
+                  DeprecationWarning, stacklevel=2)
+    config = MachineConfig(
+        kernel=kernel, loss=loss_name(loss), lam=lam,
+        solver="tron", plan="local", tron=cfg, backend=backend)
+    km = KernelMachine(config)
     results: List[StageResult] = []
-    C = None
-    W = None
-    beta = None
-
-    run = jax.jit(lambda C, W, y, b: tron(
-        lambda bb: form.fgrad(C, W, y, bb),
-        lambda D, d: form.hessd(C, W, D, d),
-        b, cfg))
-
-    basis_all = None
-    for stage, new_pts in enumerate(basis_stages):
-        C_new = gram(X, new_pts, kernel, backend)              # only new cols
-        if C is None:
-            C, W, basis_all = C_new, gram(new_pts, new_pts, kernel, backend), new_pts
-            beta = jnp.zeros((new_pts.shape[0],), X.dtype)
-        else:
-            W_cross = gram(basis_all, new_pts, kernel, backend)  # old x new
-            W_new = gram(new_pts, new_pts, kernel, backend)
-            W = jnp.block([[W, W_cross], [W_cross.T, W_new]])
-            C = jnp.concatenate([C, C_new], axis=1)
-            basis_all = jnp.concatenate([basis_all, new_pts], axis=0)
-            # warm start: old beta kept, new coordinates start at zero
-            beta = jnp.concatenate(
-                [beta, jnp.zeros((new_pts.shape[0],), beta.dtype)])
-
-        res = run(C, W, y, beta)
-        beta = res.beta
-        out = StageResult(m=int(basis_all.shape[0]), f=float(res.f),
-                          gnorm=float(res.gnorm), n_iter=int(res.n_iter),
-                          beta=beta)
+    for new_pts in basis_stages:
+        km.partial_fit(X, y, new_pts)
+        r = km.result_
+        out = StageResult(m=r.m, f=r.f, gnorm=r.gnorm, n_iter=r.n_iter,
+                          beta=km.state_["beta"])
         results.append(out)
         if callback is not None:
             callback(out)

@@ -1,12 +1,17 @@
-"""Distributed Nystrom kernel-machine training driver (the paper's system).
+"""Distributed Nystrom kernel-machine training driver (the paper's system),
+config-driven through the unified ``repro.api.KernelMachine``.
 
 Single-host CPU example (1 device -> trivial mesh):
   PYTHONPATH=src python -m repro.launch.kernel_train --dataset covtype \
-      --scale 0.01 --m 512 --strategy auto
+      --scale 0.01 --m 512 --basis auto --plan auto
 
 Multi-device simulation:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-  PYTHONPATH=src python -m repro.launch.kernel_train --mesh 4,2 ...
+  PYTHONPATH=src python -m repro.launch.kernel_train --mesh 4,2 --plan shard_map
+
+Any registered solver x plan combination is reachable from the CLI
+(--solver tron|linearized|rff|ppacksvm, --plan local|shard_map|auto|otf);
+--save writes a serving checkpoint for repro.launch.kernel_serve.
 """
 from __future__ import annotations
 
@@ -14,11 +19,12 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import (DistConfig, DistributedNystrom, KernelSpec,
-                        TronConfig, predict, select_basis)
+from repro.api import (KernelMachine, MachineConfig, available_plans,
+                       available_solvers, get_solver)
+from repro.core import KernelSpec, TronConfig, select_basis
+from repro.core.compat import make_mesh
 from repro.data import PAPER_DATASETS, make_dataset
 
 
@@ -27,17 +33,37 @@ def main():
     ap.add_argument("--dataset", default="covtype", choices=list(PAPER_DATASETS))
     ap.add_argument("--scale", type=float, default=0.01)
     ap.add_argument("--m", type=int, default=512)
-    ap.add_argument("--strategy", default="auto",
-                    choices=["auto", "random", "kmeans"])
+    ap.add_argument("--basis", default="auto",
+                    dest="strategy", choices=["auto", "random", "kmeans"])
     ap.add_argument("--mesh", default=None,
                     help="comma mesh shape, e.g. 4,2 -> (data, model)")
-    ap.add_argument("--mode", default="shard_map", choices=["shard_map", "auto"])
-    ap.add_argument("--no-materialize", action="store_true",
-                    help="recompute C on the fly (kernel-caching mode)")
+    ap.add_argument("--solver", default="tron", choices=available_solvers())
+    ap.add_argument("--plan", default="shard_map", choices=available_plans())
     ap.add_argument("--max-iter", type=int, default=200)
     ap.add_argument("--lam", type=float, default=None)
     ap.add_argument("--sigma", type=float, default=None)
+    ap.add_argument("--save", default=None,
+                    help="checkpoint path for repro.launch.kernel_serve")
     args = ap.parse_args()
+
+    if args.mesh:
+        shape = tuple(int(v) for v in args.mesh.split(","))
+        names = ("data", "model")[: len(shape)]
+    else:
+        shape, names = (len(jax.devices()),), ("data",)
+    mesh = make_mesh(shape, names)
+    model_axis = "model" if "model" in mesh.shape else None
+    needs_basis = get_solver(args.solver).needs_basis
+
+    def build_config(lam, sigma, m):
+        return MachineConfig(
+            kernel=KernelSpec("gaussian", sigma=sigma), lam=lam,
+            solver=args.solver, plan=args.plan,
+            tron=TronConfig(max_iter=args.max_iter),
+            rff_features=m, model_axis=model_axis)
+
+    # fail on an invalid solver/plan pair before any data work
+    KernelMachine(build_config(1.0, 1.0, args.m), mesh=mesh)
 
     t0 = time.time()
     X, y, Xt, yt, spec = make_dataset(args.dataset, jax.random.PRNGKey(0),
@@ -47,49 +73,39 @@ def main():
     print(f"[step1] loaded {args.dataset}: n={X.shape[0]} d={X.shape[1]} "
           f"({time.time() - t0:.2f}s)")
 
-    if args.mesh:
-        shape = tuple(int(v) for v in args.mesh.split(","))
-        names = ("data", "model")[: len(shape)]
-        mesh = jax.make_mesh(shape, names,
-                             axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
-    else:
-        mesh = jax.make_mesh((len(jax.devices()),), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
-
     # keep shard sizes divisible
     n_dp = mesh.shape["data"]
     n = (X.shape[0] // (n_dp * 8)) * n_dp * 8
-    m = (args.m // max(n_dp * (mesh.shape.get("model", 1)), 1)) * \
-        max(n_dp * mesh.shape.get("model", 1), 1)
+    per = max(n_dp * mesh.shape.get("model", 1), 1)
+    m = (args.m // per) * per
     X, y = X[:n], y[:n]
     Xs = jax.device_put(X, NamedSharding(mesh, P(("data",), None)))
     ys = jax.device_put(y, NamedSharding(mesh, P(("data",))))
 
+    basis = None
+    if needs_basis:
+        t0 = time.time()
+        basis = select_basis(jax.random.PRNGKey(1), Xs, m,
+                             strategy=args.strategy, mesh=mesh,
+                             data_axes=("data",))
+        basis.block_until_ready()
+        print(f"[step2] basis: m={m} strategy={args.strategy} "
+              f"({time.time() - t0:.2f}s)")
+
+    km = KernelMachine(build_config(lam, sigma, m), mesh=mesh)
+
     t0 = time.time()
-    basis = select_basis(jax.random.PRNGKey(1), Xs, m, strategy=args.strategy,
-                         mesh=mesh, data_axes=("data",))
-    basis.block_until_ready()
-    print(f"[step2] basis: m={m} strategy={args.strategy} "
+    km.fit(Xs, ys, basis)
+    jax.block_until_ready(km.state_["beta"])
+    r = km.result_
+    print(f"[step3+4] {r.solver}/{r.plan}: f={r.f:.4f} iters={r.n_iter} "
+          f"fg={r.n_fg} hd={r.n_hd} converged={r.converged} "
           f"({time.time() - t0:.2f}s)")
 
-    kern = KernelSpec("gaussian", sigma=sigma)
-    dc = DistConfig(data_axes=("data",),
-                    model_axis="model" if "model" in mesh.shape else None,
-                    mode=args.mode, materialize=not args.no_materialize)
-    solver = DistributedNystrom(mesh, lam, "squared_hinge", kern, dc)
-
-    t0 = time.time()
-    res = solver.solve(Xs, ys, basis, cfg=TronConfig(max_iter=args.max_iter))
-    res.beta.block_until_ready()
-    print(f"[step3+4] kernel+TRON: f={float(res.f):.4f} iters={int(res.n_iter)} "
-          f"fg={int(res.n_fg)} hd={int(res.n_hd)} converged="
-          f"{bool(res.converged)} ({time.time() - t0:.2f}s)")
-
-    o = predict(Xt, basis, res.beta, kern)
-    acc = float(jnp.mean(jnp.sign(o) == yt))
-    otr = predict(X, basis, res.beta, kern)
-    acc_tr = float(jnp.mean(jnp.sign(otr) == y))
-    print(f"[eval ] train_acc={acc_tr:.4f} test_acc={acc:.4f}")
+    print(f"[eval ] train_acc={km.score(X, y):.4f} "
+          f"test_acc={km.score(Xt, yt):.4f}")
+    if args.save:
+        print(f"[save ] {km.save(args.save)}")
 
 
 if __name__ == "__main__":

@@ -14,6 +14,8 @@ import math
 
 import jax
 
+from repro.core.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -25,12 +27,10 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"need {n} devices for {'multi-pod' if multi_pod else 'single-pod'} "
             f"mesh, have {len(devs)} — run under "
             f"XLA_FLAGS=--xla_force_host_platform_device_count=512")
-    return jax.make_mesh(shape, axes, devices=devs[:n],
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes, devices=devs[:n])
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh over however many devices the test host exposes."""
     n = math.prod(shape)
-    return jax.make_mesh(shape, axes, devices=jax.devices()[:n],
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes, devices=jax.devices()[:n])

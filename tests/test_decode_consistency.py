@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # ~3 min of per-arch decode loops on CPU
+
 from repro.configs import ARCHS
 from repro.models import encdec as encdec_mod
 from repro.models import transformer as lm_mod

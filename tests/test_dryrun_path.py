@@ -8,6 +8,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # 8-fake-device subprocess, minutes of compiles
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -23,8 +25,9 @@ from repro.sharding.ctx import use_shard_hints
 from repro.sharding.partitioning import batch_specs, cache_pspecs, param_specs
 from repro.train.steps import make_serve_step, make_train_step
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.core import compat
+from repro.core.compat import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 out = {}
 for name in ("tinyllama-1.1b", "mamba2-1.3b", "grok-1-314b",
              "deepseek-v2-236b", "whisper-small"):
@@ -50,7 +53,7 @@ for name in ("tinyllama-1.1b", "mamba2-1.3b", "grok-1-314b",
                           donate_argnums=(0, 1)).lower(
             params_sds, opt_sds, batch_sds)
         compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = compat.cost_analysis(compiled)
     # decode path
     dshape = ShapeSpec("d", 64, 8, "decode")
     cache_sds = cache_specs(cfg, dshape)

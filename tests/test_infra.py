@@ -96,9 +96,8 @@ def test_sharding_rules_cover_all_model_axes():
 
 
 def test_spec_for_axes_fsdp_resolution():
-    import jax as _jax
-    mesh = _jax.make_mesh((1, 1), ("data", "model"),
-                          axis_types=(_jax.sharding.AxisType.Auto,) * 2)
+    from repro.core.compat import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     spec = spec_for_axes(("embed", "ffn"), mesh)
     assert spec == jax.sharding.PartitionSpec(("data",), "model")
 

@@ -1,4 +1,8 @@
 """Hypothesis property tests on system invariants."""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dependency: property tests need hypothesis")
 import hypothesis
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
