@@ -1,0 +1,116 @@
+"""Peak-memory + step-time comparison: shard_map vs otf vs otf_shard at
+growing basis size m — the scale axis the fused plan exists to unlock.
+
+For each plan at each m this measures, per device:
+  * peak_intermediate_bytes — largest array the f/g + 3xHd TRON-iteration
+    mix materializes (jaxpr shape instrumentation, per-shard avals; the
+    quantity that OOMs). For materialized plans the resident (C, W) shards
+    are added on top — they live for the whole solve.
+  * step_s — wall-clock for one jitted iteration mix at the reduced CPU
+    scale of this container (relative numbers; absolute speed needs TPU).
+
+BENCH json (benchmarks/results/kernel_machine/otf_shard_mem_m{m}_{plan}
+.json) gains the memory axis: {"m", "plan", "peak_intermediate_bytes",
+"resident_cw_bytes", "step_s", "n", "d", "p"}.
+
+Run:  PYTHONPATH=src python -m benchmarks.otf_shard_memory [--devices 8]
+"""
+import argparse
+import os
+
+parser = argparse.ArgumentParser()
+parser.add_argument("--devices", type=int, default=8)
+parser.add_argument("--n", type=int, default=4096)
+parser.add_argument("--d", type=int, default=32)
+parser.add_argument("--ms", type=int, nargs="*", default=[128, 256, 512, 1024])
+args = parser.parse_args()
+# append (not setdefault): a user-set XLA_FLAGS must not silently disable
+# the forced device count --devices asked for
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") +
+    f" --xla_force_host_platform_device_count={args.devices}").strip()
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import DistConfig, DistributedNystrom, KernelSpec
+from repro.core.compat import make_mesh
+from repro.core.introspect import max_intermediate_elems
+
+RESULTS = Path(__file__).resolve().parent / "results" / "kernel_machine"
+
+PLANS = {
+    "shard_map": dict(materialize=True),
+    "otf": dict(materialize=False),
+    "otf_shard": dict(materialize=False, fused=True),
+}
+
+
+def iteration_mix(solver, X, y, basis, materialize):
+    """f/g + 3 Hd — the paper's per-TRON-iteration evaluation mix."""
+    if materialize:
+        C, W = solver.precompute(X, basis)
+        fgrad, hessd = solver.make_closures(C, W, y)
+    elif solver.dist.fused:
+        fgrad, hessd = solver.make_fused_closures(X, y, basis)
+    else:
+        fgrad, hessd = solver.make_otf_closures(X, y, basis)
+
+    def step(b):
+        f, g, D = fgrad(b)
+        h = hessd(D, g)
+        h = hessd(D, h)
+        h = hessd(D, h)
+        return f, g + h
+
+    return step
+
+
+def main():
+    p = args.devices
+    n, d = args.n, args.d
+    mesh = make_mesh((p,), ("data",))
+    kern = KernelSpec("gaussian", sigma=4.0)
+    key = jax.random.PRNGKey(0)
+    X = jax.random.normal(key, (n, d))
+    y = jnp.sign(jax.random.normal(jax.random.PRNGKey(1), (n,)))
+    Xs = jax.device_put(X, NamedSharding(mesh, P(("data",), None)))
+    ys = jax.device_put(y, NamedSharding(mesh, P(("data",))))
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    print(f"n={n} d={d} p={p}  (per-shard rows: {n // p})")
+    print("| m | plan | peak intermediate / dev | resident C,W / dev | step_s |")
+    print("|---|------|-------------------------|--------------------|--------|")
+    for m in args.ms:
+        basis = jax.random.normal(jax.random.PRNGKey(2), (m, d))
+        for plan, kw in PLANS.items():
+            dc = DistConfig(data_axes=("data",), **kw)
+            solver = DistributedNystrom(mesh, 0.5, "squared_hinge", kern, dc)
+            step = iteration_mix(solver, Xs, ys, basis, kw.get("materialize"))
+            b0 = jnp.zeros((m,), jnp.float32)
+            with mesh:
+                peak = max_intermediate_elems(step, b0) * 4
+                run = jax.jit(step)
+                jax.block_until_ready(run(b0))          # compile
+                t0 = time.perf_counter()
+                jax.block_until_ready(run(b0))
+                dt = time.perf_counter() - t0
+            # precompute shards C as (n/p, m) and W as (m/p, m) per device
+            resident = ((n // p) * m + (m // p) * m) * 4 if kw.get(
+                "materialize") else 0
+            print(f"| {m} | {plan} | {peak / 2**20:.2f} MiB "
+                  f"| {resident / 2**20:.2f} MiB | {dt:.4f} |", flush=True)
+            (RESULTS / f"otf_shard_mem_m{m}_{plan}.json").write_text(
+                json.dumps({"n": n, "d": d, "p": p, "m": m, "plan": plan,
+                            "peak_intermediate_bytes": peak,
+                            "resident_cw_bytes": resident,
+                            "step_s": round(dt, 5)}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

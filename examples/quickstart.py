@@ -1,7 +1,7 @@
 """Quickstart: train a Nystrom kernel SVM through the unified KernelMachine
 estimator on synthetic covtype-like data — the paper's end-to-end driver.
 The solver (TRON on formulation (4)) and execution plan (local | shard_map |
-auto | otf) are config fields, not code paths; swap them freely.
+auto | otf | otf_shard) are config fields, not code paths; swap them freely.
 
   PYTHONPATH=src python examples/quickstart.py
 """

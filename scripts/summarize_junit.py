@@ -1,0 +1,83 @@
+"""Per-test-file pass/fail summary + duration gate for scripts/verify.sh.
+
+Reads a pytest --junitxml report, prints one table row per test file, and
+exits nonzero when (a) any test failed/errored, or (b) --max-seconds > 0
+and any single test exceeded it. The duration gate is how the fast gate
+stays fast: a test that belongs in the slow suite but forgot its
+``@pytest.mark.slow`` fails verification instead of silently dragging the
+inner loop past the budget.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import xml.etree.ElementTree as ET
+from collections import defaultdict
+
+
+def file_key(case) -> str:
+    # xunit2 has no file attr; classname looks like tests.test_kernels[.Cls]
+    f = case.get("file")
+    if f:
+        return f
+    parts = (case.get("classname") or "?").split(".")
+    for p in parts:
+        if p.startswith("test_"):
+            return p + ".py"
+    return ".".join(parts) or "?"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("junit_xml")
+    ap.add_argument("--max-seconds", type=float, default=60.0,
+                    help="fail any single test over this; 0 disables "
+                         "(the slow suite)")
+    args = ap.parse_args()
+
+    tree = ET.parse(args.junit_xml)
+    per_file = defaultdict(lambda: {"pass": 0, "fail": 0, "skip": 0,
+                                    "time": 0.0, "worst": ("", 0.0)})
+    over_budget = []
+    for case in tree.iter("testcase"):
+        row = per_file[file_key(case)]
+        t = float(case.get("time") or 0.0)
+        row["time"] += t
+        name = case.get("name", "?")
+        if t > row["worst"][1]:
+            row["worst"] = (name, t)
+        if case.find("failure") is not None or case.find("error") is not None:
+            row["fail"] += 1
+        elif case.find("skipped") is not None:
+            row["skip"] += 1
+        else:
+            row["pass"] += 1
+        if args.max_seconds > 0 and t > args.max_seconds:
+            over_budget.append((file_key(case), name, t))
+
+    width = max([len(f) for f in per_file] + [10])
+    print(f"{'file':<{width}}  {'pass':>5} {'fail':>5} {'skip':>5} "
+          f"{'time':>8}  slowest")
+    failed = 0
+    for f in sorted(per_file):
+        r = per_file[f]
+        failed += r["fail"]
+        status = "FAIL" if r["fail"] else "ok"
+        print(f"{f:<{width}}  {r['pass']:>5} {r['fail']:>5} {r['skip']:>5} "
+              f"{r['time']:>7.1f}s  {r['worst'][0]} ({r['worst'][1]:.1f}s) "
+              f"[{status}]")
+
+    rc = 0
+    if failed:
+        print(f"SUMMARY: {failed} test(s) failed", file=sys.stderr)
+        rc = 1
+    for f, name, t in over_budget:
+        print(f"SUMMARY: {f}::{name} took {t:.1f}s > "
+              f"{args.max_seconds:.0f}s budget — mark it @pytest.mark.slow "
+              f"or make it faster", file=sys.stderr)
+        rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,20 +7,50 @@
 # The fast gate is what you run in the inner loop (a couple of minutes);
 # the slow marker holds the 8-fake-device subprocess suites
 # (test_distributed, test_dryrun_path, test_decode_consistency).
-set -euo pipefail
+#
+# Each pytest run ends with a per-test-file pass/fail summary table
+# (scripts/summarize_junit.py); any slow-unmarked test exceeding the 60s
+# budget fails the gate so the fast path stays fast.
+set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 export JAX_PLATFORMS=${JAX_PLATFORMS:-cpu}
 
+tmp="$(mktemp -d)"
+trap 'rm -rf "$tmp"' EXIT
+status=0
+
+run_suite() {   # run_suite <label> <marker-expr> <per-test-budget-seconds>
+    local label="$1" marker="$2" budget="$3"
+    local xml="$tmp/$label.xml"
+    echo "== $label: pytest -m \"$marker\" =="
+    python -m pytest -x -q -m "$marker" --junitxml="$xml" || status=1
+    if [[ -f "$xml" ]]; then
+        python scripts/summarize_junit.py "$xml" --max-seconds "$budget" \
+            || status=1
+    else
+        echo "no junit report produced for $label" >&2
+        status=1
+    fi
+}
+
 if [[ "${1:-}" == "--full" ]]; then
-    echo "== tier-1: full pytest suite =="
-    python -m pytest -x -q
+    run_suite "fast suite" "not slow" 60
+    run_suite "slow suite" "slow" 0
 else
-    echo "== fast gate: pytest -m 'not slow' =="
-    python -m pytest -x -q -m "not slow"
+    run_suite "fast gate" "not slow" 60
+fi
+
+if [[ "$status" -ne 0 ]]; then
+    echo "== verify FAILED (skipping smoke) =="
+    exit "$status"
 fi
 
 echo "== API smoke: train -> save -> load -> serve =="
-python -m repro.launch.kernel_serve --selftest
+python -m repro.launch.kernel_serve --selftest || status=1
 
+if [[ "$status" -ne 0 ]]; then
+    echo "== verify FAILED =="
+    exit "$status"
+fi
 echo "== verify OK =="

@@ -2,7 +2,8 @@
 
 One config-driven estimator over formulation (4) with two registries:
 solvers (tron | linearized | rff | ppacksvm) and execution plans
-(local | shard_map | auto | otf). See repro.api.machine for the tour.
+(local | shard_map | auto | otf | otf_shard). See repro.api.machine for
+the tour.
 """
 from repro.api.config import MachineConfig
 from repro.api.result import FitResult

@@ -28,8 +28,9 @@ class MachineConfig:
     lam: float = 1.0
     solver: str = "tron"               # tron | linearized | rff | ppacksvm
     plan: str = "local"                # local | shard_map | auto | otf
+                                       #   | otf_shard
     tron: TronConfig = TronConfig()
-    backend: str = "jnp"               # gram backend: jnp | pallas
+    backend: str = "jnp"               # gram/kmvp backend: jnp | pallas
     seed: int = 0                      # rff draw / ppacksvm shuffle / basis pick
 
     # basis selection when fit() is called without an explicit basis
@@ -44,7 +45,11 @@ class MachineConfig:
 
     # execution-plan knobs (distributed plans)
     data_axes: Tuple[str, ...] = ("data",)
-    model_axis: Optional[str] = None
+    model_axis: Optional[str] = None   # column partition; otf_shard: must be
+                                       # None (rows-only fused plan)
+    otf_block_rows: Optional[int] = None  # otf_shard jnp-fallback row-chunk;
+                                          # None -> per-shard-n heuristic
+                                          # (kernels.ops.otf_block_rows)
 
     def __post_init__(self):
         get_loss(self.loss)  # fail fast on unknown loss names

@@ -12,13 +12,28 @@ they got:
                   per paper step, via DistributedNystrom(mode="shard_map").
 * ``auto``      — same math under jit with sharded operands; XLA SPMD picks
                   the collective schedule.
-* ``otf``       — compute-on-the-fly: C is never stored, every f/g/Hd
-                  recomputes its gram tiles (optionally the Pallas fused
-                  kmvp path via ``config.backend="pallas"``).
+* ``otf``       — compute-on-the-fly: C is never *stored*, but each f/g/Hd
+                  evaluation still rebuilds a transient (n/p, m) gram block
+                  per shard before contracting it.
+* ``otf_shard`` — mesh-sharded fully-fused on-the-fly: rows of X over the
+                  data axes, full basis replicated; C beta / C^T D r / W
+                  contractions run through the fused kmvp path (Pallas VMEM
+                  tiles via ``config.backend="pallas"``, row-chunked jnp
+                  recomputation otherwise), so no (n/p, m) array ever
+                  exists on any device and each evaluation AllReduces one
+                  m-vector. Memory/flops/communication per f/g/Hd call:
+
+                  plan        C bytes/device   extra flops    comms/eval
+                  ----------  ---------------  -------------  -----------
+                  shard_map   4 n m / p        0              O(m)
+                  otf         4 n m / p (peak) O(n m d / p)   O(m)
+                  otf_shard   tile (VMEM)      O(n m d / p)   O(m)
 
 Distributed plans run on ``mesh`` (or a default all-devices data mesh) and
 require n and m divisible by the data-axis extent — checked here with a
-readable error instead of a shard_map trace failure.
+readable error instead of a shard_map trace failure. ``otf_shard`` shards
+rows only (``model_axis`` must be None) and is validated by shape
+instrumentation in tests: no intermediate reaches n/p x m elements.
 """
 from __future__ import annotations
 
@@ -82,12 +97,14 @@ def _check_divisible(config, mesh, n: int, m: int, plan: str):
 
 
 def _distributed(config, mesh, X, y, basis, beta0, *, mode: str,
-                 materialize: bool, plan: str) -> TronResult:
+                 materialize: bool, plan: str,
+                 fused: bool = False) -> TronResult:
     mesh = _resolve_mesh(config, mesh)
     _check_divisible(config, mesh, X.shape[0], basis.shape[0], plan)
     dc = DistConfig(data_axes=config.data_axes, model_axis=config.model_axis,
                     mode=mode, materialize=materialize,
-                    backend=config.backend)
+                    backend=config.backend, fused=fused,
+                    block_rows=config.otf_block_rows)
     solver = DistributedNystrom(mesh, config.lam, config.loss, config.kernel,
                                 dc)
     return solver.solve(X, y, basis, beta0=beta0, cfg=config.tron)
@@ -112,3 +129,17 @@ def plan_otf(config, mesh, X, y, basis, beta0, CW=None) -> TronResult:
     del CW  # the whole point: C is never materialized
     return _distributed(config, mesh, X, y, basis, beta0,
                         mode="shard_map", materialize=False, plan="otf")
+
+
+@register_plan("otf_shard")
+def plan_otf_shard(config, mesh, X, y, basis, beta0, CW=None) -> TronResult:
+    del CW  # no (n/p, m) block exists to cache, let alone (C, W)
+    if config.model_axis is not None:
+        raise ValueError(
+            "plan 'otf_shard' shards rows only: the fused kmvp kernels "
+            "contract over all basis columns in VMEM, so a model_axis "
+            "column partition does not apply; set model_axis=None (or use "
+            "plan 'otf' for the 2-D on-the-fly partition)")
+    return _distributed(config, mesh, X, y, basis, beta0,
+                        mode="shard_map", materialize=False,
+                        plan="otf_shard", fused=True)

@@ -11,9 +11,12 @@ what goes through ``repro.checkpoint`` on save/load:
     ppacksvm          : {"basis": (n, d), "beta": (n,)}   (support = X train)
 
 Plan validity is the mathematically honest set. ``tron`` runs under every
-plan (the paper's claim). ``rff`` also runs under every plan via the exact
-reduction phi(X) -> linear-kernel machine with identity basis (C = phi(X),
-W = I is formulation (4) verbatim). ``linearized`` is pinned to ``local``:
+plan (the paper's claim), including the fused ``otf_shard``. ``rff`` also
+runs under every plan via the exact reduction phi(X) -> linear-kernel
+machine with identity basis (C = phi(X), W = I is formulation (4)
+verbatim; under ``otf_shard`` the fused linear kmvp contracts phi(X)
+blocks against the identity basis without materializing them).
+``linearized`` is pinned to ``local``:
 its O(m^3) eigendecomposition is the inherently-serial step the paper
 argues against. ``ppacksvm`` is pinned to ``local``: sequential SGD with
 O(n/r) communication rounds has no honest mapping onto the fused-loop plans.
@@ -56,7 +59,8 @@ def _decision_rff(config, state, X, backend: Optional[str] = None):
 
 
 # -------------------------------------------------------------------- solvers
-@register_solver("tron", plans={"local", "shard_map", "auto", "otf"},
+@register_solver("tron",
+                 plans={"local", "shard_map", "auto", "otf", "otf_shard"},
                  grows=True, needs_basis=True, decision=_decision_nystrom)
 def fit_tron(config, X, y, basis, beta0=None, *, mesh=None, plan=None,
              key=None, CW=None):
@@ -93,7 +97,8 @@ def fit_linearized(config, X, y, basis, beta0=None, *, mesh=None, plan=None,
                                       extras=extras)
 
 
-@register_solver("rff", plans={"local", "shard_map", "auto", "otf"},
+@register_solver("rff",
+                 plans={"local", "shard_map", "auto", "otf", "otf_shard"},
                  decision=_decision_rff)
 def fit_rff(config, X, y, basis=None, beta0=None, *, mesh=None, plan=None,
             key=None, CW=None):

@@ -20,6 +20,11 @@ Three execution modes:
   * ``materialize=False`` — C is never stored: every f/g/Hd recomputes its
     C tiles on the fly (paper §3.1 "kernel caching / compute on the fly",
     adapted to TPU by fusing gram+matvec; optionally the Pallas kmvp kernel).
+  * ``materialize=False, fused=True`` — the ``otf_shard`` plan: even the
+    per-shard (n/p, m) block is never allocated; C beta, C^T D r, and W
+    contractions all go through the fused kmvp path (Pallas VMEM tiles on
+    TPU, row-chunked jnp recomputation elsewhere), and each f/g/Hd call
+    AllReduces exactly one m-vector of partials.
 
 beta (and CG direction d) are replicated, matching the paper ("beta is
 broadcast to all nodes"); every m-vector reduction is a single psum.
@@ -47,6 +52,10 @@ class DistConfig:
     mode: str = "shard_map"            # shard_map | auto
     materialize: bool = True           # store C, or recompute on the fly
     backend: str = "jnp"               # gram backend: jnp | pallas
+    fused: bool = False                # materialize=False only: fuse gram into
+                                       # the matvec (kmvp) so not even the
+                                       # per-shard C block is ever allocated
+    block_rows: Optional[int] = None   # fused jnp fallback row-chunk override
 
 
 def _dp_index(data_axes):
@@ -218,6 +227,84 @@ class DistributedNystrom:
         hessd = lambda D, d: hd_body(X, y, basis, D, d)
         return fgrad, hessd
 
+    # ---------------------------------------- fused on-the-fly (otf_shard)
+    def make_fused_closures(self, X, y, basis):
+        """(fgrad, hessd) where not even the per-shard C block exists.
+
+        The non-fused on-the-fly path (:meth:`make_otf_closures`) rebuilds
+        a full (n/p, m) gram block per evaluation; here every C (and W)
+        contraction goes through the fused kmvp path — Pallas VMEM tiles
+        on TPU, row-chunked recomputation under the jnp fallback — and the
+        only cross-device traffic is one m-vector psum per f/g/Hd call
+        (plus a 2-scalar psum for the objective pieces): O(m) bytes,
+        O(n m d / p) flops recomputed per evaluation.
+
+        Rows-only partition: the fused kernels contract over full basis
+        columns, so a ``model_axis`` column split does not apply here.
+        """
+        if self.dist.model_axis is not None:
+            raise ValueError(
+                "fused on-the-fly mode shards rows only (the kmvp kernels "
+                "contract over all basis columns in VMEM); use "
+                "model_axis=None, or the non-fused materialize=False mode "
+                "for the 2-D partition")
+        from repro.kernels.ops import otf_kmvp_fwd, otf_kmvp_t
+        m = basis.shape[0]
+        da = self.dist.data_axes
+        kw = dict(kind=self.kernel.kind, sigma=self.kernel.sigma,
+                  backend=self.dist.backend,
+                  block_rows=self.dist.block_rows)
+
+        def _w_rows_slice(basis):
+            """(row0, basis row-block) this device owns for W contractions."""
+            dp_total = 1
+            for ax in da:
+                dp_total *= axis_size(ax)
+            m_dp = m // dp_total
+            row0 = _dp_index(da) * m_dp
+            return row0, m_dp, jax.lax.dynamic_slice_in_dim(
+                basis, row0, m_dp, 0)
+
+        def fg_local(Xl, yl, basis, beta):
+            row0, m_dp, basis_rows = _w_rows_slice(basis)
+            o = otf_kmvp_fwd(Xl, basis, beta, **kw)               # C_l beta
+            Wb_rows = otf_kmvp_fwd(basis_rows, basis, beta, **kw)  # (m_dp,)
+            beta_rows = jax.lax.dynamic_slice(beta, (row0,), (m_dp,))
+            reg_part = beta_rows @ Wb_rows
+            loss_part = jnp.sum(self.loss.value(o, yl))
+            reg, lsum = _psum_dp(jnp.stack([reg_part, loss_part]), da)
+            f = 0.5 * self.lam * reg + lsum
+
+            r = self.loss.grad(o, yl)
+            g_loss = otf_kmvp_t(Xl, basis, r, **kw)               # C_l^T r
+            g_local = jax.lax.dynamic_update_slice(
+                jnp.zeros((m,), beta.dtype), self.lam * Wb_rows, (row0,))
+            g = _psum_dp(g_local + g_loss.astype(beta.dtype), da)  # 1 psum
+            return f, g, self.loss.diag(o, yl)
+
+        def hd_local(Xl, yl, basis, D, d):
+            del yl
+            row0, m_dp, basis_rows = _w_rows_slice(basis)
+            o = otf_kmvp_fwd(Xl, basis, d, **kw)                  # C_l d
+            Wd_rows = otf_kmvp_fwd(basis_rows, basis, d, **kw)
+            h_loss = otf_kmvp_t(Xl, basis, D * o, **kw)           # C_l^T(D o)
+            h_local = jax.lax.dynamic_update_slice(
+                jnp.zeros((m,), d.dtype), self.lam * Wd_rows, (row0,))
+            return _psum_dp(h_local + h_loss.astype(d.dtype), da)  # 1 psum
+
+        smap = partial(shard_map, mesh=self.mesh, check_vma=False)
+        fg_body = smap(fg_local,
+                       in_specs=(self.x_spec, self.row_spec, self.rep_spec,
+                                 self.rep_spec),
+                       out_specs=(self.rep_spec, self.rep_spec, self.row_spec))
+        hd_body = smap(hd_local,
+                       in_specs=(self.x_spec, self.row_spec, self.rep_spec,
+                                 self.row_spec, self.rep_spec),
+                       out_specs=self.rep_spec)
+        fgrad = lambda beta: fg_body(X, y, basis, beta)
+        hessd = lambda D, d: hd_body(X, y, basis, D, d)
+        return fgrad, hessd
+
     def make_closures(self, C, W, y):
         """(fgrad, hessd) closures over sharded C, W, y for TRON."""
         da, ma = self.dist.data_axes, self.dist.model_axis
@@ -256,6 +343,8 @@ class DistributedNystrom:
         if self.dist.materialize:
             C, W = self.precompute(X, basis)
             fgrad, hessd = self.make_closures(C, W, y)
+        elif self.dist.fused:
+            fgrad, hessd = self.make_fused_closures(X, y, basis)
         else:
             fgrad, hessd = self.make_otf_closures(X, y, basis)
         if beta0 is None:

@@ -1,0 +1,91 @@
+"""Jaxpr shape instrumentation: *prove* what a plan materializes.
+
+The on-the-fly plans claim the (n x m) kernel block C never exists in
+device memory. A claim in a docstring rots; this module lets tests (and
+benchmarks) assert it mechanically: trace a function to its jaxpr and
+report the largest intermediate array any equation produces, recursing
+into pjit / scan / while / cond / shard_map sub-jaxprs.
+
+Two deliberate scoping rules:
+
+* Inputs (invars / constvars) are not intermediates — X itself is (n, d)
+  and a materialized C passed *into* a closure is the caller's problem.
+  Only equation outputs count: arrays the traced computation allocates.
+* ``pallas_call`` equations count their HBM outputs but are not entered:
+  inside the kernel, refs live in VMEM tiles by construction, which is
+  exactly the memory the fused path is allowed to use.  Everything the
+  kernel returns to HBM still shows up as the call's outvars.
+
+Shard-mapped bodies are walked with their *per-shard* avals, so the bound
+checked for a distributed plan is per-device — the quantity that OOMs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Iterator
+
+import jax
+
+
+def _aval_elems(var) -> int:
+    aval = getattr(var, "aval", None)
+    shape = getattr(aval, "shape", None)
+    if shape is None:
+        return 0
+    try:
+        return int(math.prod(shape))
+    except TypeError:       # symbolic dims: not our use case, don't crash
+        return 0
+
+
+def _subjaxprs(params: dict) -> Iterator[Any]:
+    """Yield every (Closed)Jaxpr reachable from an eqn's params."""
+    for v in params.values():
+        stack = [v]
+        while stack:
+            item = stack.pop()
+            if hasattr(item, "jaxpr") and hasattr(item.jaxpr, "eqns"):
+                yield item.jaxpr            # ClosedJaxpr
+            elif hasattr(item, "eqns"):
+                yield item                  # raw Jaxpr
+            elif isinstance(item, (tuple, list)):
+                stack.extend(item)
+
+
+def max_intermediate_elems_jaxpr(jaxpr) -> int:
+    """Largest eqn-output element count anywhere in ``jaxpr`` (recursive)."""
+    worst = 0
+    for eqn in jaxpr.eqns:
+        for var in eqn.outvars:
+            worst = max(worst, _aval_elems(var))
+        if "pallas" in eqn.primitive.name:
+            continue    # kernel internals are VMEM tiles, not HBM arrays
+        for sub in _subjaxprs(eqn.params):
+            worst = max(worst, max_intermediate_elems_jaxpr(sub))
+    return worst
+
+
+def max_intermediate_elems(fn: Callable, *args, **kwargs) -> int:
+    """Trace ``fn(*args, **kwargs)`` and return the largest intermediate
+    array (in elements) the computation materializes. Arguments may be
+    arrays or ShapeDtypeStructs; nothing is executed."""
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return max_intermediate_elems_jaxpr(closed.jaxpr)
+
+
+def assert_max_intermediate_below(fn: Callable, limit_elems: int,
+                                  *args, **kwargs) -> int:
+    """Raise if any intermediate of ``fn`` reaches ``limit_elems``.
+
+    Returns the measured maximum so callers can report it. This is the
+    enforcement behind the ``otf``/``otf_shard`` memory contract: pass
+    ``limit_elems = n_shard * m`` to assert the per-device C block is
+    never allocated.
+    """
+    got = max_intermediate_elems(fn, *args, **kwargs)
+    if got >= limit_elems:
+        raise AssertionError(
+            f"intermediate of {got} elements >= limit {limit_elems}: "
+            f"the traced computation materializes an array the caller "
+            f"declared forbidden (C block?)")
+    return got

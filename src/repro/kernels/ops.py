@@ -25,11 +25,20 @@ def _round_up(v: int, mult: int) -> int:
     return ((v + mult - 1) // mult) * mult
 
 
-def _block(size: int, want: int, align: int) -> int:
-    """Largest aligned block <= want that keeps padding small for tiny sizes."""
+def _block(size: int, want: int, align: int, interpret: bool = False) -> int:
+    """Largest aligned block <= want that keeps padding small for tiny sizes.
+
+    Off-TPU (``interpret``) there is no tiling constraint, so a tiny input
+    uses its exact size as the block: a 1-row input must not round up to a
+    full alignment block (8x wasted rows, 128x wasted lanes for the m/d
+    dims). On hardware the minimum legal block is one alignment unit, but
+    never more than ``want`` even when ``align > want``.
+    """
     if size >= want:
         return want
-    return _round_up(size, align)
+    if interpret:
+        return size
+    return min(_round_up(size, align), max(want, align))
 
 
 def _pad_rows(a, to):
@@ -52,9 +61,9 @@ def gram(x, z, *, kind: str = "gaussian", sigma: float = 1.0,
         interpret = _interpret_default()
     n, d = x.shape
     m = z.shape[0]
-    bn = _block(n, bn, 8)
-    bm = _block(m, bm, 128)
-    bd = _block(d, bd, 128)
+    bn = _block(n, bn, 8, interpret)
+    bm = _block(m, bm, 128, interpret)
+    bd = _block(d, bd, 128, interpret)
     np_, mp_, dp_ = _round_up(n, bn), _round_up(m, bm), _round_up(d, bd)
     xp = _pad_cols(_pad_rows(x, np_), dp_)
     zp = _pad_cols(_pad_rows(z, mp_), dp_)
@@ -73,9 +82,9 @@ def kmvp_fwd(x, z, beta, *, kind: str = "gaussian", sigma: float = 1.0,
         interpret = _interpret_default()
     n, d = x.shape
     m = z.shape[0]
-    bn = _block(n, bn, 8)
-    bm = _block(m, bm, 128)
-    bd = _block(d, bd, 128)
+    bn = _block(n, bn, 8, interpret)
+    bm = _block(m, bm, 128, interpret)
+    bd = _block(d, bd, 128, interpret)
     np_, mp_, dp_ = _round_up(n, bn), _round_up(m, bm), _round_up(d, bd)
     xp = _pad_cols(_pad_rows(x, np_), dp_)
     zp = _pad_cols(_pad_rows(z, mp_), dp_)
@@ -95,9 +104,9 @@ def kmvp_t(x, z, v, *, kind: str = "gaussian", sigma: float = 1.0,
         interpret = _interpret_default()
     n, d = x.shape
     m = z.shape[0]
-    bn = _block(n, bn, 8)
-    bm = _block(m, bm, 128)
-    bd = _block(d, bd, 128)
+    bn = _block(n, bn, 8, interpret)
+    bm = _block(m, bm, 128, interpret)
+    bd = _block(d, bd, 128, interpret)
     np_, mp_, dp_ = _round_up(n, bn), _round_up(m, bm), _round_up(d, bd)
     xp = _pad_cols(_pad_rows(x, np_), dp_)
     zp = _pad_cols(_pad_rows(z, mp_), dp_)
@@ -105,6 +114,117 @@ def kmvp_t(x, z, v, *, kind: str = "gaussian", sigma: float = 1.0,
     out = _kmvp.kmvp_t_pallas(xp, zp, vp, kind=kind, sigma=sigma, bn=bn,
                               bm=bm, bd=bd, interpret=interpret)
     return out[:m, 0]
+
+
+# --------------------------------------------------------------------- on-the-
+# fly helpers for the sharded plans. These are deliberately *not* jit'd:
+# they are called inside shard_map bodies (per-shard shapes are concrete at
+# trace time) and inline into the enclosing jit, so the chunk loop stays
+# remat-friendly (jax.checkpoint on the chunk body: AD never saves a
+# (block_rows x m) gram chunk) and donation of the enclosing buffers works.
+
+
+def otf_block_rows(n: int, m: int, d: int, budget_bytes: int = 1 << 20) -> int:
+    """Row-chunk size for the jnp on-the-fly fallback, keyed on the
+    *per-shard* row count n.
+
+    Two ceilings: the transient (rows, m) f32 gram chunk stays under
+    ``budget_bytes``, and under ~1/8 of the shard's rows (so recomputation
+    never quietly degenerates into materializing the full per-shard C
+    block). Floor of 8 rows keeps the matmuls sane.
+    """
+    del d
+    by_budget = max(budget_bytes // (4 * max(m, 1)), 8)
+    by_fraction = _round_up(max(n // 8, 1), 8)
+    return int(max(8, min(by_budget, by_fraction, _round_up(n, 8))))
+
+
+def otf_tiles(n: int, m: int, d: int,
+              vmem_budget: int = 4 << 20) -> tuple[int, int, int]:
+    """(bn, bm, bd) Pallas tile sizes keyed on the per-shard n: large shards
+    take a taller bn (amortizes re-streaming z across the n-block loop),
+    shrunk until the f32 working set (x, z, acc tiles) fits the budget."""
+    interp = _interpret_default()
+    bn = _block(n, 512 if n >= 512 else 256, 8, interp)
+    bm = _block(m, 256, 128, interp)
+    bd = _block(d, 256, 128, interp)
+    while bn > 8 and 4 * (bn * bd + bm * bd + bn * bm) > vmem_budget:
+        bn = max(8, _round_up(bn // 2, 8))
+    return bn, bm, bd
+
+
+def kmvp_fwd_chunked(x, z, beta, *, kind: str = "gaussian", sigma: float = 1.0,
+                     block_rows: int | None = None):
+    """o = C(x, z) @ beta via row-chunked recomputation (jnp fallback).
+
+    Peak transient is one (block_rows, m) gram chunk — the fallback keeps
+    the fused kernels' memory contract on backends without Pallas.
+    """
+    from repro.kernels import ref
+    n, d = x.shape
+    m = z.shape[0]
+    bn = block_rows or otf_block_rows(n, m, d)
+    nb = -(-n // bn)
+    xp = _pad_rows(x, nb * bn).reshape(nb, bn, d)
+
+    @jax.checkpoint
+    def chunk(c):
+        return ref.gram_ref(c, z, kind=kind, sigma=sigma) @ beta.astype(
+            jnp.float32)
+
+    return jax.lax.map(chunk, xp).reshape(-1)[:n]
+
+
+def kmvp_t_chunked(x, z, v, *, kind: str = "gaussian", sigma: float = 1.0,
+                   block_rows: int | None = None):
+    """g = C(x, z)^T @ v via row-chunked recomputation (jnp fallback).
+
+    Padded x rows have nonzero gaussian kernel values against z, but their
+    v entries are zero-padded, so their contribution to g vanishes exactly.
+    """
+    from repro.kernels import ref
+    n, d = x.shape
+    m = z.shape[0]
+    bn = block_rows or otf_block_rows(n, m, d)
+    nb = -(-n // bn)
+    xp = _pad_rows(x, nb * bn).reshape(nb, bn, d)
+    vp = jnp.pad(v.astype(jnp.float32), (0, nb * bn - n)).reshape(nb, bn)
+
+    @jax.checkpoint
+    def contrib(c, vc):
+        return vc @ ref.gram_ref(c, z, kind=kind, sigma=sigma)
+
+    def body(g, cv):
+        return g + contrib(*cv), None
+
+    g, _ = jax.lax.scan(body, jnp.zeros((m,), jnp.float32), (xp, vp))
+    return g
+
+
+def otf_kmvp_fwd(x, z, beta, *, kind: str = "gaussian", sigma: float = 1.0,
+                 backend: str = "jnp", block_rows: int | None = None):
+    """Backend dispatch for o = C(x, z) @ beta with C never in HBM.
+
+    ``pallas`` fuses the gram tile into the matvec in VMEM (tile sizes from
+    :func:`otf_tiles`); ``jnp`` recomputes row chunks. Callable inside
+    shard_map bodies — x is the per-shard row block there.
+    """
+    if backend == "pallas":
+        bn, bm, bd = otf_tiles(x.shape[0], z.shape[0], x.shape[1])
+        return kmvp_fwd(x, z, beta, kind=kind, sigma=sigma,
+                        bn=bn, bm=bm, bd=bd)
+    return kmvp_fwd_chunked(x, z, beta, kind=kind, sigma=sigma,
+                            block_rows=block_rows)
+
+
+def otf_kmvp_t(x, z, v, *, kind: str = "gaussian", sigma: float = 1.0,
+               backend: str = "jnp", block_rows: int | None = None):
+    """Backend dispatch for g = C(x, z)^T @ v with C never in HBM."""
+    if backend == "pallas":
+        bn, bm, bd = otf_tiles(x.shape[0], z.shape[0], x.shape[1])
+        return kmvp_t(x, z, v, kind=kind, sigma=sigma, bn=bn, bm=bm, bd=bd)
+    return kmvp_t_chunked(x, z, v, kind=kind, sigma=sigma,
+                          block_rows=block_rows)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -10,7 +10,9 @@ Multi-device simulation:
   PYTHONPATH=src python -m repro.launch.kernel_train --mesh 4,2 --plan shard_map
 
 Any registered solver x plan combination is reachable from the CLI
-(--solver tron|linearized|rff|ppacksvm, --plan local|shard_map|auto|otf);
+(--solver tron|linearized|rff|ppacksvm,
+ --plan local|shard_map|auto|otf|otf_shard — otf_shard is the fused
+ mesh-sharded on-the-fly plan: no (n/p, m) C block on any device);
 --save writes a serving checkpoint for repro.launch.kernel_serve.
 """
 from __future__ import annotations

@@ -6,5 +6,64 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
+import numpy as np
+import pytest
 
 jax.config.update("jax_enable_x64", False)
+
+
+# --------------------------------------------------------------- device gating
+def _device_capability() -> int:
+    """Devices a test (or its subprocess) can get on this host. The
+    multi-device suites run in subprocesses that force
+    --xla_force_host_platform_device_count, which works on any CPU-backed
+    host for any count; on accelerators the real device count is the cap."""
+    if jax.default_backend() == "cpu":
+        return 1 << 30
+    return jax.device_count()
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "requires_devices(k): skip (not error) when fewer than k devices "
+        "are available or simulatable (CPU hosts can fake any count in a "
+        "subprocess via --xla_force_host_platform_device_count)")
+
+
+def pytest_runtest_setup(item):
+    marker = item.get_closest_marker("requires_devices")
+    if marker is not None:
+        k = int(marker.args[0])
+        have = _device_capability()
+        if have < k:
+            pytest.skip(f"needs {k} devices; this host has "
+                        f"{jax.device_count()} and cannot simulate more")
+
+
+# ------------------------------------------------------- shared parity asserts
+_DTYPE_TOL = {"float32": 2e-4, "bfloat16": 3e-2}
+
+
+def assert_allclose_dtype(got, want, dtype, *, rtol=None, atol=None):
+    """allclose with per-dtype tolerances for the kernel parity sweeps.
+
+    ``dtype`` is the *input* dtype of the kernel under test (accumulation
+    is always f32, so bf16 inputs dominate the error). The default atol
+    scales with the magnitude of ``want`` so linear-kernel outputs (which
+    grow with d and m) and unit-range gaussian outputs share one helper.
+    """
+    want = np.asarray(want)
+    tol = _DTYPE_TOL[np.dtype(dtype).name]
+    if rtol is None:
+        rtol = tol
+    if atol is None:
+        atol = tol * max(1.0, float(np.max(np.abs(want))) if want.size else 1.0)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=rtol, atol=atol)
+
+
+@pytest.fixture
+def allclose_dtype():
+    """Fixture view of :func:`assert_allclose_dtype` for tests that prefer
+    injection over the conftest import."""
+    return assert_allclose_dtype

@@ -33,7 +33,8 @@ def basis(data):
 def test_registries_populated():
     assert set(available_solvers()) == {"tron", "linearized", "rff",
                                         "ppacksvm"}
-    assert set(available_plans()) == {"local", "shard_map", "auto", "otf"}
+    assert set(available_plans()) == {"local", "shard_map", "auto", "otf",
+                                      "otf_shard"}
 
 
 def test_invalid_composition_raises_at_construction():
@@ -92,7 +93,7 @@ def test_fit_matches_legacy_solve_every_solver(data, basis):
     assert float(jnp.max(jnp.abs(km.state_["beta"] - res.alpha))) < 1e-5
 
 
-@pytest.mark.parametrize("plan", ["local", "shard_map", "auto", "otf"])
+@pytest.mark.parametrize("plan", available_plans())
 def test_same_fit_call_under_every_plan(data, basis, plan):
     """Acceptance: identical call site, plan swapped by config only."""
     X, y, _, _ = data

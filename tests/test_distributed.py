@@ -8,7 +8,8 @@ import sys
 
 import pytest
 
-pytestmark = pytest.mark.slow  # 8-fake-device subprocess, minutes of compiles
+pytestmark = [pytest.mark.slow,  # 8-fake-device subprocess, min. of compiles
+              pytest.mark.requires_devices(8)]
 
 SCRIPT = r"""
 import os
@@ -30,41 +31,79 @@ ref = solve(X, y, basis, lam=0.5, kernel=kern, cfg=TronConfig(max_iter=50))
 
 out = {"n_devices": len(jax.devices())}
 cases = [
-    ((8,), ("data",), None, "shard_map", True),
-    ((8,), ("data",), None, "auto", True),
-    ((4, 2), ("data", "model"), "model", "shard_map", True),
-    ((4, 2), ("data", "model"), "model", "auto", True),
-    ((4, 2), ("data", "model"), "model", "shard_map", False),  # on-the-fly C
-    ((2, 2, 2), ("pod", "data", "model"), "model", "shard_map", True),
+    ((8,), ("data",), None, "shard_map", True, False),
+    ((8,), ("data",), None, "auto", True, False),
+    ((4, 2), ("data", "model"), "model", "shard_map", True, False),
+    ((4, 2), ("data", "model"), "model", "auto", True, False),
+    ((4, 2), ("data", "model"), "model", "shard_map", False, False),  # otf C
+    ((2, 2, 2), ("pod", "data", "model"), "model", "shard_map", True, False),
+    ((8,), ("data",), None, "shard_map", False, True),   # fused (otf_shard)
 ]
-for shape, names, ma, mode, mat in cases:
+for shape, names, ma, mode, mat, fused in cases:
     mesh = make_mesh(shape, names)
     da = tuple(a for a in names if a != "model")
-    dc = DistConfig(data_axes=da, model_axis=ma, mode=mode, materialize=mat)
+    dc = DistConfig(data_axes=da, model_axis=ma, mode=mode, materialize=mat,
+                    fused=fused)
     solver = DistributedNystrom(mesh, 0.5, "squared_hinge", kern, dc)
     Xs = jax.device_put(X, NamedSharding(mesh, P(da, None)))
     ys = jax.device_put(y, NamedSharding(mesh, P(da)))
     res = solver.solve(Xs, ys, basis, cfg=TronConfig(max_iter=50))
-    tag = f"{shape}-{mode}-{'mat' if mat else 'otf'}"
+    tag = f"{shape}-{mode}-" + ("fused" if fused else "mat" if mat else "otf")
     out[tag] = {
         "f": float(res.f), "ref_f": float(ref.stats.f),
         "max_dbeta": float(jnp.max(jnp.abs(res.beta - ref.beta))),
     }
 
-# unified estimator: the SAME fit call under four execution plans on the
-# 8-device mesh — only MachineConfig.plan changes between runs
-from repro.api import KernelMachine, MachineConfig
+# one row-sharded 8-device mesh shared by everything below
 mesh8 = make_mesh((8,), ("data",))
 Xs8 = jax.device_put(X, NamedSharding(mesh8, P(("data",), None)))
 ys8 = jax.device_put(y, NamedSharding(mesh8, P(("data",))))
+
+# otf_shard memory contract on the real 8-device mesh: per-shard bound
+from repro.core.introspect import max_intermediate_elems
+for backend in ("jnp", "pallas"):
+    dc = DistConfig(materialize=False, fused=True, backend=backend)
+    solver = DistributedNystrom(mesh8, 0.5, "squared_hinge", kern, dc)
+    fg, hd = solver.make_fused_closures(Xs8, ys8, basis)
+    with mesh8:
+        out[f"fused-max-intermediate-{backend}"] = max(
+            max_intermediate_elems(fg, jnp.zeros(basis.shape[0])),
+            max_intermediate_elems(hd, jnp.ones(X.shape[0]),
+                                   jnp.zeros(basis.shape[0])))
+out["nm_per_shard"] = (X.shape[0] // 8) * basis.shape[0]
+
+# acceptance: otf_shard beta matches a tightly-converged local solve to
+# 1e-4 relative (both runs share the tight stopping criterion)
+tight = TronConfig(max_iter=300, grad_rtol=1e-6)
+ref_t = solve(X, y, basis, lam=0.5, kernel=kern, cfg=tight)
+dc = DistConfig(materialize=False, fused=True)
+solver = DistributedNystrom(mesh8, 0.5, "squared_hinge", kern, dc)
+res_t = solver.solve(Xs8, ys8, basis, cfg=tight)
+out["otf_shard_rel_l2"] = float(
+    jnp.linalg.norm(res_t.beta - ref_t.beta) / jnp.linalg.norm(ref_t.beta))
+
+# unified estimator: the SAME fit call under every execution plan on the
+# 8-device mesh — only MachineConfig.plan changes between runs
+from repro.api import KernelMachine, MachineConfig
 base_cfg = MachineConfig(kernel=kern, lam=0.5, tron=TronConfig(max_iter=50))
-for plan in ("local", "shard_map", "auto", "otf"):
+for plan in ("local", "shard_map", "auto", "otf", "otf_shard"):
     km = KernelMachine(base_cfg.replace(plan=plan), mesh=mesh8)
     km.fit(Xs8, ys8, basis)
     out["api-" + plan] = {
         "f": km.result_.f, "ref_f": float(ref.stats.f),
         "max_dbeta": float(jnp.max(jnp.abs(km.state_["beta"] - ref.beta))),
     }
+
+# stage-wise growth under the fused plan: warm-started partial_fit on the
+# same 8-device mesh reaches the same optimum as a fresh local fit
+grow_cfg = MachineConfig(kernel=kern, lam=0.5, plan="otf_shard", tron=tight)
+km_g = KernelMachine(grow_cfg, mesh=mesh8)
+km_g.partial_fit(Xs8, ys8, basis[:64]).partial_fit(Xs8, ys8, basis[64:])
+out["otf_shard_growth"] = {
+    "stages": len(km_g.history_),
+    "rel_l2": float(jnp.linalg.norm(km_g.state_["beta"] - ref_t.beta)
+                    / jnp.linalg.norm(ref_t.beta)),
+}
 
 # distributed k-means == single-device k-means
 mesh = make_mesh((4, 2), ("data", "model"))
@@ -96,6 +135,7 @@ def test_eight_devices(results):
     "(8,)-shard_map-mat", "(8,)-auto-mat",
     "(4, 2)-shard_map-mat", "(4, 2)-auto-mat",
     "(4, 2)-shard_map-otf", "(2, 2, 2)-shard_map-mat",
+    "(8,)-shard_map-fused",
 ])
 def test_distributed_matches_local(results, tag):
     r = results[tag]
@@ -111,9 +151,32 @@ def test_distributed_kmeans_matches_local(results):
     assert results["kmeans_max_diff"] < 1e-4
 
 
-@pytest.mark.parametrize("plan", ["local", "shard_map", "auto", "otf"])
+@pytest.mark.parametrize("plan",
+                         ["local", "shard_map", "auto", "otf", "otf_shard"])
 def test_kernel_machine_plans_match_on_8_devices(results, plan):
     """Acceptance: one fit call, plan swapped by config, same optimum."""
     r = results[f"api-{plan}"]
     assert abs(r["f"] - r["ref_f"]) / abs(r["ref_f"]) < 1e-4, r
     assert r["max_dbeta"] < 1e-3, r
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_otf_shard_no_nm_block_on_any_device(results, backend):
+    """Memory contract: the fused closures never allocate the per-shard
+    (n/p, m) C block (jaxpr shape instrumentation, per-device avals)."""
+    got = results[f"fused-max-intermediate-{backend}"]
+    assert got < results["nm_per_shard"], (got, results["nm_per_shard"])
+
+
+def test_otf_shard_beta_matches_local_1e4(results):
+    """Acceptance: otf_shard trains tron on the 8-device mesh to a beta
+    within 1e-4 relative of the tightly-converged local solve."""
+    assert results["otf_shard_rel_l2"] < 1e-4, results["otf_shard_rel_l2"]
+
+
+def test_otf_shard_partial_fit_growth_on_mesh(results):
+    """Stage-wise growth keeps working under the fused plan: no CW cache
+    to extend, recomputation makes growth trivially correct."""
+    g = results["otf_shard_growth"]
+    assert g["stages"] == 2
+    assert g["rel_l2"] < 1e-3, g

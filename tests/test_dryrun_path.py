@@ -8,7 +8,8 @@ import sys
 
 import pytest
 
-pytestmark = pytest.mark.slow  # 8-fake-device subprocess, minutes of compiles
+pytestmark = [pytest.mark.slow,  # 8-fake-device subprocess, min. of compiles
+              pytest.mark.requires_devices(8)]
 
 SCRIPT = r"""
 import os

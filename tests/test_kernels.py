@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import assert_allclose_dtype
 from repro.kernels import ops, ref
 
 SHAPES = [(16, 8, 4), (64, 32, 16), (300, 130, 50), (512, 256, 256),
@@ -59,6 +60,98 @@ def test_kmvp_t_matches_ref(shape, dtype, kind):
     want = ref.kmvp_t_ref(x, z, v, kind=kind, sigma=_sigma(d))
     rtol = 3e-2 if dtype == jnp.bfloat16 else 1e-3
     np.testing.assert_allclose(got, want, rtol=rtol, atol=rtol * np.sqrt(n))
+
+
+# --------------------------------------------------------- parity test grid
+# Deliberately odd, non-block-aligned shapes: every value in {1, 3, 127,
+# 129, 257} appears in each of the n/m/d positions at least once, so the
+# zero-padding claim in ops.py is a tested invariant, not a docstring.
+ODD_SHAPES = [(1, 1, 1), (1, 3, 127), (3, 129, 1), (127, 1, 129),
+              (129, 257, 3), (257, 127, 257)]
+
+
+@pytest.mark.parametrize("shape", ODD_SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("kind", KINDS)
+def test_parity_grid(shape, dtype, kind):
+    """gram / kmvp_fwd / kmvp_t vs the dense ref.py path on one dataset."""
+    n, m, d = shape
+    x, z, beta, v = _data(n, m, d, dtype)
+    kw = dict(kind=kind, sigma=_sigma(d))
+    assert_allclose_dtype(ops.gram(x, z, **kw), ref.gram_ref(x, z, **kw),
+                          dtype)
+    assert_allclose_dtype(ops.kmvp_fwd(x, z, beta, **kw),
+                          ref.kmvp_ref(x, z, beta, **kw), dtype)
+    assert_allclose_dtype(ops.kmvp_t(x, z, v, **kw),
+                          ref.kmvp_t_ref(x, z, v, **kw), dtype)
+
+
+@pytest.mark.parametrize("shape", ODD_SHAPES)
+@pytest.mark.parametrize("kind", KINDS)
+def test_chunked_fallback_parity(shape, kind):
+    """The jnp on-the-fly fallbacks match the dense path too."""
+    n, m, d = shape
+    x, z, beta, v = _data(n, m, d, jnp.float32)
+    kw = dict(kind=kind, sigma=_sigma(d))
+    assert_allclose_dtype(ops.kmvp_fwd_chunked(x, z, beta, **kw),
+                          ref.kmvp_ref(x, z, beta, **kw), jnp.float32)
+    assert_allclose_dtype(ops.kmvp_t_chunked(x, z, v, **kw),
+                          ref.kmvp_t_ref(x, z, v, **kw), jnp.float32)
+    # explicit chunk override exercises the padded-tail path
+    assert_allclose_dtype(
+        ops.kmvp_t_chunked(x, z, v, block_rows=8, **kw),
+        ref.kmvp_t_ref(x, z, v, **kw), jnp.float32)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("shape", [(64, 32, 16), (129, 257, 3)])
+@pytest.mark.parametrize("impl", ["pallas", "chunked"])
+def test_kmvp_adjoint(shape, kind, impl):
+    """<kmvp_fwd(x,z,b), v> == <b, kmvp_t(x,z,v)>: the two fused kernels
+    are adjoints of the same implicit C and can never drift apart."""
+    n, m, d = shape
+    x, z, beta, v = _data(n, m, d, jnp.float32)
+    kw = dict(kind=kind, sigma=_sigma(d))
+    if impl == "pallas":
+        o, g = ops.kmvp_fwd(x, z, beta, **kw), ops.kmvp_t(x, z, v, **kw)
+    else:
+        o = ops.kmvp_fwd_chunked(x, z, beta, **kw)
+        g = ops.kmvp_t_chunked(x, z, v, **kw)
+    lhs, rhs = float(o @ v), float(beta @ g)
+    scale = max(1.0, abs(lhs), abs(rhs))
+    assert abs(lhs - rhs) / scale < 1e-5, (lhs, rhs)
+
+
+def test_block_tiny_size_regression():
+    """_block must not balloon a 1-row input to a full alignment block."""
+    assert ops._block(1, 256, 8, True) == 1        # interpret: exact size
+    assert ops._block(3, 256, 128, True) == 3
+    assert ops._block(1, 256, 8, False) == 8       # TPU: one align unit
+    assert ops._block(1, 256, 128, False) == 128
+    assert ops._block(2, 4, 8, False) == 8         # want < align stays legal
+    assert ops._block(300, 256, 8, True) == 256    # large sizes unchanged
+    # end-to-end: n=1 stays correct through the padding path
+    x, z, beta, v = _data(1, 37, 5, jnp.float32)
+    kw = dict(kind="gaussian", sigma=_sigma(5))
+    assert ops.gram(x, z, **kw).shape == (1, 37)
+    assert_allclose_dtype(ops.gram(x, z, **kw), ref.gram_ref(x, z, **kw),
+                          jnp.float32)
+    assert_allclose_dtype(ops.kmvp_fwd(x, z, beta, **kw),
+                          ref.kmvp_ref(x, z, beta, **kw), jnp.float32)
+
+
+def test_otf_block_heuristics():
+    """Per-shard-n heuristics: aligned, bounded, never a full-C chunk."""
+    for n in (8, 64, 256, 4096, 100_000):
+        for m in (16, 128, 1024):
+            bn = ops.otf_block_rows(n, m, 10)
+            assert bn % 8 == 0 and bn >= 8
+            assert bn * m * 4 <= max(1 << 20, 8 * m * 4)   # budget or floor
+            if n >= 64:
+                assert bn < n                               # real chunking
+    bn, bm, bd = ops.otf_tiles(4096, 512, 784)
+    assert bn % 8 == 0 and bm % 128 == 0 and bd % 128 == 0
+    assert 4 * (bn * bd + bm * bd + bn * bm) <= 4 << 20
 
 
 def test_block_shape_invariance():

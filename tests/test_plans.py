@@ -1,0 +1,128 @@
+"""Execution-plan equivalence and the otf_shard memory contract.
+
+The plan matrix iterates the *registry*, so a newly registered plan is
+automatically held to the same standard: same small problem, same config,
+beta agreeing with every other plan within tolerance. The memory tests
+use jaxpr shape instrumentation (repro.core.introspect) to prove the
+fused plan never materializes a C block — the claim that distinguishes
+``otf_shard`` from ``otf``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import KernelMachine, MachineConfig, available_plans
+from repro.core import KernelSpec, TronConfig, random_basis
+from repro.core.compat import make_mesh
+from repro.core.distributed import DistConfig, DistributedNystrom
+from repro.core.introspect import (assert_max_intermediate_below,
+                                   max_intermediate_elems)
+from repro.data import make_classification
+
+N, M, D = 256, 32, 8
+
+
+@pytest.fixture(scope="module")
+def problem():
+    key = jax.random.PRNGKey(0)
+    X, y = make_classification(key, N, D, clusters_per_class=2)
+    basis = random_basis(jax.random.PRNGKey(2), X, M)
+    return X, y, basis
+
+
+@pytest.fixture(scope="module")
+def config():
+    # tight grad_rtol: plans must agree at the *optimum*, not merely at a
+    # loose early stop where near-flat directions of W leave beta slack
+    return MachineConfig(kernel=KernelSpec("gaussian", sigma=2.0), lam=0.5,
+                         tron=TronConfig(max_iter=300, grad_rtol=1e-6))
+
+
+@pytest.fixture(scope="module")
+def fits(problem, config):
+    X, y, basis = problem
+    out = {}
+    for plan in available_plans():
+        km = KernelMachine(config.replace(plan=plan)).fit(X, y, basis)
+        out[plan] = np.asarray(km.state_["beta"])
+    return out
+
+
+def test_matrix_covers_registry(fits):
+    assert set(fits) == set(available_plans())
+    assert "otf_shard" in fits          # the plan this PR adds is registered
+
+
+@pytest.mark.parametrize("plan", available_plans())
+def test_plan_matches_every_other(plan, fits):
+    """Pairwise beta agreement across the whole registry."""
+    b = fits[plan]
+    scale = max(np.max(np.abs(v)) for v in fits.values())
+    for other, bo in fits.items():
+        assert np.max(np.abs(b - bo)) / scale < 5e-4, (plan, other)
+
+
+def test_otf_shard_matches_local_tight(fits):
+    """Acceptance: otf_shard's beta within 1e-4 relative of local's."""
+    b, bl = fits["otf_shard"], fits["local"]
+    assert np.linalg.norm(b - bl) / np.linalg.norm(bl) < 1e-4
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_otf_shard_never_materializes_C(problem, backend):
+    """No intermediate of the fused f/g/Hd closures reaches n x m elements;
+    the non-fused otf path (which rebuilds the per-shard block) is the
+    positive control proving the instrumentation sees gram blocks."""
+    X, y, basis = problem
+    mesh = make_mesh((1,), ("data",))
+    kern = KernelSpec("gaussian", sigma=2.0)
+    beta = jnp.zeros((M,), X.dtype)
+    D = jnp.ones((N,), X.dtype)
+
+    fused = DistributedNystrom(
+        mesh, 0.5, "squared_hinge", kern,
+        DistConfig(materialize=False, fused=True, backend=backend))
+    fg, hd = fused.make_fused_closures(X, y, basis)
+    with mesh:
+        assert_max_intermediate_below(fg, N * M, beta)
+        assert_max_intermediate_below(hd, N * M, D, beta)
+
+    control = DistributedNystrom(mesh, 0.5, "squared_hinge", kern,
+                                 DistConfig(materialize=False))
+    fg_c, _ = control.make_otf_closures(X, y, basis)
+    with mesh:
+        assert max_intermediate_elems(fg_c, beta) >= N * M
+
+
+def test_otf_shard_partial_fit_growth(problem, config):
+    """Stage-wise basis growth under otf_shard: recomputation makes growth
+    trivially correct — the grown machine must land on the same optimum as
+    a fresh local fit on the full basis, warm start included."""
+    X, y, basis = problem
+    ref = KernelMachine(config).fit(X, y, basis)
+    km = KernelMachine(config.replace(plan="otf_shard"))
+    km.partial_fit(X, y, basis[: M // 2]).partial_fit(X, y, basis[M // 2:])
+    assert len(km.history_) == 2
+    assert km.state_["beta"].shape == (M,)
+    b, br = np.asarray(km.state_["beta"]), np.asarray(ref.state_["beta"])
+    assert np.linalg.norm(b - br) / np.linalg.norm(br) < 1e-3
+    # the warm-started second stage must keep the fitted objective value
+    assert abs(km.result_.f - ref.result_.f) / abs(ref.result_.f) < 1e-4
+
+
+def test_otf_shard_rejects_model_axis(problem):
+    X, y, basis = problem
+    cfg = MachineConfig(plan="otf_shard", model_axis="model")
+    with pytest.raises(ValueError, match="rows only"):
+        KernelMachine(cfg).fit(X, y, basis)
+
+
+def test_otf_shard_rff_solver(problem, config):
+    """The validity matrix re-examination: rff composes with otf_shard via
+    the exact linear-kernel reduction and matches rff under local."""
+    X, y, _ = problem
+    base = config.replace(solver="rff", rff_features=32)
+    b_local = KernelMachine(base.replace(plan="local")).fit(X, y).state_["beta"]
+    b_fused = KernelMachine(base.replace(plan="otf_shard")).fit(X, y).state_["beta"]
+    assert np.max(np.abs(np.asarray(b_fused) - np.asarray(b_local))) < 5e-4
