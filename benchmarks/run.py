@@ -2,19 +2,42 @@
 
 Prints ``name,us_per_call,derived`` CSV. Scales are CPU-container defaults;
 full-scale shape coverage lives in the dry-run/roofline path.
+
+``--emit-json`` appends each benchmark's rows to a repo-root
+``BENCH_<name>.json`` trajectory file (one record per run, oldest first),
+so perf history accumulates across PRs next to ``BENCH_stream.json`` from
+``benchmarks.stream_scaling``.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def append_trajectory(path: Path, record: dict) -> None:
+    """Append one run record to a JSON trajectory file (list of records)."""
+    trajectory = []
+    if path.exists():
+        trajectory = json.loads(path.read_text())
+        if not isinstance(trajectory, list):
+            trajectory = [trajectory]
+    trajectory.append(record)
+    path.write_text(json.dumps(trajectory, indent=2) + "\n")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names (e.g. table1,fig1)")
+    ap.add_argument("--emit-json", action="store_true",
+                    help="append results to repo-root BENCH_<name>.json "
+                         "trajectory files")
     args = ap.parse_args()
 
     from benchmarks import (fig1_accuracy_vs_m, fig2_speedup, rff_vs_nystrom,
@@ -37,13 +60,27 @@ def main() -> None:
         if name not in only:
             continue
         t0 = time.time()
+        rows = []
         try:
             for row in fn():
+                rows.append(row)
                 print(row.csv(), flush=True)
         except Exception:
             traceback.print_exc()
             failed.append(name)
-        print(f"# {name} finished in {time.time() - t0:.1f}s", flush=True)
+        elapsed = time.time() - t0
+        print(f"# {name} finished in {elapsed:.1f}s", flush=True)
+        # never emit a partial row set from a crashed run: it would be
+        # indistinguishable from a fast successful run in the trajectory
+        if args.emit_json and rows and name not in failed:
+            out = REPO_ROOT / f"BENCH_{name}.json"
+            append_trajectory(out, {
+                "benchmark": name,
+                "run_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                "elapsed_s": round(elapsed, 1),
+                "rows": [{"name": r.name, "us_per_call": r.us_per_call,
+                          "derived": r.derived} for r in rows]})
+            print(f"# appended {out.name}", flush=True)
     if failed:
         print(f"# FAILED: {failed}", file=sys.stderr)
         raise SystemExit(1)

@@ -1,0 +1,177 @@
+"""Out-of-core scaling: shard_map vs otf_shard vs stream at growing n.
+
+For each plan at each n this measures, per device:
+  * step_s — wall-clock for one TRON-iteration evaluation mix (f/g + 3xHd)
+    at this container's reduced CPU scale (relative numbers; absolute
+    speed needs TPU). The stream plan is timed over real .npy shards
+    written to a temp directory and re-read memory-mapped every
+    evaluation — the paper's disk-resident deployment shape.
+  * peak_intermediate_bytes — largest array the evaluation materializes
+    (jaxpr shape instrumentation, per-shard avals; the quantity that
+    OOMs). For stream this is the per-chunk body: bounded by
+    chunk_rows x m no matter how large n grows.
+  * resident_x_bytes / resident_cw_bytes — what must sit in device memory
+    for the whole solve: the X shard (+ C, W shards when materialized)
+    for the in-memory plans, a single chunk for stream.
+
+Emits the repo-root ``BENCH_stream.json`` perf-trajectory record (append
+semantics: one entry per run, so regressions are visible across PRs).
+
+Run:  PYTHONPATH=src python -m benchmarks.stream_scaling [--devices 4]
+"""
+import argparse
+import os
+
+parser = argparse.ArgumentParser()
+parser.add_argument("--devices", type=int, default=4)
+parser.add_argument("--d", type=int, default=32)
+parser.add_argument("--m", type=int, default=256)
+parser.add_argument("--ns", type=int, nargs="*", default=[4096, 16384, 65536])
+parser.add_argument("--chunk-rows", type=int, default=4096)
+parser.add_argument("--out", default=None,
+                    help="output JSON path (default: <repo>/BENCH_stream.json)")
+args = parser.parse_args()
+# append (not setdefault): a user-set XLA_FLAGS must not silently disable
+# the forced device count --devices asked for
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") +
+    f" --xla_force_host_platform_device_count={args.devices}").strip()
+
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import DistConfig, DistributedNystrom, KernelSpec
+from repro.core.compat import make_mesh
+from repro.core.introspect import max_intermediate_bytes
+from repro.data.chunks import MmapChunkSource, save_chunks
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def inmem_step(solver, Xs, ys, basis, materialize):
+    """f/g + 3 Hd — the paper's per-TRON-iteration evaluation mix."""
+    if materialize:
+        C, W = solver.precompute(Xs, basis)
+        fgrad, hessd = solver.make_closures(C, W, ys)
+    else:
+        fgrad, hessd = solver.make_fused_closures(Xs, ys, basis)
+
+    def step(b):
+        f, g, D = fgrad(b)
+        h = hessd(D, g)
+        h = hessd(D, h)
+        h = hessd(D, h)
+        return f, g + h
+
+    return step
+
+
+def bench_inmem(mesh, kern, X, y, basis, materialize):
+    n, d = X.shape
+    m = basis.shape[0]
+    p = args.devices
+    Xs = jax.device_put(X, NamedSharding(mesh, P(("data",), None)))
+    ys = jax.device_put(y, NamedSharding(mesh, P(("data",))))
+    dc = DistConfig(data_axes=("data",), materialize=materialize,
+                    fused=not materialize)
+    solver = DistributedNystrom(mesh, 0.5, "squared_hinge", kern, dc)
+    step = inmem_step(solver, Xs, ys, basis, materialize)
+    b0 = jnp.zeros((m,), jnp.float32)
+    with mesh:
+        peak = max_intermediate_bytes(step, b0)
+        run = jax.jit(step)
+        jax.block_until_ready(run(b0))           # compile
+        t0 = time.perf_counter()
+        jax.block_until_ready(run(b0))
+        dt = time.perf_counter() - t0
+    resident_cw = ((n // p) * m + (m // p) * m) * 4 if materialize else 0
+    return dict(step_s=round(dt, 5), peak_intermediate_bytes=peak,
+                resident_x_bytes=(n // p) * d * 4,
+                resident_cw_bytes=resident_cw)
+
+
+def bench_stream(mesh, kern, shard_dir, basis, chunk_rows):
+    m = basis.shape[0]
+    d = basis.shape[1]
+    src = MmapChunkSource(shard_dir, chunk_rows=chunk_rows)
+    dc = DistConfig(data_axes=("data",), materialize=False, fused=True)
+    solver = DistributedNystrom(mesh, 0.5, "squared_hinge", kern, dc)
+    sc = solver.make_stream_closures(src, np.asarray(basis))
+    cr = sc.chunk_rows
+    b0 = np.zeros((m,), np.float32)
+
+    def step(b):
+        f, g, D = sc.fgrad(b)
+        h = sc.hessd(D, g)
+        h = sc.hessd(D, h)
+        h = sc.hessd(D, h)
+        return f, g + h
+
+    step(b0)                                     # compile chunk bodies
+    t0 = time.perf_counter()
+    step(b0)
+    dt = time.perf_counter() - t0
+    shapes = dict(
+        Xc=jax.ShapeDtypeStruct((cr, d), jnp.float32),
+        v=jax.ShapeDtypeStruct((cr,), jnp.float32),
+        basis=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        beta=jax.ShapeDtypeStruct((m,), jnp.float32))
+    with mesh:
+        peak = max(
+            max_intermediate_bytes(sc.fg_chunk, shapes["Xc"], shapes["v"],
+                                   shapes["v"], shapes["basis"],
+                                   shapes["beta"]),
+            max_intermediate_bytes(sc.hd_chunk, shapes["Xc"], shapes["v"],
+                                   shapes["basis"], shapes["beta"]))
+    return dict(step_s=round(dt, 5), peak_intermediate_bytes=peak,
+                resident_x_bytes=(cr // args.devices) * d * 4,
+                resident_cw_bytes=0)
+
+
+def main():
+    p, d, m = args.devices, args.d, args.m
+    mesh = make_mesh((p,), ("data",))
+    kern = KernelSpec("gaussian", sigma=4.0)
+    basis = jax.random.normal(jax.random.PRNGKey(2), (m, d))
+    results = []
+    print(f"d={d} m={m} p={p} chunk_rows={args.chunk_rows}")
+    print("| n | plan | step_s | peak intermediate | resident X / dev |")
+    print("|---|------|--------|-------------------|------------------|")
+    for n in args.ns:
+        key = jax.random.PRNGKey(0)
+        X = jax.random.normal(key, (n, d))
+        y = jnp.sign(jax.random.normal(jax.random.PRNGKey(1), (n,)))
+        with tempfile.TemporaryDirectory() as td:
+            save_chunks(td, np.asarray(X), np.asarray(y),
+                        rows_per_shard=args.chunk_rows)
+            for plan in ("shard_map", "otf_shard", "stream"):
+                if plan == "stream":
+                    row = bench_stream(mesh, kern, td, basis, args.chunk_rows)
+                else:
+                    row = bench_inmem(mesh, kern, X, y, basis,
+                                      materialize=plan == "shard_map")
+                row.update(n=n, plan=plan)
+                results.append(row)
+                print(f"| {n} | {plan} | {row['step_s']:.4f} "
+                      f"| {row['peak_intermediate_bytes'] / 2**20:.2f} MiB "
+                      f"| {row['resident_x_bytes'] / 2**20:.2f} MiB |",
+                      flush=True)
+
+    from benchmarks.run import append_trajectory   # one trajectory format
+    out = Path(args.out) if args.out else REPO_ROOT / "BENCH_stream.json"
+    append_trajectory(out, {
+        "benchmark": "stream_scaling", "run_at": time.strftime(
+            "%Y-%m-%dT%H:%M:%S"), "config": {
+                "devices": p, "d": d, "m": m, "chunk_rows": args.chunk_rows,
+                "backend": jax.default_backend()}, "results": results})
+    print(f"appended {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,9 @@
 """Quickstart: train a Nystrom kernel SVM through the unified KernelMachine
 estimator on synthetic covtype-like data — the paper's end-to-end driver.
 The solver (TRON on formulation (4)) and execution plan (local | shard_map |
-auto | otf | otf_shard) are config fields, not code paths; swap them freely.
+auto | otf | otf_shard | stream) are config fields, not code paths; swap
+them freely. (The runnable README quickstart is kept fresh by the
+scripts/verify.sh docs smoke; this example adds the m-sweep.)
 
   PYTHONPATH=src python examples/quickstart.py
 """

@@ -2,11 +2,15 @@
 # Repo verification gate.
 #
 #   scripts/verify.sh          fast gate: not-slow tests + API/serving smoke
-#   scripts/verify.sh --full   tier-1 (the full pytest suite) + the smoke
+#                              + docs smoke (runs the README quickstart)
+#   scripts/verify.sh --full   tier-1 (the full pytest suite) + the smokes
 #
 # The fast gate is what you run in the inner loop (a couple of minutes);
 # the slow marker holds the 8-fake-device subprocess suites
 # (test_distributed, test_dryrun_path, test_decode_consistency).
+#
+# The docs smoke extracts the first ```python block from README.md and
+# executes it, so the quickstart the repo advertises cannot silently rot.
 #
 # Each pytest run ends with a per-test-file pass/fail summary table
 # (scripts/summarize_junit.py); any slow-unmarked test exceeding the 60s
@@ -48,6 +52,16 @@ fi
 
 echo "== API smoke: train -> save -> load -> serve =="
 python -m repro.launch.kernel_serve --selftest || status=1
+
+echo "== docs smoke: README quickstart block =="
+awk '/^```python$/{flag=1; next} /^```$/{if (flag) exit} flag' README.md \
+    > "$tmp/readme_quickstart.py"
+if [[ ! -s "$tmp/readme_quickstart.py" ]]; then
+    echo "README.md has no \`\`\`python quickstart block" >&2
+    status=1
+else
+    python "$tmp/readme_quickstart.py" || status=1
+fi
 
 if [[ "$status" -ne 0 ]]; then
     echo "== verify FAILED =="

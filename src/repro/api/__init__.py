@@ -2,10 +2,10 @@
 
 One config-driven estimator over formulation (4) with two registries:
 solvers (tron | linearized | rff | ppacksvm) and execution plans
-(local | shard_map | auto | otf | otf_shard). See repro.api.machine for
-the tour.
+(local | shard_map | auto | otf | otf_shard | stream). See
+repro.api.machine for the tour.
 """
-from repro.api.config import MachineConfig
+from repro.api.config import MachineConfig, StreamConfig
 from repro.api.result import FitResult
 from repro.api.machine import KernelMachine
 from repro.api.registry import (available_plans, available_solvers,
@@ -13,7 +13,7 @@ from repro.api.registry import (available_plans, available_solvers,
                                 register_solver, valid_combinations, validate)
 
 __all__ = [
-    "KernelMachine", "MachineConfig", "FitResult",
+    "KernelMachine", "MachineConfig", "StreamConfig", "FitResult",
     "available_plans", "available_solvers", "get_plan", "get_solver",
     "register_plan", "register_solver", "valid_combinations", "validate",
 ]

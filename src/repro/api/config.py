@@ -15,6 +15,22 @@ from repro.core.tron import TronConfig
 
 
 @dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Knobs for the out-of-core ``stream`` execution plan.
+
+    ``chunk_rows`` is the block size the solver streams per step (rounded
+    up to a multiple of the mesh's data extent; ``None`` picks
+    ``min(n, 16384)``) — it bounds every materialized intermediate at
+    ``chunk_rows x m`` elements. ``mmap`` controls whether ``.npy`` shard
+    directories are opened memory-mapped (reads touch only the rows a
+    chunk needs) or loaded eagerly per shard.
+    """
+
+    chunk_rows: Optional[int] = None
+    mmap: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
 class MachineConfig:
     """Everything needed to train and serve one kernel machine.
 
@@ -28,7 +44,7 @@ class MachineConfig:
     lam: float = 1.0
     solver: str = "tron"               # tron | linearized | rff | ppacksvm
     plan: str = "local"                # local | shard_map | auto | otf
-                                       #   | otf_shard
+                                       #   | otf_shard | stream
     tron: TronConfig = TronConfig()
     backend: str = "jnp"               # gram/kmvp backend: jnp | pallas
     seed: int = 0                      # rff draw / ppacksvm shuffle / basis pick
@@ -50,6 +66,7 @@ class MachineConfig:
     otf_block_rows: Optional[int] = None  # otf_shard jnp-fallback row-chunk;
                                           # None -> per-shard-n heuristic
                                           # (kernels.ops.otf_block_rows)
+    stream: StreamConfig = StreamConfig()  # plan="stream" chunking knobs
 
     def __post_init__(self):
         get_loss(self.loss)  # fail fast on unknown loss names
@@ -72,4 +89,6 @@ class MachineConfig:
         d["kernel"] = KernelSpec(**d["kernel"])
         d["tron"] = TronConfig(**d["tron"])
         d["data_axes"] = tuple(d["data_axes"])
+        # checkpoints written before the stream plan carry no "stream" key
+        d["stream"] = StreamConfig(**d.get("stream", {}))
         return cls(**d)

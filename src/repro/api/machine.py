@@ -62,10 +62,20 @@ class KernelMachine:
         if key is None:
             key = jax.random.PRNGKey(self.config.seed)
         if basis is None and entry.needs_basis:
-            basis = select_basis(key, X, self.config.m,
-                                 strategy=self.config.basis_strategy,
-                                 mesh=self.mesh,
-                                 data_axes=self.config.data_axes)
+            from repro.data.chunks import ChunkSource, random_basis_from_source
+            if isinstance(X, ChunkSource):   # out-of-core: O(m) rows read
+                if self.config.basis_strategy not in ("random", "auto"):
+                    raise ValueError(
+                        f"basis_strategy {self.config.basis_strategy!r} "
+                        f"needs X in memory; chunked sources support "
+                        f"'random' (or pass an explicit basis)")
+                basis = jnp.asarray(random_basis_from_source(
+                    key, X, self.config.m))
+            else:
+                basis = select_basis(key, X, self.config.m,
+                                     strategy=self.config.basis_strategy,
+                                     mesh=self.mesh,
+                                     data_axes=self.config.data_axes)
         state, res = entry.fit(self.config, X, y, basis, beta0,
                                mesh=self.mesh, plan=self.config.plan, key=key)
         self.state_ = state

@@ -21,19 +21,29 @@ they got:
                   tiles via ``config.backend="pallas"``, row-chunked jnp
                   recomputation otherwise), so no (n/p, m) array ever
                   exists on any device and each evaluation AllReduces one
-                  m-vector. Memory/flops/communication per f/g/Hd call:
+                  m-vector.
+* ``stream``    — out-of-core: X lives in a chunked source (in-memory
+                  arrays or a directory of memory-mapped .npy shards) and
+                  every f/g/Hd evaluation is *accumulated* chunk by chunk
+                  through the fused kmvp path. TRON runs eagerly on the
+                  host (``tron_host``); n may exceed host RAM.
+
+Memory/flops/communication per f/g/Hd call (p devices, rows sharded):
 
                   plan        C bytes/device   extra flops    comms/eval
                   ----------  ---------------  -------------  -----------
                   shard_map   4 n m / p        0              O(m)
                   otf         4 n m / p (peak) O(n m d / p)   O(m)
                   otf_shard   tile (VMEM)      O(n m d / p)   O(m)
+                  stream      tile (VMEM)      O(n m d / p)   O(m) / chunk
 
-Distributed plans run on ``mesh`` (or a default all-devices data mesh) and
-require n and m divisible by the data-axis extent — checked here with a
-readable error instead of a shard_map trace failure. ``otf_shard`` shards
-rows only (``model_axis`` must be None) and is validated by shape
-instrumentation in tests: no intermediate reaches n/p x m elements.
+Distributed in-memory plans run on ``mesh`` (or a default all-devices data
+mesh) and require n and m divisible by the data-axis extent — checked here
+with a readable error instead of a shard_map trace failure. ``otf_shard``
+and ``stream`` shard rows only (``model_axis`` must be None) and are
+validated by shape instrumentation in tests: no intermediate reaches
+n/p x m (respectively chunk_rows x m) elements. ``stream`` accepts any n —
+ragged chunks are mask-padded exactly.
 """
 from __future__ import annotations
 
@@ -49,6 +59,7 @@ from repro.core.distributed import DistConfig, DistributedNystrom
 from repro.core.formulation import Formulation4
 from repro.core.nystrom import build_C, build_W
 from repro.core.tron import TronResult, tron
+from repro.data.chunks import as_chunk_source
 
 
 @register_plan("local")
@@ -129,6 +140,29 @@ def plan_otf(config, mesh, X, y, basis, beta0, CW=None) -> TronResult:
     del CW  # the whole point: C is never materialized
     return _distributed(config, mesh, X, y, basis, beta0,
                         mode="shard_map", materialize=False, plan="otf")
+
+
+@register_plan("stream")
+def plan_stream(config, mesh, X, y, basis, beta0, CW=None) -> TronResult:
+    """Out-of-core accumulation: X may be an in-memory array (wrapped into
+    an ArrayChunkSource), a ChunkSource, or a shard-directory path."""
+    del CW  # recomputation leaves nothing to cache (same argument as
+    #         otf_shard: growth re-streams, warm start carries the progress)
+    if config.model_axis is not None:
+        raise ValueError(
+            "plan 'stream' shards rows only: chunks go through the fused "
+            "kmvp kernels, which contract over all basis columns; set "
+            "model_axis=None")
+    mesh = _resolve_mesh(config, mesh)
+    source = as_chunk_source(X, y, chunk_rows=config.stream.chunk_rows,
+                             mmap=config.stream.mmap)
+    dc = DistConfig(data_axes=config.data_axes, model_axis=None,
+                    mode="shard_map", materialize=False,
+                    backend=config.backend, fused=True,
+                    block_rows=config.otf_block_rows)
+    solver = DistributedNystrom(mesh, config.lam, config.loss, config.kernel,
+                                dc)
+    return solver.solve_stream(source, basis, beta0=beta0, cfg=config.tron)
 
 
 @register_plan("otf_shard")

@@ -2,7 +2,8 @@
 
 A *solver* owns the optimization strategy (objective + update rule); an
 *execution plan* owns where the math runs (one device, explicit shard_map
-collectives, XLA-auto SPMD, or materialization-free on-the-fly gram). Any
+collectives, XLA-auto SPMD, materialization-free on-the-fly gram, or
+out-of-core chunk streaming). Any
 solver composes with any plan it declares mathematically valid — the
 composition is checked here, once, with an error message that lists the
 legal choices instead of failing deep inside a trace.

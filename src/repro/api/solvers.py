@@ -15,7 +15,9 @@ plan (the paper's claim), including the fused ``otf_shard``. ``rff`` also
 runs under every plan via the exact reduction phi(X) -> linear-kernel
 machine with identity basis (C = phi(X), W = I is formulation (4)
 verbatim; under ``otf_shard`` the fused linear kmvp contracts phi(X)
-blocks against the identity basis without materializing them).
+blocks against the identity basis without materializing them). Both run
+under the out-of-core ``stream`` plan too — ``tron`` fully (X itself may
+be a ChunkSource), ``rff`` with phi(X) in memory but the solve chunked.
 ``linearized`` is pinned to ``local``:
 its O(m^3) eigendecomposition is the inherently-serial step the paper
 argues against. ``ppacksvm`` is pinned to ``local``: sequential SGD with
@@ -60,7 +62,8 @@ def _decision_rff(config, state, X, backend: Optional[str] = None):
 
 # -------------------------------------------------------------------- solvers
 @register_solver("tron",
-                 plans={"local", "shard_map", "auto", "otf", "otf_shard"},
+                 plans={"local", "shard_map", "auto", "otf", "otf_shard",
+                        "stream"},
                  grows=True, needs_basis=True, decision=_decision_nystrom)
 def fit_tron(config, X, y, basis, beta0=None, *, mesh=None, plan=None,
              key=None, CW=None):
@@ -98,7 +101,8 @@ def fit_linearized(config, X, y, basis, beta0=None, *, mesh=None, plan=None,
 
 
 @register_solver("rff",
-                 plans={"local", "shard_map", "auto", "otf", "otf_shard"},
+                 plans={"local", "shard_map", "auto", "otf", "otf_shard",
+                        "stream"},
                  decision=_decision_rff)
 def fit_rff(config, X, y, basis=None, beta0=None, *, mesh=None, plan=None,
             key=None, CW=None):
@@ -111,6 +115,12 @@ def fit_rff(config, X, y, basis=None, beta0=None, *, mesh=None, plan=None,
     """
     del CW
     plan = plan or config.plan
+    from repro.data.chunks import ChunkSource
+    if isinstance(X, ChunkSource):
+        raise TypeError(
+            "solver 'rff' maps X through phi(X) up front, which needs X in "
+            "memory; pass arrays (plan 'stream' still chunks the phi(X) "
+            "solve), or use solver 'tron' for fully out-of-core training")
     if basis is None:
         basis = rffm.sample_rff(_key(config, key), X.shape[1],
                                 config.rff_features, config.kernel.sigma)

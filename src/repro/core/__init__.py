@@ -10,7 +10,7 @@ and ``solve_rff`` remain as deprecated shims.
 from repro.core.losses import LOSSES, get_loss, SQUARED_HINGE, LOGISTIC, SQUARED
 from repro.core.nystrom import KernelSpec, gram, build_C, build_W, predict
 from repro.core.formulation import Formulation4, to_linearized, beta_from_w
-from repro.core.tron import TronConfig, TronResult, tron
+from repro.core.tron import TronConfig, TronResult, tron, tron_host
 from repro.core.solver import NystromMachine, solve
 from repro.core.distributed import DistConfig, DistributedNystrom
 from repro.core.basis import random_basis, kmeans, select_basis
@@ -20,7 +20,7 @@ __all__ = [
     "LOSSES", "get_loss", "SQUARED_HINGE", "LOGISTIC", "SQUARED",
     "KernelSpec", "gram", "build_C", "build_W", "predict",
     "Formulation4", "to_linearized", "beta_from_w",
-    "TronConfig", "TronResult", "tron",
+    "TronConfig", "TronResult", "tron", "tron_host",
     "NystromMachine", "solve",
     "DistConfig", "DistributedNystrom",
     "random_basis", "kmeans", "select_basis",

@@ -26,6 +26,14 @@ Three execution modes:
     TPU, row-chunked jnp recomputation elsewhere), and each f/g/Hd call
     AllReduces exactly one m-vector of partials.
 
+A fourth, out-of-core regime streams X from a :class:`ChunkSource`
+(:meth:`DistributedNystrom.solve_stream`, the ``stream`` plan): f/g/Hd are
+*accumulated* chunk by chunk through the same fused kmvp closures — each
+chunk is row-sharded over the mesh, evaluated, AllReduced (one m-vector
+psum), and discarded, so n can exceed host RAM. This is the paper's actual
+deployment shape: Map-Reduce nodes re-reading their disk partition every
+iteration.
+
 beta (and CG direction d) are replicated, matching the paper ("beta is
 broadcast to all nodes"); every m-vector reduction is a single psum.
 """
@@ -33,16 +41,17 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.compat import axis_size, shard_map
 from repro.core.losses import Loss, get_loss
 from repro.core.nystrom import KernelSpec, gram
-from repro.core.tron import TronConfig, TronResult, tron
+from repro.core.tron import TronConfig, TronResult, tron, tron_host
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +65,20 @@ class DistConfig:
                                        # the matvec (kmvp) so not even the
                                        # per-shard C block is ever allocated
     block_rows: Optional[int] = None   # fused jnp fallback row-chunk override
+
+
+class StreamClosures(NamedTuple):
+    """Host-callable TRON closures over a chunked source, plus the jitted
+    per-chunk evaluations for jaxpr introspection: tests trace
+    ``fg_chunk(Xc, yc, wc, basis, beta)`` / ``hd_chunk(Xc, D, basis, d)``
+    (chunk-global shapes; the shard_map sub-jaxpr is walked with per-shard
+    avals) to prove no intermediate reaches chunk_rows x m elements."""
+    fgrad: Callable
+    hessd: Callable
+    fg_chunk: Callable
+    hd_chunk: Callable
+    chunk_rows: int
+    n_chunks: int
 
 
 def _dp_index(data_axes):
@@ -304,6 +327,143 @@ class DistributedNystrom:
         fgrad = lambda beta: fg_body(X, y, basis, beta)
         hessd = lambda D, d: hd_body(X, y, basis, D, d)
         return fgrad, hessd
+
+    # ------------------------------------------------- streaming (out of core)
+    def make_stream_closures(self, source, basis) -> "StreamClosures":
+        """Accumulator-style (fgrad, hessd) over a chunked dataset.
+
+        Every evaluation walks ``source`` chunk by chunk: the chunk is
+        row-sharded over the data axes, pushed through the same fused kmvp
+        contractions as :meth:`make_fused_closures`, AllReduced (one
+        m-vector psum per chunk), and dropped — so the only X ever on
+        device is one ``(chunk_rows, d)`` block and no intermediate
+        reaches ``chunk_rows x m`` elements. Ragged last chunks (and any n
+        not divisible by the data extent) are handled with a zero
+        example-weight mask, which is exact for every registered loss.
+
+        The Gauss-Newton diagonal ``aux`` is one row-sharded
+        ``(chunk_rows,)`` array per chunk — O(n/p) floats per device, a
+        factor d smaller than the X partition the plan refuses to hold.
+        The returned closures are host callables for :func:`tron_host`;
+        ``fg_chunk``/``hd_chunk`` are exposed so tests can introspect the
+        per-chunk jaxpr and *prove* the memory contract.
+        """
+        if self.dist.model_axis is not None:
+            raise ValueError(
+                "streaming mode shards rows only (chunks go through the "
+                "fused kmvp path, which contracts over all basis columns); "
+                "use model_axis=None")
+        from repro.kernels.ops import otf_kmvp_fwd, otf_kmvp_t
+        da = self.dist.data_axes
+        dp = 1
+        for ax in da:
+            dp *= self.mesh.shape[ax]
+        cr = -(-source.chunk_rows // dp) * dp
+        if cr != source.chunk_rows:
+            source = source.with_chunk_rows(cr)
+        kw = dict(kind=self.kernel.kind, sigma=self.kernel.sigma,
+                  backend=self.dist.backend,
+                  block_rows=self.dist.block_rows)
+        basis_dev = jnp.asarray(basis)
+        dtype = np.dtype(source.dtype)
+
+        def fg_chunk(Xl, yl, wl, basis, beta):
+            o = otf_kmvp_fwd(Xl, basis, beta, **kw)              # C_chunk beta
+            lsum = jnp.sum(wl * self.loss.value(o, yl))
+            r = wl * self.loss.grad(o, yl)
+            g = otf_kmvp_t(Xl, basis, r, **kw)                   # C_chunk^T r
+            lsum, g = jax.lax.psum((lsum, g.astype(beta.dtype)), da)
+            return lsum, g, wl * self.loss.diag(o, yl)
+
+        def hd_chunk(Xl, Dl, basis, d):
+            o = otf_kmvp_fwd(Xl, basis, d, **kw)                 # C_chunk d
+            h = otf_kmvp_t(Xl, basis, Dl * o, **kw)              # C^T (D o)
+            return jax.lax.psum(h.astype(d.dtype), da)
+
+        smap = partial(shard_map, mesh=self.mesh, check_vma=False)
+        fg_eval = jax.jit(smap(
+            fg_chunk,
+            in_specs=(self.x_spec, self.row_spec, self.row_spec,
+                      self.rep_spec, self.rep_spec),
+            out_specs=(self.rep_spec, self.rep_spec, self.row_spec)))
+        hd_eval = jax.jit(smap(
+            hd_chunk,
+            in_specs=(self.x_spec, self.row_spec, self.rep_spec,
+                      self.rep_spec),
+            out_specs=self.rep_spec))
+
+        # the lam/2 beta^T W beta term has no X dependence: one fused
+        # m-vector contraction per evaluation, replicated on every device
+        @jax.jit
+        def wv_eval(basis, v):
+            return otf_kmvp_fwd(basis, basis, v, **kw)
+
+        x_sh = NamedSharding(self.mesh, self.x_spec)
+        r_sh = NamedSharding(self.mesh, self.row_spec)
+
+        def device_chunks(need_y: bool = True):
+            """Pad each chunk to exactly (cr,) rows with a zero weight mask
+            and place it sharded — one compiled body serves every chunk.
+            ``need_y=False`` (the Hd path, which bakes the mask into the
+            Gauss-Newton diagonal) skips the y/mask padding and transfer:
+            CG calls Hd dozens of times per TRON step, so two unused
+            (cr,)-vectors per chunk per call would be real traffic."""
+            for Xc, yc in source.iter_chunks():
+                rows = Xc.shape[0]
+                if rows != cr:
+                    Xc = np.concatenate(
+                        [Xc, np.zeros((cr - rows, source.d), dtype)])
+                Xd = jax.device_put(np.asarray(Xc, dtype), x_sh)
+                if not need_y:
+                    yield Xd
+                    continue
+                if rows != cr:
+                    yc = np.concatenate([yc, np.zeros((cr - rows,), yc.dtype)])
+                wc = np.zeros((cr,), dtype)
+                wc[:rows] = 1.0
+                yield (Xd, jax.device_put(np.asarray(yc, dtype), r_sh),
+                       jax.device_put(wc, r_sh))
+
+        def fgrad(beta):
+            beta_dev = jnp.asarray(np.asarray(beta, dtype))
+            with self.mesh:
+                Wbeta = wv_eval(basis_dev, beta_dev)
+                parts, aux = [], []
+                for Xc, yc, wc in device_chunks():
+                    lsum, gc, Dc = fg_eval(Xc, yc, wc, basis_dev, beta_dev)
+                    parts.append((lsum, gc))
+                    aux.append(Dc)
+                Wbeta = np.asarray(Wbeta, np.float64)
+                f = 0.5 * self.lam * float(np.asarray(beta, np.float64) @ Wbeta)
+                g = self.lam * Wbeta
+                for lsum, gc in parts:          # host f64 accumulation
+                    f += float(lsum)
+                    g += np.asarray(gc, np.float64)
+            return f, g.astype(dtype), aux
+
+        def hessd(aux, d):
+            d_dev = jnp.asarray(np.asarray(d, dtype))
+            with self.mesh:
+                Wd = wv_eval(basis_dev, d_dev)
+                parts = [hd_eval(Xc, Dc, basis_dev, d_dev)
+                         for Xc, Dc in zip(device_chunks(need_y=False), aux)]
+                h = self.lam * np.asarray(Wd, np.float64)
+                for hc in parts:
+                    h += np.asarray(hc, np.float64)
+            return h.astype(dtype)
+
+        return StreamClosures(fgrad=fgrad, hessd=hessd,
+                              fg_chunk=fg_eval, hd_chunk=hd_eval,
+                              chunk_rows=cr, n_chunks=source.n_chunks)
+
+    def solve_stream(self, source, basis, beta0=None,
+                     cfg: TronConfig = TronConfig()) -> TronResult:
+        """Out-of-core solve: TRON on the host, f/g/Hd streamed from
+        ``source`` (see :meth:`make_stream_closures`)."""
+        sc = self.make_stream_closures(source, basis)
+        if beta0 is None:
+            beta0 = np.zeros((basis.shape[0],), source.dtype)
+        return tron_host(sc.fgrad, sc.hessd, beta0, cfg)
 
     def make_closures(self, C, W, y):
         """(fgrad, hessd) closures over sharded C, W, y for TRON."""

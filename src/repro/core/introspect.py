@@ -73,6 +73,36 @@ def max_intermediate_elems(fn: Callable, *args, **kwargs) -> int:
     return max_intermediate_elems_jaxpr(closed.jaxpr)
 
 
+def _aval_bytes(var) -> int:
+    aval = getattr(var, "aval", None)
+    dtype = getattr(aval, "dtype", None)
+    if dtype is None:
+        return 0
+    return _aval_elems(var) * dtype.itemsize
+
+
+def max_intermediate_bytes_jaxpr(jaxpr) -> int:
+    """Largest eqn-output byte size anywhere in ``jaxpr`` (recursive) —
+    same walk as :func:`max_intermediate_elems_jaxpr` but dtype-aware, for
+    benchmarks that report peak-intermediate memory rather than assert an
+    element-count contract."""
+    worst = 0
+    for eqn in jaxpr.eqns:
+        for var in eqn.outvars:
+            worst = max(worst, _aval_bytes(var))
+        if "pallas" in eqn.primitive.name:
+            continue
+        for sub in _subjaxprs(eqn.params):
+            worst = max(worst, max_intermediate_bytes_jaxpr(sub))
+    return worst
+
+
+def max_intermediate_bytes(fn: Callable, *args, **kwargs) -> int:
+    """Byte-sized counterpart of :func:`max_intermediate_elems`."""
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return max_intermediate_bytes_jaxpr(closed.jaxpr)
+
+
 def assert_max_intermediate_below(fn: Callable, limit_elems: int,
                                   *args, **kwargs) -> int:
     """Raise if any intermediate of ``fn`` reaches ``limit_elems``.

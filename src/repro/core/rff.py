@@ -63,7 +63,14 @@ class RFFMachine:
 def solve_rff(key: jax.Array, X, y, m: int, *, lam: float, sigma: float,
               loss: Loss | str = "squared_hinge",
               cfg: TronConfig = TronConfig()) -> RFFMachine:
-    """Deprecated: use ``KernelMachine(MachineConfig(solver="rff", ...))``.
+    """Deprecated. The exact replacement is::
+
+        from repro.api import KernelMachine, MachineConfig
+        from repro.core import KernelSpec
+        km = KernelMachine(MachineConfig(
+            kernel=KernelSpec("gaussian", sigma=sigma), loss=loss, lam=lam,
+            solver="rff", rff_features=m, tron=cfg))
+        km.fit(X, y, key=key)              # km.state_["beta"], km.result_
 
     Thin shim — samples the basis from ``key`` exactly as before, then runs
     the unified estimator (formulation (4) with C = phi(X), W = I).
@@ -74,9 +81,10 @@ def solve_rff(key: jax.Array, X, y, m: int, *, lam: float, sigma: float,
     from repro.core.nystrom import KernelSpec
     from repro.core.solver import loss_name
 
-    warnings.warn("repro.core.rff.solve_rff is deprecated; use "
-                  "repro.api.KernelMachine with solver='rff'",
-                  DeprecationWarning, stacklevel=2)
+    warnings.warn(
+        "repro.core.rff.solve_rff is deprecated; use "
+        "KernelMachine(MachineConfig(solver='rff', rff_features=m, ...))"
+        ".fit(X, y, key=key)", DeprecationWarning, stacklevel=2)
     config = MachineConfig(
         kernel=KernelSpec("gaussian", sigma=sigma), loss=loss_name(loss),
         lam=lam, solver="rff", plan="local", tron=cfg, rff_features=m)

@@ -49,10 +49,19 @@ def solve(X, y, basis, *, lam: float, loss: Loss | str = "squared_hinge",
           kernel: KernelSpec = KernelSpec(), cfg: TronConfig = TronConfig(),
           beta0: Optional[jnp.ndarray] = None,
           backend: str = "jnp") -> NystromMachine:
-    """Deprecated: use ``KernelMachine(MachineConfig(...)).fit(X, y, basis)``."""
+    """Deprecated. The exact replacement is::
+
+        from repro.api import KernelMachine, MachineConfig
+        km = KernelMachine(MachineConfig(kernel=kernel, loss=loss, lam=lam,
+                                         solver="tron", plan="local",
+                                         tron=cfg, backend=backend))
+        km.fit(X, y, basis, beta0=beta0)   # km.state_["beta"], km.result_
+    """
     from repro.api import KernelMachine, MachineConfig  # lazy: avoid cycle
-    warnings.warn("repro.core.solve is deprecated; use "
-                  "repro.api.KernelMachine", DeprecationWarning, stacklevel=2)
+    warnings.warn(
+        "repro.core.solve is deprecated; use "
+        "KernelMachine(MachineConfig(solver='tron', plan='local', ...))"
+        ".fit(X, y, basis)", DeprecationWarning, stacklevel=2)
     config = MachineConfig(
         kernel=kernel, loss=loss_name(loss), lam=lam,
         solver="tron", plan="local", tron=cfg, backend=backend)

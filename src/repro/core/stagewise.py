@@ -1,11 +1,22 @@
 """DEPRECATED stage-wise driver — thin shim over KernelMachine.partial_fit.
 
-Stage-wise basis addition (paper §3) now lives on the estimator: each
-``partial_fit(X, y, new_points)`` call zero-pads beta for the new points
-and recomputes only the new columns of C (and new blocks of W) under the
-``local`` plan. This module repackages that history as the legacy
-``StageResult`` list; ``loss`` accepts a name or a Loss object, matching
-every other entrypoint.
+Stage-wise basis addition (paper §3) now lives on the estimator. The exact
+replacement for ``stagewise_solve(X, y, stages, lam=.., loss=.., kernel=..,
+cfg=..)`` is::
+
+    from repro.api import KernelMachine, MachineConfig
+    km = KernelMachine(MachineConfig(kernel=kernel, loss=loss, lam=lam,
+                                     solver="tron", plan="local", tron=cfg))
+    for new_points in stages:
+        km.partial_fit(X, y, new_points)      # warm-started, incremental C/W
+    # km.history_ holds one FitResult per stage; km.state_["beta"] the solution
+
+Each ``partial_fit`` call zero-pads beta for the new points and recomputes
+only the new columns of C (and new blocks of W) under the ``local`` plan
+(under ``otf_shard``/``stream`` recomputation makes growth free of any
+cache). This module repackages that history as the legacy ``StageResult``
+list; ``loss`` accepts a name or a Loss object, matching every other
+entrypoint.
 """
 from __future__ import annotations
 
@@ -35,15 +46,20 @@ def stagewise_solve(X, y, basis_stages: List[jnp.ndarray], *, lam: float,
                     cfg: TronConfig = TronConfig(),
                     backend: str = "jnp",
                     callback: Optional[Callable] = None) -> List[StageResult]:
-    """Deprecated: use ``KernelMachine(...).partial_fit`` per stage.
+    """Deprecated: call ``KernelMachine(MachineConfig(kernel=kernel,
+    loss=loss, lam=lam, solver="tron", plan="local",
+    tron=cfg)).partial_fit(X, y, new_points)`` once per stage instead (see
+    the module docstring for the full replacement snippet).
 
     ``basis_stages[k]`` holds only the points ADDED at stage k. Returns the
     per-stage results; beta of the final stage is the full solution.
     """
     from repro.api import KernelMachine, MachineConfig  # lazy: avoid cycle
-    warnings.warn("repro.core.stagewise_solve is deprecated; use "
-                  "repro.api.KernelMachine.partial_fit",
-                  DeprecationWarning, stacklevel=2)
+    warnings.warn(
+        "repro.core.stagewise_solve is deprecated; use "
+        "KernelMachine(MachineConfig(solver='tron', plan='local', ...))"
+        ".partial_fit(X, y, new_points) once per stage",
+        DeprecationWarning, stacklevel=2)
     config = MachineConfig(
         kernel=kernel, loss=loss_name(loss), lam=lam,
         solver="tron", plan="local", tron=cfg, backend=backend)

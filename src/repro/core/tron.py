@@ -14,6 +14,15 @@ The solver is generic over two closures:
     hessd(aux, d) -> H d
 so the same code runs the local, the shard_map-distributed, and the
 materialization-free (fused Pallas) problem variants.
+
+Two drivers share the update rules:
+  * :func:`tron` — fully traced (``lax.while_loop``); closures must be
+    jax-traceable. Every in-memory plan uses this.
+  * :func:`tron_host` — the same algorithm as an eager host loop, for
+    closures that cannot be traced because each f/g/Hd evaluation is an
+    *accumulation over data chunks streamed from disk* (the ``stream``
+    execution plan). The m-vector CG algebra runs in numpy on the host;
+    all O(n) work stays inside the chunk closures.
 """
 from __future__ import annotations
 
@@ -22,6 +31,7 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -198,4 +208,113 @@ def tron(fgrad: Callable, hessd: Callable, beta0: jnp.ndarray,
         beta=st.beta, f=st.f, gnorm=gnorm,
         n_iter=st.it, n_fg=st.n_fg, n_hd=st.n_hd,
         converged=gnorm <= cfg.grad_rtol * st.gnorm0,
+    )
+
+
+# --------------------------------------------------------------- host driver
+def _steihaug_cg_host(g, hvp: Callable, delta: float, tol: float,
+                      max_iter: int):
+    """Host mirror of :func:`_steihaug_cg`: same trcg semantics, numpy
+    vectors, eager ``hvp`` calls (each one may stream the dataset)."""
+    s = np.zeros_like(g)
+    r = -g
+    d = -g
+    rtr = float(g @ g)
+    it = 0
+    while np.sqrt(rtr) > tol and it < max_iter:
+        Hd = np.asarray(hvp(d), g.dtype)
+        dHd = float(d @ Hd)
+        alpha = rtr / (dHd if dHd > 0 else 1.0)
+        s_try = s + alpha * d
+        outside = (np.linalg.norm(s_try) >= delta) or (dHd <= 0)
+        if outside:
+            sd, dd, ss = float(s @ d), float(d @ d), float(s @ s)
+            rad = np.sqrt(max(sd * sd + dd * (delta * delta - ss), 0.0))
+            step = (rad - sd) / (dd if dd > 0 else 1.0)
+        else:
+            step = alpha
+        s = s + step * d
+        r = r - step * Hd
+        rtr_new = float(r @ r)
+        d = r + (rtr_new / (rtr if rtr > 0 else 1.0)) * d
+        rtr = rtr_new
+        it += 1
+        if outside:
+            break
+    return s, r, it
+
+
+def tron_host(fgrad: Callable, hessd: Callable, beta0,
+              cfg: TronConfig = TronConfig()) -> TronResult:
+    """Eager trust-region Newton-CG with the exact update rules of
+    :func:`tron`, for accumulator-style closures.
+
+    ``fgrad``/``hessd`` may be arbitrary Python callables — in the
+    ``stream`` plan each call loops over dataset chunks, accumulating the
+    m-vector on the host while per-chunk math runs jitted on the mesh.
+    ``aux`` is treated as an opaque value (the stream plan keeps the
+    Gauss-Newton diagonal as one row-sharded array per chunk).
+    """
+    beta = np.asarray(beta0)
+    dtype = beta.dtype
+    f, g, aux = fgrad(beta)
+    f = float(f)
+    g = np.asarray(g, dtype)
+    gnorm0 = float(np.linalg.norm(g))
+    delta = gnorm0
+    it, n_fg, n_hd = 0, 1, 0
+    active = gnorm0 > 0
+    while active and np.linalg.norm(g) > cfg.grad_rtol * gnorm0 \
+            and it < cfg.max_iter:
+        gnorm = float(np.linalg.norm(g))
+        s, r, cg_steps = _steihaug_cg_host(
+            g, lambda d: hessd(aux, d), delta, cfg.cg_rtol * gnorm,
+            cfg.cg_max_iter)
+        n_hd += cg_steps
+
+        snorm = float(np.linalg.norm(s))
+        gs = float(g @ s)
+        prered = -0.5 * (gs - float(s @ r))
+
+        beta_try = (beta + s).astype(dtype)
+        f_new, g_new, aux_new = fgrad(beta_try)
+        f_new = float(f_new)
+        g_new = np.asarray(g_new, dtype)
+        n_fg += 1
+        actred = f - f_new
+
+        denom = f_new - f - gs
+        if denom <= 0:
+            alpha = cfg.sigma3
+        else:
+            alpha = max(cfg.sigma1, -0.5 * (gs / denom))
+        if it == 0:
+            delta = min(delta, snorm)
+        if actred < cfg.eta0 * prered:
+            delta = min(max(alpha, cfg.sigma1) * snorm, cfg.sigma2 * delta)
+        elif actred < cfg.eta1 * prered:
+            delta = max(cfg.sigma1 * delta,
+                        min(alpha * snorm, cfg.sigma2 * delta))
+        elif actred < cfg.eta2 * prered:
+            delta = max(cfg.sigma1 * delta,
+                        min(alpha * snorm, cfg.sigma3 * delta))
+        else:
+            delta = max(delta, min(alpha * snorm, cfg.sigma3 * delta))
+
+        if actred > cfg.eta0 * prered:
+            beta, f, g, aux = beta_try, f_new, g_new, aux_new
+        it += 1
+
+        feps = abs(f) * 1e-12
+        if prered <= 0 or (abs(actred) <= feps and abs(prered) <= feps):
+            active = False
+
+    gnorm = float(np.linalg.norm(g))
+    return TronResult(
+        beta=jnp.asarray(beta, dtype), f=jnp.asarray(f, jnp.float32),
+        gnorm=jnp.asarray(gnorm, jnp.float32),
+        n_iter=jnp.asarray(it, jnp.int32),
+        n_fg=jnp.asarray(n_fg, jnp.int32),
+        n_hd=jnp.asarray(n_hd, jnp.int32),
+        converged=jnp.asarray(gnorm <= cfg.grad_rtol * gnorm0),
     )

@@ -1,0 +1,295 @@
+"""Chunked dataset sources for the out-of-core ``stream`` execution plan.
+
+The paper's Map-Reduce nodes *stream their data partition from disk* on
+every TRON iteration — f, g, and Hd are sums over examples, so nothing in
+formulation (4) requires X resident in memory. A :class:`ChunkSource`
+exposes the training set as a sequence of ``(X_chunk, y_chunk)`` row
+blocks the streaming solver consumes one at a time:
+
+* :class:`ArrayChunkSource` — view over an in-memory (X, y) pair; lets the
+  ``stream`` plan run on ordinary arrays (plan-equivalence tests, small
+  jobs) with zero copies.
+* :class:`MmapChunkSource` — a directory of ``.npy`` shard pairs
+  (``X_00000.npy`` / ``y_00000.npy``, written by :func:`save_chunks`) or
+  ``.npz`` shards with ``X``/``y`` keys. ``.npy`` shards open under
+  ``numpy`` memory mapping, so a chunk read touches only ``chunk_rows``
+  rows of disk — n can exceed host RAM.
+
+Chunk ``i`` is always rows ``[i*chunk_rows, min(n, (i+1)*chunk_rows))`` of
+the logical concatenation; only the last chunk may be short. The solver
+pads every chunk to exactly ``chunk_rows`` rows with a zero example-weight
+mask, so one compiled evaluation body serves all chunks.
+"""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+from typing import Iterator, Optional, Sequence, Tuple
+
+import numpy as np
+
+_SHARD_RE = re.compile(r"^X_(\d+)\.npy$")
+
+
+class ChunkSource:
+    """Base chunked view of an (X, y) dataset.
+
+    Subclasses implement :meth:`_rows`; everything else (chunk addressing,
+    row gathers for basis selection) is shared. ``shape``/``dtype`` mirror
+    the array interface closely enough for estimator code that only
+    inspects metadata (``X.shape[0]``, ``X.dtype``).
+    """
+
+    def __init__(self, n: int, d: int, dtype, chunk_rows: Optional[int]):
+        if n <= 0 or d <= 0:
+            raise ValueError(f"empty dataset: n={n}, d={d}")
+        self.n = int(n)
+        self.d = int(d)
+        self.dtype = np.dtype(dtype)
+        self.chunk_rows = int(chunk_rows) if chunk_rows else min(self.n, 16384)
+        if self.chunk_rows <= 0:
+            raise ValueError(f"chunk_rows must be positive, got {chunk_rows}")
+
+    # ------------------------------------------------------------- interface
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.n, self.d)
+
+    @property
+    def n_chunks(self) -> int:
+        return -(-self.n // self.chunk_rows)
+
+    def _rows(self, lo: int, hi: int) -> Tuple[np.ndarray, np.ndarray]:
+        raise NotImplementedError
+
+    def chunk(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(X_chunk, y_chunk) for chunk ``i``; the last chunk may be short."""
+        if not 0 <= i < self.n_chunks:
+            raise IndexError(f"chunk {i} out of range [0, {self.n_chunks})")
+        lo = i * self.chunk_rows
+        return self._rows(lo, min(self.n, lo + self.chunk_rows))
+
+    def iter_chunks(self) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        for i in range(self.n_chunks):
+            yield self.chunk(i)
+
+    def take_rows(self, idx) -> np.ndarray:
+        """Gather X rows by global index (basis selection: O(m) rows read,
+        never the full set)."""
+        idx = np.asarray(idx, np.int64)
+        out = np.empty((idx.shape[0], self.d), self.dtype)
+        order = np.argsort(idx, kind="stable")
+        sorted_idx = idx[order]
+        lo = 0
+        while lo < sorted_idx.shape[0]:
+            c = int(sorted_idx[lo]) // self.chunk_rows
+            hi = lo
+            while (hi < sorted_idx.shape[0]
+                   and int(sorted_idx[hi]) // self.chunk_rows == c):
+                hi += 1
+            Xc, _ = self.chunk(c)
+            local = sorted_idx[lo:hi] - c * self.chunk_rows
+            out[order[lo:hi]] = np.asarray(Xc)[local]
+            lo = hi
+        return out
+
+    def with_chunk_rows(self, chunk_rows: int) -> "ChunkSource":
+        """Same data, different chunking (used to round chunk_rows up to a
+        multiple of the mesh's data extent)."""
+        raise NotImplementedError
+
+
+class ArrayChunkSource(ChunkSource):
+    """In-memory adapter: chunked view over arrays already in RAM."""
+
+    def __init__(self, X, y, chunk_rows: Optional[int] = None):
+        X = np.asarray(X)
+        y = np.asarray(y)
+        if X.ndim != 2:
+            raise ValueError(f"X must be (n, d), got shape {X.shape}")
+        if y.shape != (X.shape[0],):
+            raise ValueError(
+                f"y shape {y.shape} does not match X rows {X.shape[0]}")
+        super().__init__(X.shape[0], X.shape[1], X.dtype, chunk_rows)
+        self.X, self.y = X, y
+
+    def _rows(self, lo, hi):
+        return self.X[lo:hi], self.y[lo:hi]
+
+    def take_rows(self, idx):
+        return self.X[np.asarray(idx, np.int64)]
+
+    def with_chunk_rows(self, chunk_rows):
+        return ArrayChunkSource(self.X, self.y, chunk_rows)
+
+
+class MmapChunkSource(ChunkSource):
+    """Chunks streamed from ``.npy``/``.npz`` shards in ``data_dir``.
+
+    Layout (written by :func:`save_chunks`): ``X_00000.npy, y_00000.npy,
+    X_00001.npy, ...`` — or ``shard_*.npz`` files each holding ``X`` and
+    ``y`` arrays. ``mmap=True`` opens ``.npy`` shards with
+    ``np.load(mmap_mode="r")`` so only the rows a chunk touches are read
+    (``.npz`` is a zip container numpy cannot map; those shards are loaded
+    lazily per chunk access instead).
+    """
+
+    def __init__(self, data_dir, chunk_rows: Optional[int] = None,
+                 mmap: bool = True, _layout=None):
+        self.data_dir = Path(data_dir)
+        self.mmap = bool(mmap)
+        self._cache: dict = {}
+        if _layout is not None:      # rechunk: reuse the probed layout
+            self._paths, self._npz, self._offsets, d, dtype = _layout
+        else:
+            if not self.data_dir.is_dir():
+                raise FileNotFoundError(
+                    f"{self.data_dir}: not a directory (create one with "
+                    f"repro.data.chunks.save_chunks)")
+            npy = sorted(p for p in self.data_dir.iterdir()
+                         if _SHARD_RE.match(p.name))
+            npz = sorted(self.data_dir.glob("shard_*.npz"))
+            if npy and npz:
+                raise ValueError(f"{self.data_dir}: mixed .npy and .npz shards")
+            if not npy and not npz:
+                raise FileNotFoundError(
+                    f"{self.data_dir}: no X_*.npy / shard_*.npz shards found")
+            self._paths = npy or npz
+            self._npz = bool(npz)
+            d, dtype, offsets = self._probe_layout()
+            self._offsets = np.asarray(offsets, np.int64)
+        super().__init__(self._offsets[-1], d, dtype, chunk_rows)
+
+    def _probe_layout(self):
+        """(d, dtype, offsets) without inflating shards: save_chunks'
+        meta.json answers directly; otherwise open each shard (cheap header
+        read for mmap .npy, a full decompress only for foreign .npz)."""
+        meta_path = self.data_dir / "meta.json"
+        if meta_path.exists():
+            meta = json.loads(meta_path.read_text())
+            fmt = "npz" if self._npz else "npy"
+            if (meta.get("format") == fmt
+                    and meta.get("n_shards") == len(self._paths)):
+                rps, n = meta["rows_per_shard"], meta["n"]
+                offsets = [min(i * rps, n) for i in range(len(self._paths) + 1)]
+                return meta["d"], np.dtype(meta["dtype"]), offsets
+        offsets = [0]
+        d = dtype = None
+        for p in self._paths:
+            Xs, _ = self._load_shard(p)
+            if d is None:
+                d, dtype = Xs.shape[1], Xs.dtype
+            elif Xs.shape[1] != d:
+                raise ValueError(f"{p}: feature dim {Xs.shape[1]} != {d}")
+            offsets.append(offsets[-1] + Xs.shape[0])
+        return d, dtype, offsets
+
+    def _load_shard(self, path):
+        if path in self._cache:
+            return self._cache[path]
+        if self._npz:
+            with np.load(path) as z:
+                pair = (z["X"], z["y"])
+        else:
+            mode = "r" if self.mmap else None
+            pair = (np.load(path, mmap_mode=mode),
+                    np.load(path.parent / ("y_" + path.name[2:]),
+                            mmap_mode=mode))
+        if pair[0].shape[0] != pair[1].shape[0]:
+            raise ValueError(f"{path}: X/y row mismatch "
+                             f"{pair[0].shape[0]} != {pair[1].shape[0]}")
+        # cache ONLY cheap memmap handles; fully-materialized pairs (npz,
+        # mmap=False) are re-read per access — keeping them would quietly
+        # accumulate the whole dataset in host RAM, the exact thing the
+        # stream plan exists to avoid
+        if self.mmap and not self._npz:
+            self._cache[path] = pair
+        return pair
+
+    def _rows(self, lo, hi):
+        s0 = int(np.searchsorted(self._offsets, lo, side="right")) - 1
+        Xs, ys = [], []
+        s = s0
+        while lo < hi:
+            Xa, ya = self._load_shard(self._paths[s])
+            a = lo - int(self._offsets[s])
+            b = min(hi - int(self._offsets[s]), Xa.shape[0])
+            Xs.append(np.asarray(Xa[a:b]))
+            ys.append(np.asarray(ya[a:b]))
+            lo += b - a
+            s += 1
+        if len(Xs) == 1:
+            return Xs[0], ys[0]
+        return np.concatenate(Xs, axis=0), np.concatenate(ys, axis=0)
+
+    def with_chunk_rows(self, chunk_rows):
+        return MmapChunkSource(
+            self.data_dir, chunk_rows, self.mmap,
+            _layout=(self._paths, self._npz, self._offsets, self.d,
+                     self.dtype))
+
+
+def save_chunks(data_dir, X, y, rows_per_shard: int = 65536,
+                compress: bool = False) -> Path:
+    """Write (X, y) as a shard directory :class:`MmapChunkSource` can open.
+
+    Default is ``.npy`` pairs (memory-mappable); ``compress=True`` writes
+    ``shard_*.npz`` instead. A ``meta.json`` records the logical shape so
+    tooling can size jobs without opening shards.
+    """
+    data_dir = Path(data_dir)
+    data_dir.mkdir(parents=True, exist_ok=True)
+    X = np.asarray(X)
+    y = np.asarray(y)
+    if y.shape != (X.shape[0],):
+        raise ValueError(f"y shape {y.shape} does not match X rows")
+    n_shards = -(-X.shape[0] // rows_per_shard)
+    for s in range(n_shards):
+        lo, hi = s * rows_per_shard, min(X.shape[0], (s + 1) * rows_per_shard)
+        if compress:
+            np.savez_compressed(data_dir / f"shard_{s:05d}.npz",
+                                X=X[lo:hi], y=y[lo:hi])
+        else:
+            np.save(data_dir / f"X_{s:05d}.npy", X[lo:hi])
+            np.save(data_dir / f"y_{s:05d}.npy", y[lo:hi])
+    (data_dir / "meta.json").write_text(json.dumps(
+        {"n": int(X.shape[0]), "d": int(X.shape[1]),
+         "dtype": str(X.dtype), "n_shards": n_shards,
+         "rows_per_shard": rows_per_shard,
+         "format": "npz" if compress else "npy"}, indent=2))
+    return data_dir
+
+
+def as_chunk_source(X, y=None, chunk_rows: Optional[int] = None,
+                    mmap: bool = True) -> ChunkSource:
+    """Coerce (X, y) into a :class:`ChunkSource`.
+
+    Accepts an existing source (rechunked if ``chunk_rows`` differs), a
+    directory path (opened with :class:`MmapChunkSource`), or in-memory
+    arrays (wrapped by :class:`ArrayChunkSource`).
+    """
+    if isinstance(X, ChunkSource):
+        if chunk_rows and chunk_rows != X.chunk_rows:
+            return X.with_chunk_rows(chunk_rows)
+        return X
+    if isinstance(X, (str, Path)):
+        return MmapChunkSource(X, chunk_rows, mmap)
+    if y is None:
+        raise ValueError("as_chunk_source needs y when X is an array")
+    return ArrayChunkSource(X, y, chunk_rows)
+
+
+def random_basis_from_source(key, source: ChunkSource, m: int) -> np.ndarray:
+    """m rows sampled uniformly without replacement from a chunked source —
+    the streaming counterpart of :func:`repro.core.basis.random_basis`.
+
+    Only O(m) rows are *read* (the full set never leaves disk). The index
+    draw itself matches ``random_basis`` bit-for-bit, which costs an
+    O(n)-element permutation like every ``jax.random.choice(replace=False)``
+    — n int32s, a factor 4·d smaller than the X bytes the source avoids
+    holding; switch to a host-side reservoir draw if even that binds.
+    """
+    import jax
+    idx = jax.random.choice(key, source.n, shape=(m,), replace=False)
+    return source.take_rows(np.asarray(idx))

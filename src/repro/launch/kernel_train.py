@@ -9,29 +9,42 @@ Multi-device simulation:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python -m repro.launch.kernel_train --mesh 4,2 --plan shard_map
 
-Any registered solver x plan combination is reachable from the CLI
-(--solver tron|linearized|rff|ppacksvm,
- --plan local|shard_map|auto|otf|otf_shard — otf_shard is the fused
- mesh-sharded on-the-fly plan: no (n/p, m) C block on any device);
---save writes a serving checkpoint for repro.launch.kernel_serve.
+Out-of-core streaming from a shard directory (written by
+``repro.data.chunks.save_chunks``; ``--export-chunks`` writes the chosen
+synthetic dataset there first, so this one line is a full demo):
+  PYTHONPATH=src python -m repro.launch.kernel_train --plan stream \
+      --data-dir /tmp/covtype_shards --export-chunks --chunk-rows 8192
+
+Any registered solver x plan combination is reachable from the CLI; the
+``--solver``/``--plan`` choices below are read from the live registries in
+``repro.api.registry``, so a newly registered entry shows up in ``--help``
+without touching this file. ``--save`` writes a serving checkpoint for
+``repro.launch.kernel_serve``.
 """
 from __future__ import annotations
 
 import argparse
 import time
+from pathlib import Path
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.api import (KernelMachine, MachineConfig, available_plans,
-                       available_solvers, get_solver)
+from repro.api import (KernelMachine, MachineConfig, StreamConfig,
+                       available_plans, available_solvers, get_solver)
 from repro.core import KernelSpec, TronConfig, select_basis
 from repro.core.compat import make_mesh
 from repro.data import PAPER_DATASETS, make_dataset
+from repro.data.chunks import MmapChunkSource, save_chunks
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        epilog=(f"registered solvers: {', '.join(available_solvers())} | "
+                f"registered plans: {', '.join(available_plans())} "
+                f"(see repro.api.registry; docs/paper_map.md maps each to "
+                f"the paper)"))
     ap.add_argument("--dataset", default="covtype", choices=list(PAPER_DATASETS))
     ap.add_argument("--scale", type=float, default=0.01)
     ap.add_argument("--m", type=int, default=512)
@@ -39,11 +52,23 @@ def main():
                     dest="strategy", choices=["auto", "random", "kmeans"])
     ap.add_argument("--mesh", default=None,
                     help="comma mesh shape, e.g. 4,2 -> (data, model)")
-    ap.add_argument("--solver", default="tron", choices=available_solvers())
-    ap.add_argument("--plan", default="shard_map", choices=available_plans())
+    ap.add_argument("--solver", default="tron", choices=available_solvers(),
+                    help="optimization strategy (live registry: %(choices)s)")
+    ap.add_argument("--plan", default="shard_map", choices=available_plans(),
+                    help="execution plan (live registry: %(choices)s)")
     ap.add_argument("--max-iter", type=int, default=200)
     ap.add_argument("--lam", type=float, default=None)
     ap.add_argument("--sigma", type=float, default=None)
+    ap.add_argument("--data-dir", default=None,
+                    help="stream training data from this .npy/.npz shard "
+                         "directory (plan 'stream'; see "
+                         "repro.data.chunks.save_chunks)")
+    ap.add_argument("--export-chunks", action="store_true",
+                    help="write the synthetic --dataset into --data-dir as "
+                         "mmap-able .npy shards before training")
+    ap.add_argument("--chunk-rows", type=int, default=None,
+                    help="rows streamed per step under plan 'stream' "
+                         "(bounds every intermediate at chunk_rows x m)")
     ap.add_argument("--save", default=None,
                     help="checkpoint path for repro.launch.kernel_serve")
     args = ap.parse_args()
@@ -56,36 +81,64 @@ def main():
     mesh = make_mesh(shape, names)
     model_axis = "model" if "model" in mesh.shape else None
     needs_basis = get_solver(args.solver).needs_basis
+    if args.data_dir and args.plan != "stream":
+        ap.error("--data-dir streams from disk and requires --plan stream")
 
     def build_config(lam, sigma, m):
         return MachineConfig(
             kernel=KernelSpec("gaussian", sigma=sigma), lam=lam,
             solver=args.solver, plan=args.plan,
             tron=TronConfig(max_iter=args.max_iter),
-            rff_features=m, model_axis=model_axis)
+            m=m, rff_features=m, model_axis=model_axis,
+            stream=StreamConfig(chunk_rows=args.chunk_rows))
 
     # fail on an invalid solver/plan pair before any data work
     KernelMachine(build_config(1.0, 1.0, args.m), mesh=mesh)
 
     t0 = time.time()
-    X, y, Xt, yt, spec = make_dataset(args.dataset, jax.random.PRNGKey(0),
-                                      scale=args.scale, d_cap=784)
+    spec = PAPER_DATASETS[args.dataset]
+    X = y = Xt = yt = None
+    if args.data_dir and args.export_chunks:
+        dd = Path(args.data_dir)
+        if dd.is_dir() and (any(dd.glob("X_*.npy"))
+                            or any(dd.glob("shard_*.npz"))):
+            print(f"[export] {args.data_dir} already holds shards — "
+                  f"training on THOSE, not a fresh --dataset {args.dataset} "
+                  f"--scale {args.scale} export (delete the directory to "
+                  f"re-export)")
+        else:
+            Xe, ye, _, _, _ = make_dataset(args.dataset, jax.random.PRNGKey(0),
+                                           scale=args.scale, d_cap=784)
+            save_chunks(args.data_dir, Xe, ye)
+            print(f"[export] wrote {Xe.shape[0]} rows to {args.data_dir} "
+                  f"({time.time() - t0:.2f}s)")
+    if args.data_dir:
+        X = MmapChunkSource(args.data_dir, chunk_rows=args.chunk_rows)
+        print(f"[step1] streaming {args.data_dir}: n={X.n} d={X.d} "
+              f"chunks={X.n_chunks} ({time.time() - t0:.2f}s)")
+    else:
+        X, y, Xt, yt, spec = make_dataset(args.dataset, jax.random.PRNGKey(0),
+                                          scale=args.scale, d_cap=784)
+        print(f"[step1] loaded {args.dataset}: n={X.shape[0]} d={X.shape[1]} "
+              f"({time.time() - t0:.2f}s)")
     lam = args.lam if args.lam is not None else max(spec.lam * args.scale, 1e-4)
     sigma = args.sigma if args.sigma is not None else max(spec.sigma, 1.0)
-    print(f"[step1] loaded {args.dataset}: n={X.shape[0]} d={X.shape[1]} "
-          f"({time.time() - t0:.2f}s)")
 
-    # keep shard sizes divisible
-    n_dp = mesh.shape["data"]
-    n = (X.shape[0] // (n_dp * 8)) * n_dp * 8
-    per = max(n_dp * mesh.shape.get("model", 1), 1)
-    m = (args.m // per) * per
-    X, y = X[:n], y[:n]
-    Xs = jax.device_put(X, NamedSharding(mesh, P(("data",), None)))
-    ys = jax.device_put(y, NamedSharding(mesh, P(("data",))))
+    if args.data_dir:
+        Xs, ys = X, None           # plan 'stream' shards chunk by chunk
+        m = args.m
+    else:
+        # keep shard sizes divisible for the in-memory distributed plans
+        n_dp = mesh.shape["data"]
+        n = (X.shape[0] // (n_dp * 8)) * n_dp * 8
+        per = max(n_dp * mesh.shape.get("model", 1), 1)
+        m = (args.m // per) * per
+        X, y = X[:n], y[:n]
+        Xs = jax.device_put(X, NamedSharding(mesh, P(("data",), None)))
+        ys = jax.device_put(y, NamedSharding(mesh, P(("data",))))
 
     basis = None
-    if needs_basis:
+    if needs_basis and not args.data_dir:
         t0 = time.time()
         basis = select_basis(jax.random.PRNGKey(1), Xs, m,
                              strategy=args.strategy, mesh=mesh,
@@ -97,15 +150,19 @@ def main():
     km = KernelMachine(build_config(lam, sigma, m), mesh=mesh)
 
     t0 = time.time()
-    km.fit(Xs, ys, basis)
+    km.fit(Xs, ys, basis)          # streaming fit samples a random basis
     jax.block_until_ready(km.state_["beta"])
     r = km.result_
     print(f"[step3+4] {r.solver}/{r.plan}: f={r.f:.4f} iters={r.n_iter} "
           f"fg={r.n_fg} hd={r.n_hd} converged={r.converged} "
           f"({time.time() - t0:.2f}s)")
 
-    print(f"[eval ] train_acc={km.score(X, y):.4f} "
-          f"test_acc={km.score(Xt, yt):.4f}")
+    if args.data_dir:
+        Xh, yh = X.chunk(0)        # held-in sample; no synthetic test split
+        print(f"[eval ] train_acc(chunk0)={km.score(Xh, yh):.4f}")
+    else:
+        print(f"[eval ] train_acc={km.score(X, y):.4f} "
+              f"test_acc={km.score(Xt, yt):.4f}")
     if args.save:
         print(f"[save ] {km.save(args.save)}")
 

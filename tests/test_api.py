@@ -34,7 +34,7 @@ def test_registries_populated():
     assert set(available_solvers()) == {"tron", "linearized", "rff",
                                         "ppacksvm"}
     assert set(available_plans()) == {"local", "shard_map", "auto", "otf",
-                                      "otf_shard"}
+                                      "otf_shard", "stream"}
 
 
 def test_invalid_composition_raises_at_construction():

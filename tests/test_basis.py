@@ -1,0 +1,107 @@
+"""Basis selection (repro.core.basis): strategy dispatch, determinism, and
+mesh/local agreement of the distributed K-means — paper §3.2's recipe.
+
+``select_basis`` is the entry every fit() without an explicit basis goes
+through, so a silent dispatch regression (auto picking the wrong strategy,
+kmeans drifting between runs) would skew every downstream accuracy table.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.basis import kmeans, random_basis, select_basis
+from repro.core.compat import make_mesh
+from repro.data import make_classification
+
+N, D, M = 512, 6, 16
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.fixture(scope="module")
+def X():
+    return make_classification(jax.random.PRNGKey(0), N, D,
+                               clusters_per_class=4)[0]
+
+
+# ------------------------------------------------------------------ dispatch
+def test_auto_picks_kmeans_below_threshold(X):
+    """auto == kmeans when m and d sit under both thresholds."""
+    auto = select_basis(KEY, X, M, strategy="auto")
+    km = select_basis(KEY, X, M, strategy="kmeans")
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(km))
+
+
+def test_auto_crosses_to_random_on_large_m(X):
+    """auto == random once m exceeds kmeans_threshold (the paper's Table 2
+    cost blow-up regime)."""
+    auto = select_basis(KEY, X, M, strategy="auto", kmeans_threshold=M - 1)
+    rnd = select_basis(KEY, X, M, strategy="random")
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(rnd))
+
+
+def test_auto_crosses_to_random_on_wide_features(X):
+    auto = select_basis(KEY, X, M, strategy="auto",
+                        n_features_threshold=D - 1)
+    rnd = select_basis(KEY, X, M, strategy="random")
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(rnd))
+
+
+def test_explicit_strategies_differ(X):
+    """kmeans must actually move points: Lloyd centroids are means, not
+    members of X (random picks training rows verbatim)."""
+    km = np.asarray(select_basis(KEY, X, M, strategy="kmeans"))
+    rnd = np.asarray(select_basis(KEY, X, M, strategy="random"))
+    assert km.shape == rnd.shape == (M, D)
+    assert np.max(np.abs(km - rnd)) > 1e-3
+    # every random-basis row is a training row; kmeans rows generally aren't
+    Xn = np.asarray(X)
+    assert all((Xn == r).all(axis=1).any() for r in rnd)
+
+
+def test_unknown_strategy_raises(X):
+    with pytest.raises(ValueError, match="unknown basis strategy"):
+        select_basis(KEY, X, M, strategy="medoid")
+
+
+# -------------------------------------------------------------- determinism
+def test_kmeans_deterministic_under_fixed_key(X):
+    c1, t1 = kmeans(KEY, X, M, n_iter=3)
+    c2, t2 = kmeans(KEY, X, M, n_iter=3)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+
+
+def test_kmeans_inertia_decreases(X):
+    _, trace = kmeans(KEY, X, M, n_iter=4)
+    trace = np.asarray(trace)
+    assert trace.shape == (4,)
+    assert trace[-1] <= trace[0]
+
+
+def test_random_basis_rows_unique(X):
+    b = np.asarray(random_basis(KEY, X, M))
+    assert np.unique(b, axis=0).shape[0] == M     # without replacement
+
+
+# --------------------------------------------------------- mesh/local parity
+def test_kmeans_mesh_matches_local(X):
+    """The distributed Lloyd step (local partial sums + psum) must agree
+    with the single-device scan — identical math, different reduction."""
+    mesh = make_mesh((1,), ("data",))
+    c_local, t_local = kmeans(KEY, X, M, n_iter=3)
+    c_mesh, t_mesh = kmeans(KEY, X, M, n_iter=3, mesh=mesh,
+                            data_axes=("data",))
+    np.testing.assert_allclose(np.asarray(c_mesh), np.asarray(c_local),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(t_mesh), np.asarray(t_local),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_select_basis_kmeans_routes_through_mesh(X):
+    mesh = make_mesh((1,), ("data",))
+    c_mesh = select_basis(KEY, X, M, strategy="kmeans", mesh=mesh,
+                          data_axes=("data",))
+    c_local = select_basis(KEY, X, M, strategy="kmeans")
+    np.testing.assert_allclose(np.asarray(c_mesh), np.asarray(c_local),
+                               rtol=1e-5, atol=1e-5)

@@ -82,11 +82,37 @@ res_t = solver.solve(Xs8, ys8, basis, cfg=tight)
 out["otf_shard_rel_l2"] = float(
     jnp.linalg.norm(res_t.beta - ref_t.beta) / jnp.linalg.norm(ref_t.beta))
 
+# stream plan on the same 8-device mesh, fed from a real mmap shard
+# directory (shard boundaries deliberately misaligned with chunk_rows)
+import tempfile
+import numpy as np
+from repro.data.chunks import MmapChunkSource, save_chunks
+with tempfile.TemporaryDirectory() as td:
+    save_chunks(td, np.asarray(X), np.asarray(y), rows_per_shard=600)
+    src = MmapChunkSource(td, chunk_rows=512)
+    sol_s = DistributedNystrom(mesh8, 0.5, "squared_hinge", kern,
+                               DistConfig(materialize=False, fused=True))
+    res_s = sol_s.solve_stream(src, np.asarray(basis), cfg=tight)
+    out["stream_rel_l2"] = float(
+        jnp.linalg.norm(res_s.beta - ref_t.beta) / jnp.linalg.norm(ref_t.beta))
+    # per-chunk memory contract with the real 8-way sharding
+    sc = sol_s.make_stream_closures(src, np.asarray(basis))
+    m = basis.shape[0]
+    cr = sc.chunk_rows
+    Xc = jnp.zeros((cr, X.shape[1])); vc = jnp.zeros((cr,))
+    with mesh8:
+        out["stream_max_intermediate"] = max(
+            max_intermediate_elems(sc.fg_chunk, Xc, vc, vc, basis,
+                                   jnp.zeros((m,))),
+            max_intermediate_elems(sc.hd_chunk, Xc, vc, basis,
+                                   jnp.zeros((m,))))
+    out["chunk_m_elems"] = cr * m
+
 # unified estimator: the SAME fit call under every execution plan on the
 # 8-device mesh — only MachineConfig.plan changes between runs
 from repro.api import KernelMachine, MachineConfig
 base_cfg = MachineConfig(kernel=kern, lam=0.5, tron=TronConfig(max_iter=50))
-for plan in ("local", "shard_map", "auto", "otf", "otf_shard"):
+for plan in ("local", "shard_map", "auto", "otf", "otf_shard", "stream"):
     km = KernelMachine(base_cfg.replace(plan=plan), mesh=mesh8)
     km.fit(Xs8, ys8, basis)
     out["api-" + plan] = {
@@ -151,8 +177,8 @@ def test_distributed_kmeans_matches_local(results):
     assert results["kmeans_max_diff"] < 1e-4
 
 
-@pytest.mark.parametrize("plan",
-                         ["local", "shard_map", "auto", "otf", "otf_shard"])
+@pytest.mark.parametrize("plan", ["local", "shard_map", "auto", "otf",
+                                  "otf_shard", "stream"])
 def test_kernel_machine_plans_match_on_8_devices(results, plan):
     """Acceptance: one fit call, plan swapped by config, same optimum."""
     r = results[f"api-{plan}"]
@@ -180,3 +206,16 @@ def test_otf_shard_partial_fit_growth_on_mesh(results):
     g = results["otf_shard_growth"]
     assert g["stages"] == 2
     assert g["rel_l2"] < 1e-3, g
+
+
+def test_stream_beta_matches_local_1e4(results):
+    """Acceptance: the out-of-core stream solve (real mmap shards, 8-way
+    mesh, host TRON) lands within 1e-4 relative of the tight local solve."""
+    assert results["stream_rel_l2"] < 1e-4, results["stream_rel_l2"]
+
+
+def test_stream_chunk_memory_contract_on_mesh(results):
+    """No per-chunk intermediate reaches chunk_rows x m elements on the
+    real 8-device mesh (per-shard avals)."""
+    assert results["stream_max_intermediate"] < results["chunk_m_elems"], \
+        (results["stream_max_intermediate"], results["chunk_m_elems"])

@@ -12,15 +12,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.api import KernelMachine, MachineConfig, available_plans
+from repro.api import KernelMachine, MachineConfig, StreamConfig, available_plans
 from repro.core import KernelSpec, TronConfig, random_basis
 from repro.core.compat import make_mesh
 from repro.core.distributed import DistConfig, DistributedNystrom
 from repro.core.introspect import (assert_max_intermediate_below,
                                    max_intermediate_elems)
-from repro.data import make_classification
+from repro.data import ArrayChunkSource, make_classification
 
 N, M, D = 256, 32, 8
+CHUNK = 64          # stream plan chunking for this fixture (4 chunks)
 
 
 @pytest.fixture(scope="module")
@@ -36,7 +37,8 @@ def config():
     # tight grad_rtol: plans must agree at the *optimum*, not merely at a
     # loose early stop where near-flat directions of W leave beta slack
     return MachineConfig(kernel=KernelSpec("gaussian", sigma=2.0), lam=0.5,
-                         tron=TronConfig(max_iter=300, grad_rtol=1e-6))
+                         tron=TronConfig(max_iter=300, grad_rtol=1e-6),
+                         stream=StreamConfig(chunk_rows=CHUNK))
 
 
 @pytest.fixture(scope="module")
@@ -51,7 +53,8 @@ def fits(problem, config):
 
 def test_matrix_covers_registry(fits):
     assert set(fits) == set(available_plans())
-    assert "otf_shard" in fits          # the plan this PR adds is registered
+    assert "otf_shard" in fits
+    assert "stream" in fits             # the plan this PR adds is registered
 
 
 @pytest.mark.parametrize("plan", available_plans())
@@ -114,6 +117,72 @@ def test_otf_shard_partial_fit_growth(problem, config):
 def test_otf_shard_rejects_model_axis(problem):
     X, y, basis = problem
     cfg = MachineConfig(plan="otf_shard", model_axis="model")
+    with pytest.raises(ValueError, match="rows only"):
+        KernelMachine(cfg).fit(X, y, basis)
+
+
+def test_stream_matches_local_tight(fits):
+    """Acceptance: stream's beta within 1e-4 relative of local's."""
+    b, bl = fits["stream"], fits["local"]
+    assert np.linalg.norm(b - bl) / np.linalg.norm(bl) < 1e-4
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_stream_never_materializes_chunk_gram(problem, backend):
+    """Memory contract: no intermediate of the per-chunk f/g/Hd bodies
+    reaches chunk_rows x m elements — the streamed gram is contracted
+    through the fused kmvp path, never built."""
+    X, y, basis = problem
+    mesh = make_mesh((1,), ("data",))
+    kern = KernelSpec("gaussian", sigma=2.0)
+    solver = DistributedNystrom(
+        mesh, 0.5, "squared_hinge", kern,
+        DistConfig(materialize=False, fused=True, backend=backend))
+    src = ArrayChunkSource(np.asarray(X), np.asarray(y), CHUNK)
+    sc = solver.make_stream_closures(src, np.asarray(basis))
+    cr = sc.chunk_rows
+    Xc = jnp.zeros((cr, D))
+    yc = jnp.zeros((cr,))
+    wc = jnp.ones((cr,))
+    beta = jnp.zeros((M,))
+    Dl = jnp.ones((cr,))
+    with mesh:
+        assert_max_intermediate_below(sc.fg_chunk, cr * M, Xc, yc, wc,
+                                      jnp.asarray(basis), beta)
+        assert_max_intermediate_below(sc.hd_chunk, cr * M, Xc, Dl,
+                                      jnp.asarray(basis), beta)
+
+
+def test_stream_partial_fit_growth(problem, config):
+    """Stage-wise growth under stream: like otf_shard, recomputation makes
+    growth trivially correct — the grown machine lands on the fresh-fit
+    optimum, warm start and all."""
+    X, y, basis = problem
+    ref = KernelMachine(config).fit(X, y, basis)
+    km = KernelMachine(config.replace(plan="stream"))
+    km.partial_fit(X, y, basis[: M // 2]).partial_fit(X, y, basis[M // 2:])
+    assert len(km.history_) == 2
+    assert km.state_["beta"].shape == (M,)
+    b, br = np.asarray(km.state_["beta"]), np.asarray(ref.state_["beta"])
+    assert np.linalg.norm(b - br) / np.linalg.norm(br) < 1e-3
+    assert abs(km.result_.f - ref.result_.f) / abs(ref.result_.f) < 1e-4
+
+
+def test_stream_ragged_n_and_chunking_invariance(problem, config):
+    """n not divisible by the chunk size (mask-padded ragged last chunk)
+    must give the same optimum as any other chunking of the same data."""
+    X, y, basis = problem
+    X, y = X[:200], y[:200]            # 200 = 3 x 64 + 8: ragged
+    ref = KernelMachine(config).fit(X, y, basis)
+    km = KernelMachine(config.replace(
+        plan="stream", stream=StreamConfig(chunk_rows=56))).fit(X, y, basis)
+    b, br = np.asarray(km.state_["beta"]), np.asarray(ref.state_["beta"])
+    assert np.linalg.norm(b - br) / np.linalg.norm(br) < 1e-4
+
+
+def test_stream_rejects_model_axis(problem):
+    X, y, basis = problem
+    cfg = MachineConfig(plan="stream", model_axis="model")
     with pytest.raises(ValueError, match="rows only"):
         KernelMachine(cfg).fit(X, y, basis)
 

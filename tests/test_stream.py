@@ -1,0 +1,152 @@
+"""Chunked dataset layer (repro.data.chunks) + out-of-core stream fits.
+
+The chunk sources are the foundation the ``stream`` execution plan stands
+on: chunk addressing, shard-spanning reads, mmap round-trips, and row
+gathers must be exact before any solver math runs over them. The fit tests
+here exercise the paths test_plans' in-memory matrix cannot: training
+straight from a shard directory and checkpoint round-trips of StreamConfig.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import KernelMachine, MachineConfig, StreamConfig
+from repro.core import KernelSpec, TronConfig, random_basis
+from repro.data.chunks import (ArrayChunkSource, MmapChunkSource,
+                               as_chunk_source, random_basis_from_source,
+                               save_chunks)
+from repro.data import make_classification
+
+N, D, M = 256, 8, 32
+
+
+@pytest.fixture(scope="module")
+def data():
+    X, y = make_classification(jax.random.PRNGKey(0), N, D,
+                               clusters_per_class=2)
+    return np.asarray(X), np.asarray(y)
+
+
+@pytest.fixture(scope="module")
+def shard_dir(data, tmp_path_factory):
+    """Dataset written as .npy shard pairs whose boundaries (100 rows) do
+    NOT align with any chunk size the tests use."""
+    d = tmp_path_factory.mktemp("shards")
+    save_chunks(d, *data, rows_per_shard=100)
+    return d
+
+
+# ------------------------------------------------------------- chunk sources
+def test_array_source_chunks_cover_exactly(data):
+    X, y = data
+    src = ArrayChunkSource(X, y, chunk_rows=48)
+    assert src.shape == (N, D) and src.n_chunks == -(-N // 48)
+    Xcat = np.concatenate([c[0] for c in src.iter_chunks()])
+    ycat = np.concatenate([c[1] for c in src.iter_chunks()])
+    np.testing.assert_array_equal(Xcat, X)
+    np.testing.assert_array_equal(ycat, y)
+
+
+@pytest.mark.parametrize("compress", [False, True])
+def test_mmap_source_round_trip(data, tmp_path, compress):
+    X, y = data
+    save_chunks(tmp_path, X, y, rows_per_shard=90, compress=compress)
+    src = MmapChunkSource(tmp_path, chunk_rows=48)
+    assert src.shape == (N, D)
+    Xcat = np.concatenate([c[0] for c in src.iter_chunks()])
+    ycat = np.concatenate([c[1] for c in src.iter_chunks()])
+    np.testing.assert_array_equal(Xcat, X)
+    np.testing.assert_array_equal(ycat, y)
+
+
+def test_chunk_spanning_shard_boundary(data, shard_dir):
+    """One chunk read crossing a shard file boundary must stitch exactly."""
+    X, _ = data
+    src = MmapChunkSource(shard_dir, chunk_rows=96)
+    Xc, _ = src.chunk(1)                    # rows 96..192 span shard 0|1
+    np.testing.assert_array_equal(Xc, X[96:192])
+
+
+def test_take_rows_unsorted_across_shards(data, shard_dir):
+    X, _ = data
+    src = MmapChunkSource(shard_dir, chunk_rows=64)
+    idx = np.array([250, 0, 99, 100, 101, 7, 199])
+    np.testing.assert_array_equal(src.take_rows(idx), X[idx])
+
+
+def test_random_basis_from_source_matches_in_memory(data, shard_dir):
+    """Same key -> the streamed gather picks exactly the rows the in-memory
+    random_basis would."""
+    X, _ = data
+    key = jax.random.PRNGKey(3)
+    want = np.asarray(random_basis(key, jnp.asarray(X), M))
+    got = random_basis_from_source(key, MmapChunkSource(shard_dir), M)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_as_chunk_source_coercions(data, shard_dir):
+    X, y = data
+    src = as_chunk_source(X, y, chunk_rows=32)
+    assert isinstance(src, ArrayChunkSource) and src.chunk_rows == 32
+    assert as_chunk_source(src) is src
+    assert as_chunk_source(src, chunk_rows=16).chunk_rows == 16
+    assert isinstance(as_chunk_source(shard_dir), MmapChunkSource)
+    with pytest.raises(ValueError, match="needs y"):
+        as_chunk_source(X)
+
+
+def test_bad_shard_dirs_rejected(tmp_path):
+    with pytest.raises(FileNotFoundError, match="no X_"):
+        MmapChunkSource(tmp_path)
+    with pytest.raises(FileNotFoundError, match="not a directory"):
+        MmapChunkSource(tmp_path / "nope")
+
+
+# ---------------------------------------------------------- streaming fits
+CFG = MachineConfig(kernel=KernelSpec("gaussian", sigma=2.0), lam=0.5,
+                    plan="stream", tron=TronConfig(max_iter=200,
+                                                   grad_rtol=1e-5),
+                    stream=StreamConfig(chunk_rows=64))
+
+
+def test_fit_from_shard_directory_matches_local(data, shard_dir):
+    """The out-of-core acceptance path: fit straight from disk shards,
+    same optimum as the in-memory local plan."""
+    X, y = data
+    basis = np.asarray(random_basis(jax.random.PRNGKey(2), jnp.asarray(X), M))
+    ref = KernelMachine(CFG.replace(plan="local")).fit(X, y, basis)
+    src = MmapChunkSource(shard_dir, chunk_rows=64)
+    km = KernelMachine(CFG).fit(src, None, basis)
+    b, br = np.asarray(km.state_["beta"]), np.asarray(ref.state_["beta"])
+    assert np.linalg.norm(b - br) / np.linalg.norm(br) < 1e-4
+
+
+def test_fit_source_with_auto_basis_and_predict(data, shard_dir):
+    """basis=None over a chunked source samples m rows without a full read;
+    the fitted machine serves in-memory queries as usual."""
+    X, y = data
+    src = MmapChunkSource(shard_dir)
+    km = KernelMachine(CFG.replace(m=M)).fit(src, None)
+    assert km.state_["basis"].shape == (M, D)
+    assert km.score(X[:64], y[:64]) > 0.8
+
+
+def test_stream_config_checkpoint_round_trip(tmp_path, data):
+    X, y = data
+    basis = np.asarray(random_basis(jax.random.PRNGKey(2), jnp.asarray(X), M))
+    km = KernelMachine(CFG.replace(
+        stream=StreamConfig(chunk_rows=32, mmap=False))).fit(X, y, basis)
+    path = str(tmp_path / "m.npz")
+    km.save(path)
+    km2 = KernelMachine.load(path)
+    assert km2.config == km.config
+    assert km2.config.stream == StreamConfig(chunk_rows=32, mmap=False)
+    o1, o2 = km.decision_function(X[:16]), km2.decision_function(X[:16])
+    assert float(jnp.max(jnp.abs(o1 - o2))) == 0.0
+
+
+def test_rff_solver_rejects_chunk_source(data, shard_dir):
+    with pytest.raises(TypeError, match="needs X in memory"):
+        KernelMachine(CFG.replace(solver="rff")).fit(
+            MmapChunkSource(shard_dir), None)
