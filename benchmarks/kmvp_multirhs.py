@@ -1,0 +1,207 @@
+"""Multi-RHS kmvp amortization + stream chunk-cache transfer benchmark.
+
+Three measurements, one per claim of the multi-RHS/pipelined-I/O PR:
+
+  * kmvp_step — wall-clock of the fused otf kmvp fwd/t pair at growing RHS
+    count k on one (n, m, d) problem. The gram recomputation dominates, so
+    per-RHS cost should fall ~1/k (each extra column rides the same tiles).
+  * multiclass_fit — a K-class one-vs-rest train: K sequential single-RHS
+    fits (the pre-multi-RHS recipe) vs ONE column-batched multi-RHS fit on
+    the same plan/config. Acceptance: multirhs >= 2x faster at K=8 (jnp
+    fallback numbers on CPU; the Pallas path amortizes at least as well
+    since k <= 128 columns share MXU lanes).
+  * stream_h2d — host->device bytes for one TRON evaluation mix (f/g +
+    3xHd) over a shard-dir stream, chunk cache off (PR-3 behavior: every
+    call re-transfers the dataset) vs warm (resident chunks: zero bytes).
+
+Appends the repo-root ``BENCH_kmvp.json`` trajectory with --emit-json.
+
+Run:  PYTHONPATH=src python -m benchmarks.kmvp_multirhs [--smoke] [--emit-json]
+"""
+import argparse
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+parser = argparse.ArgumentParser()
+parser.add_argument("--n", type=int, default=4096)
+parser.add_argument("--d", type=int, default=32)
+parser.add_argument("--m", type=int, default=256)
+parser.add_argument("--ks", type=int, nargs="*", default=[1, 2, 4, 8])
+parser.add_argument("--classes", type=int, default=8)
+parser.add_argument("--fit-n", type=int, default=2048)
+parser.add_argument("--fit-m", type=int, default=128)
+parser.add_argument("--max-iter", type=int, default=30)
+parser.add_argument("--chunk-rows", type=int, default=512)
+parser.add_argument("--smoke", action="store_true",
+                    help="smallest sizes (the verify.sh --bench-smoke step)")
+parser.add_argument("--emit-json", action="store_true",
+                    help="append results to repo-root BENCH_kmvp.json")
+parser.add_argument("--out", default=None)
+args = parser.parse_args()
+if args.smoke:
+    args.n, args.d, args.m = 512, 16, 64
+    args.ks = [1, 4]
+    args.classes, args.fit_n, args.fit_m = 3, 384, 32
+    args.max_iter, args.chunk_rows = 5, 128
+
+
+def _timed(fn, *a, repeats=3):
+    fn(*a)                                     # compile / warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*a))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_kmvp_step():
+    from repro.kernels.ops import otf_kmvp_fwd, otf_kmvp_t
+    n, m, d = args.n, args.m, args.d
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, d))
+    z = jax.random.normal(jax.random.PRNGKey(1), (m, d))
+    kw = dict(kind="gaussian", sigma=float(np.sqrt(d)))
+    rows = []
+    print(f"kmvp step: n={n} m={m} d={d}")
+    print("| k | fwd_s | t_s | per-RHS vs k=1 |")
+    print("|---|-------|-----|----------------|")
+    fwd1 = t1 = None
+    for k in args.ks:
+        B = jax.random.normal(jax.random.PRNGKey(2), (m, k))
+        V = jax.random.normal(jax.random.PRNGKey(3), (n, k))
+        fwd = _timed(jax.jit(lambda x, z, B: otf_kmvp_fwd(x, z, B, **kw)),
+                     x, z, B)
+        t = _timed(jax.jit(lambda x, z, V: otf_kmvp_t(x, z, V, **kw)),
+                   x, z, V)
+        if fwd1 is None:
+            fwd1, t1 = fwd, t
+        per_rhs = (fwd + t) / k / (fwd1 + t1)
+        rows.append(dict(k=k, fwd_s=round(fwd, 6), t_s=round(t, 6),
+                         per_rhs_vs_k1=round(per_rhs, 4)))
+        print(f"| {k} | {fwd:.5f} | {t:.5f} | {per_rhs:.3f} |", flush=True)
+    return rows
+
+
+def bench_multiclass_fit():
+    from repro.api import KernelMachine, MachineConfig
+    from repro.core import KernelSpec, TronConfig, random_basis
+    from repro.data import make_multiclass
+    from repro.data.chunks import ovr_targets
+    n, d, m, K = args.fit_n, args.d, args.fit_m, args.classes
+    X, yi = make_multiclass(jax.random.PRNGKey(0), n, d, K,
+                            clusters_per_class=2)
+    basis = random_basis(jax.random.PRNGKey(1), X, m)
+    cfg = MachineConfig(kernel=KernelSpec("gaussian", sigma=2.0), lam=2.0,
+                        plan="otf_shard",
+                        tron=TronConfig(max_iter=args.max_iter,
+                                        grad_rtol=1e-5))
+    Y = ovr_targets(np.asarray(yi), np.arange(K))
+
+    def fit_sequential():
+        for k in range(K):
+            KernelMachine(cfg).fit(X, jnp.asarray(Y[:, k]), basis)
+
+    def fit_multirhs():
+        KernelMachine(cfg).fit(X, yi, basis)
+
+    # warm both compile caches (all K sequential fits share one executable)
+    KernelMachine(cfg.replace(tron=TronConfig(max_iter=1))).fit(
+        X, jnp.asarray(Y[:, 0]), basis)
+    KernelMachine(cfg.replace(tron=TronConfig(max_iter=1))).fit(X, yi, basis)
+    t0 = time.perf_counter()
+    fit_sequential()
+    seq = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    fit_multirhs()
+    multi = time.perf_counter() - t0
+    out = dict(K=K, n=n, m=m, plan="otf_shard",
+               sequential_s=round(seq, 4), multirhs_s=round(multi, 4),
+               speedup=round(seq / multi, 2))
+    print(f"multiclass fit K={K}: sequential {seq:.2f}s vs multi-RHS "
+          f"{multi:.2f}s -> {seq / multi:.2f}x", flush=True)
+    return out
+
+
+def bench_stream_h2d():
+    from repro.core import KernelSpec
+    from repro.core.compat import make_mesh
+    from repro.core.distributed import DistConfig, DistributedNystrom
+    from repro.data.chunks import MmapChunkSource, save_chunks
+    n, d, m, cr = args.n, args.d, args.m, args.chunk_rows
+    X = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (n, d)))
+    y = np.sign(np.asarray(jax.random.normal(jax.random.PRNGKey(1), (n,))))
+    basis = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (m, d)))
+    mesh = make_mesh((1,), ("data",))
+    solver = DistributedNystrom(
+        mesh, 0.5, "squared_hinge", KernelSpec("gaussian", sigma=4.0),
+        DistConfig(materialize=False, fused=True))
+    out = {}
+    with tempfile.TemporaryDirectory() as td:
+        save_chunks(td, X, y, rows_per_shard=cr)
+        for label, cache in (("cache_off", 0), ("cache_warm", None)):
+            src = MmapChunkSource(td, chunk_rows=cr)
+            sc = solver.make_stream_closures(src, basis, cache_chunks=cache)
+            b0 = np.zeros((m,), np.float32)
+
+            def step():
+                f, g, aux = sc.fgrad(b0)
+                h = sc.hessd(aux, g)
+                h = sc.hessd(aux, h)
+                sc.hessd(aux, h)
+
+            step()                                  # compile + fill cache
+            before = sc.feeder.h2d_bytes
+            t0 = time.perf_counter()
+            step()
+            dt = time.perf_counter() - t0
+            out[label] = dict(
+                h2d_bytes_per_step=sc.feeder.h2d_bytes - before,
+                step_s=round(dt, 5),
+                cache_chunks=sc.feeder.cache_chunks)
+            print(f"stream step {label}: "
+                  f"{out[label]['h2d_bytes_per_step'] / 2**20:.2f} MiB "
+                  f"h2d, {dt:.4f}s", flush=True)
+    return out
+
+
+def main():
+    results = dict(kmvp_step=bench_kmvp_step(),
+                   multiclass_fit=bench_multiclass_fit(),
+                   stream_h2d=bench_stream_h2d())
+    if args.emit_json:
+        from benchmarks.run import append_trajectory
+        out = Path(args.out) if args.out else REPO_ROOT / "BENCH_kmvp.json"
+        append_trajectory(out, {
+            "benchmark": "kmvp_multirhs",
+            "run_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "config": {"n": args.n, "d": args.d, "m": args.m,
+                       "ks": args.ks, "classes": args.classes,
+                       "fit_n": args.fit_n, "fit_m": args.fit_m,
+                       "max_iter": args.max_iter,
+                       "chunk_rows": args.chunk_rows,
+                       "smoke": args.smoke,
+                       "backend": jax.default_backend()},
+            "results": results})
+        print(f"appended {out}")
+    ok = results["multiclass_fit"]["speedup"] >= (1.0 if args.smoke else 2.0)
+    h2d = results["stream_h2d"]
+    ok &= (h2d["cache_warm"]["h2d_bytes_per_step"]
+           < h2d["cache_off"]["h2d_bytes_per_step"])
+    print(f"acceptance {'OK' if ok else 'FAILED'}: "
+          f"speedup={results['multiclass_fit']['speedup']}x, warm h2d "
+          f"{h2d['cache_warm']['h2d_bytes_per_step']} < cold "
+          f"{h2d['cache_off']['h2d_bytes_per_step']}")
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,11 @@
 #   scripts/verify.sh          fast gate: not-slow tests + API/serving smoke
 #                              + docs smoke (runs the README quickstart)
 #   scripts/verify.sh --full   tier-1 (the full pytest suite) + the smokes
+#   scripts/verify.sh --bench-smoke
+#                              fast gate + the smallest-size run of
+#                              benchmarks/kmvp_multirhs.py, which asserts
+#                              the multi-RHS amortization and the stream
+#                              chunk-cache transfer reduction still hold
 #
 # The fast gate is what you run in the inner loop (a couple of minutes);
 # the slow marker holds the 8-fake-device subprocess suites
@@ -38,6 +43,11 @@ run_suite() {   # run_suite <label> <marker-expr> <per-test-budget-seconds>
     fi
 }
 
+bench_smoke=0
+if [[ "${1:-}" == "--bench-smoke" ]]; then
+    bench_smoke=1
+fi
+
 if [[ "${1:-}" == "--full" ]]; then
     run_suite "fast suite" "not slow" 60
     run_suite "slow suite" "slow" 0
@@ -52,6 +62,11 @@ fi
 
 echo "== API smoke: train -> save -> load -> serve =="
 python -m repro.launch.kernel_serve --selftest || status=1
+
+if [[ "$bench_smoke" -eq 1 ]]; then
+    echo "== bench smoke: multi-RHS kmvp amortization + stream chunk cache =="
+    python -m benchmarks.kmvp_multirhs --smoke || status=1
+fi
 
 echo "== docs smoke: README quickstart block =="
 awk '/^```python$/{flag=1; next} /^```$/{if (flag) exit} flag' README.md \

@@ -24,10 +24,25 @@ class StreamConfig:
     ``chunk_rows x m`` elements. ``mmap`` controls whether ``.npy`` shard
     directories are opened memory-mapped (reads touch only the rows a
     chunk needs) or loaded eagerly per shard.
+
+    Chunk I/O pipelining (see ``core.distributed._ChunkFeeder``):
+    ``cache_chunks`` bounds the device-resident chunk cache — chunks kept
+    on the mesh across f/g/Hd evaluations so CG's dozens of Hd calls per
+    TRON step stop re-transferring the dataset. ``None`` auto-sizes to a
+    256 MiB HBM budget (counting the (chunk_rows, K) one-vs-rest target
+    block when multiclass); ``0`` disables caching. ``prefetch`` is the
+    depth of the background-thread host->device pipeline for uncached
+    chunks (2 = double buffering; <=1 reads synchronously). Note the
+    transient footprint: with prefetch = p, up to p in-flight chunks sit
+    on device in addition to the one being consumed — set
+    ``prefetch=0`` as well as ``cache_chunks=0`` to get the strict
+    one-transient-chunk residency of the pre-pipeline implementation.
     """
 
     chunk_rows: Optional[int] = None
     mmap: bool = True
+    cache_chunks: Optional[int] = None
+    prefetch: int = 2
 
 
 @dataclasses.dataclass(frozen=True)

@@ -57,7 +57,14 @@ class KernelMachine:
 
     def fit(self, X, y, basis=None, *, beta0=None, key=None):
         """Train from scratch. ``basis`` defaults to ``config.basis_strategy``
-        selection of ``config.m`` points (ignored by rff/ppacksvm solvers)."""
+        selection of ``config.m`` points (ignored by rff/ppacksvm solvers).
+
+        Integer multiclass y (solver ``tron``) trains one-vs-rest: all K
+        beta columns in ONE column-batched TRON pass, sharing every gram
+        recomputation under the fused/stream plans. ``decision_function``
+        then returns (n, K) margins and :meth:`predict` argmaxes back to
+        the original labels.
+        """
         entry = validate(self.config.solver, self.config.plan)
         if key is None:
             key = jax.random.PRNGKey(self.config.seed)
@@ -104,7 +111,7 @@ class KernelMachine:
 
         if self.state_ is None:
             basis = new_basis
-            beta0 = jnp.zeros((basis.shape[0],), X.dtype)
+            beta0 = None      # solver picks (m,) or (m, K) zeros to match y
             if local:
                 self._cw = (build_C(X, basis, kern, backend),
                             build_W(basis, kern, backend))
@@ -112,8 +119,11 @@ class KernelMachine:
         else:
             old_basis, old_beta = self.state_["basis"], self.state_["beta"]
             basis = jnp.concatenate([old_basis, new_basis], axis=0)
+            # warm start keeps every old coordinate — including the K
+            # one-vs-rest columns of a multiclass beta (rank-generic zeros)
             beta0 = jnp.concatenate(
-                [old_beta, jnp.zeros((new_basis.shape[0],), old_beta.dtype)])
+                [old_beta, jnp.zeros((new_basis.shape[0],)
+                                     + old_beta.shape[1:], old_beta.dtype)])
             if local:
                 if self._cw is not None and self._cw_shape == X.shape:
                     C, W = self._cw          # only new columns/blocks below
@@ -142,16 +152,22 @@ class KernelMachine:
                                "load() first")
 
     def decision_function(self, X, *, backend: Optional[str] = None):
-        """Raw margin o(x); jit-traceable given fixed state."""
+        """Raw margin o(x); jit-traceable given fixed state. Shape (n,) for
+        a binary machine, (n, K) per-class margins for one-vs-rest."""
         self._require_fitted()
         entry = validate(self.config.solver, self.config.plan)
         return entry.decision(self.config, self.state_, X, backend=backend)
 
     def predict(self, X):
-        return jnp.sign(self.decision_function(X))
+        """±1 signs for a binary machine; original integer labels (argmax
+        over the one-vs-rest margins) for a multiclass machine."""
+        o = self.decision_function(X)
+        if self.state_ is not None and "classes" in self.state_:
+            return self.state_["classes"][jnp.argmax(o, axis=-1)]
+        return jnp.sign(o)
 
     def score(self, X, y) -> float:
-        return float(jnp.mean(jnp.sign(self.decision_function(X)) == y))
+        return float(jnp.mean(self.predict(X) == jnp.asarray(y)))
 
     # ------------------------------------------------------------- save/load
     def save(self, path: str):

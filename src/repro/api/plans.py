@@ -64,9 +64,9 @@ from repro.data.chunks import as_chunk_source
 
 @register_plan("local")
 def plan_local(config, mesh, X, y, basis, beta0,
-               CW: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
-               ) -> TronResult:
-    del mesh
+               CW: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+               classes=None) -> TronResult:
+    del mesh, classes   # multiclass y arrives pre-expanded to (n, K) ±1
     if CW is None:
         C = build_C(X, basis, config.kernel, config.backend)
         W = build_W(basis, config.kernel, config.backend)
@@ -122,30 +122,40 @@ def _distributed(config, mesh, X, y, basis, beta0, *, mode: str,
 
 
 @register_plan("shard_map")
-def plan_shard_map(config, mesh, X, y, basis, beta0, CW=None) -> TronResult:
-    del CW  # distributed plans build their own sharded (C, W)
+def plan_shard_map(config, mesh, X, y, basis, beta0, CW=None,
+                   classes=None) -> TronResult:
+    del CW, classes  # distributed plans build their own sharded (C, W);
+    #                  multiclass y arrives pre-expanded to (n, K) ±1
     return _distributed(config, mesh, X, y, basis, beta0,
                         mode="shard_map", materialize=True, plan="shard_map")
 
 
 @register_plan("auto")
-def plan_auto(config, mesh, X, y, basis, beta0, CW=None) -> TronResult:
-    del CW
+def plan_auto(config, mesh, X, y, basis, beta0, CW=None,
+              classes=None) -> TronResult:
+    del CW, classes
     return _distributed(config, mesh, X, y, basis, beta0,
                         mode="auto", materialize=True, plan="auto")
 
 
 @register_plan("otf")
-def plan_otf(config, mesh, X, y, basis, beta0, CW=None) -> TronResult:
-    del CW  # the whole point: C is never materialized
+def plan_otf(config, mesh, X, y, basis, beta0, CW=None,
+             classes=None) -> TronResult:
+    del CW, classes  # the whole point: C is never materialized
     return _distributed(config, mesh, X, y, basis, beta0,
                         mode="shard_map", materialize=False, plan="otf")
 
 
 @register_plan("stream")
-def plan_stream(config, mesh, X, y, basis, beta0, CW=None) -> TronResult:
+def plan_stream(config, mesh, X, y, basis, beta0, CW=None,
+                classes=None) -> TronResult:
     """Out-of-core accumulation: X may be an in-memory array (wrapped into
-    an ArrayChunkSource), a ChunkSource, or a shard-directory path."""
+    an ArrayChunkSource), a ChunkSource, or a shard-directory path.
+
+    Unlike the in-memory plans, a multiclass solve keeps the source's
+    compact integer labels and receives ``classes``: each chunk is
+    expanded into (chunk_rows, K) ±1 targets on the host right before
+    transfer, so the one-vs-rest blow-up never exists at full n."""
     del CW  # recomputation leaves nothing to cache (same argument as
     #         otf_shard: growth re-streams, warm start carries the progress)
     if config.model_axis is not None:
@@ -162,12 +172,16 @@ def plan_stream(config, mesh, X, y, basis, beta0, CW=None) -> TronResult:
                     block_rows=config.otf_block_rows)
     solver = DistributedNystrom(mesh, config.lam, config.loss, config.kernel,
                                 dc)
-    return solver.solve_stream(source, basis, beta0=beta0, cfg=config.tron)
+    return solver.solve_stream(source, basis, beta0=beta0, cfg=config.tron,
+                               classes=classes,
+                               cache_chunks=config.stream.cache_chunks,
+                               prefetch=config.stream.prefetch)
 
 
 @register_plan("otf_shard")
-def plan_otf_shard(config, mesh, X, y, basis, beta0, CW=None) -> TronResult:
-    del CW  # no (n/p, m) block exists to cache, let alone (C, W)
+def plan_otf_shard(config, mesh, X, y, basis, beta0, CW=None,
+                   classes=None) -> TronResult:
+    del CW, classes  # no (n/p, m) block exists to cache, let alone (C, W)
     if config.model_axis is not None:
         raise ValueError(
             "plan 'otf_shard' shards rows only: the fused kmvp kernels "

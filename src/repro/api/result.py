@@ -31,13 +31,22 @@ class FitResult:
     @classmethod
     def from_tron(cls, res: TronResult, *, solver: str, plan: str, m: int,
                   extras: Optional[Dict[str, Any]] = None) -> "FitResult":
+        """Column-batched (one-vs-rest) TronResults carry (K,) per-column
+        f/gnorm/converged; the scalar summary here is the separable total
+        objective (sum), the worst gradient norm, and all-columns
+        convergence. The raw per-column result stays in ``extras['tron']``.
+        """
+        import numpy as np
         ex = {"tron": res}
         if extras:
             ex.update(extras)
+        f = np.asarray(res.f)
+        gnorm = np.asarray(res.gnorm)
+        conv = np.asarray(res.converged)
         return cls(solver=solver, plan=plan, m=m,
-                   f=float(res.f), gnorm=float(res.gnorm),
+                   f=float(f.sum()), gnorm=float(gnorm.max()),
                    n_iter=int(res.n_iter), n_fg=int(res.n_fg),
-                   n_hd=int(res.n_hd), converged=bool(res.converged),
+                   n_hd=int(res.n_hd), converged=bool(conv.all()),
                    extras=ex)
 
     @property

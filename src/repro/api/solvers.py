@@ -29,6 +29,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api.registry import get_plan, register_solver
 from repro.api.result import FitResult
@@ -44,6 +45,48 @@ def _key(config, key):
 
 def _zeros_like_beta(X, m, beta0):
     return jnp.zeros((m,), X.dtype) if beta0 is None else beta0
+
+
+# ----------------------------------------------------------- one-vs-rest
+def ovr_classes(X, y):
+    """Distinct labels when (X, y) poses an integer one-vs-rest problem.
+
+    The API rule: an integer label vector means multiclass one-vs-rest
+    (each class gets a beta column, trained in ONE multi-RHS TRON pass);
+    float targets mean the classic binary/regression problem. Integer ±1
+    labels keep their historical binary meaning. Chunked sources are
+    label-scanned via :meth:`ChunkSource.iter_y` — O(n) label reads, no X
+    bytes touched for .npy shard dirs.
+    """
+    from repro.data.chunks import ChunkSource
+    if isinstance(X, ChunkSource):
+        y0 = next(iter(X.iter_y()))
+        if not np.issubdtype(np.asarray(y0).dtype, np.integer):
+            return None
+        labels = np.asarray(X.unique_labels())
+    else:
+        if y is None:
+            return None
+        yn = np.asarray(y)
+        if yn.ndim != 1 or not np.issubdtype(yn.dtype, np.integer):
+            return None
+        labels = np.unique(yn)
+    if set(labels.tolist()) <= {-1, 1}:
+        return None                       # integer ±1 is the binary problem
+    if labels.size < 2:
+        raise ValueError(
+            f"integer labels pose a one-vs-rest problem but only one class "
+            f"is present: {labels}; pass float ±1 targets for a binary fit")
+    return labels
+
+
+def _reject_ovr(X, y, solver: str):
+    if ovr_classes(X, y) is not None:
+        raise ValueError(
+            f"solver {solver!r} is binary-only; integer multiclass labels "
+            f"train one-vs-rest through solver='tron', whose multi-RHS "
+            f"kmvp path fits all classes in one pass (pass float ±1 "
+            f"targets if you really meant a binary/regression problem)")
 
 
 # ------------------------------------------------------------------ decisions
@@ -67,12 +110,38 @@ def _decision_rff(config, state, X, backend: Optional[str] = None):
                  grows=True, needs_basis=True, decision=_decision_nystrom)
 def fit_tron(config, X, y, basis, beta0=None, *, mesh=None, plan=None,
              key=None, CW=None):
-    """Formulation (4) + trust-region Newton — the paper's solver."""
+    """Formulation (4) + trust-region Newton — the paper's solver.
+
+    Integer multiclass y (see :func:`ovr_classes`) trains all K one-vs-rest
+    columns in ONE column-batched TRON pass: beta is (m, K) and — under the
+    fused/stream plans — every f/g/Hd evaluation recomputes the gram tiles
+    once for all K classes instead of once per class. The fitted state
+    carries ``classes`` so predict can argmax back to labels.
+    """
     del key
     plan = plan or config.plan
-    beta0 = _zeros_like_beta(X, basis.shape[0], beta0)
-    res = get_plan(plan)(config, mesh, X, y, basis, beta0, CW=CW)
-    state = {"basis": basis, "beta": res.beta}
+    classes = ovr_classes(X, y)
+    if classes is None:
+        beta0 = _zeros_like_beta(X, basis.shape[0], beta0)
+        res = get_plan(plan)(config, mesh, X, y, basis, beta0, CW=CW)
+        state = {"basis": basis, "beta": res.beta}
+    else:
+        from repro.data.chunks import ovr_targets
+        m, K = int(basis.shape[0]), int(classes.size)
+        if beta0 is None:
+            beta0 = jnp.zeros((m, K), X.dtype)
+        elif jnp.shape(beta0) != (m, K):
+            raise ValueError(
+                f"one-vs-rest fit over {K} classes needs beta0 of shape "
+                f"({m}, {K}); got {jnp.shape(beta0)}")
+        if plan == "stream":
+            y_fit = y    # source keeps integer labels; chunks expand on host
+        else:
+            y_fit = jnp.asarray(ovr_targets(y, classes, dtype=X.dtype))
+        res = get_plan(plan)(config, mesh, X, y_fit, basis, beta0, CW=CW,
+                             classes=classes)
+        state = {"basis": basis, "beta": res.beta,
+                 "classes": jnp.asarray(classes)}
     return state, FitResult.from_tron(res, solver="tron", plan=plan,
                                       m=int(basis.shape[0]))
 
@@ -83,6 +152,7 @@ def fit_linearized(config, X, y, basis, beta0=None, *, mesh=None, plan=None,
                    key=None, CW=None):
     """Formulation (3) baseline: eigendecompose W, solve the linear machine."""
     del mesh, key, CW
+    _reject_ovr(X, y, "linearized")
     if beta0 is not None:
         raise ValueError("solver 'linearized' optimizes in w-space, not "
                          "beta-space; warm-starting from beta0 is not "
@@ -121,6 +191,7 @@ def fit_rff(config, X, y, basis=None, beta0=None, *, mesh=None, plan=None,
             "solver 'rff' maps X through phi(X) up front, which needs X in "
             "memory; pass arrays (plan 'stream' still chunks the phi(X) "
             "solve), or use solver 'tron' for fully out-of-core training")
+    _reject_ovr(X, y, "rff")
     if basis is None:
         basis = rffm.sample_rff(_key(config, key), X.shape[1],
                                 config.rff_features, config.kernel.sigma)
@@ -149,6 +220,7 @@ def fit_ppacksvm(config, X, y, basis=None, beta0=None, *, mesh=None,
     with n, not m — the serving-cost contrast the paper draws.
     """
     del mesh, CW, beta0, basis
+    _reject_ovr(X, y, "ppacksvm")
     plan = plan or config.plan
     res = pps.ppacksvm(_key(config, key), X, y, lam=config.lam,
                        kernel=config.kernel, epochs=config.ppack_epochs,

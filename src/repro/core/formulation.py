@@ -22,6 +22,34 @@ import jax.numpy as jnp
 from repro.core.losses import Loss
 
 
+def _colsum(a):
+    """Per-column reduction: a scalar for 1-D, (K,) for (n, K) operands."""
+    return jnp.sum(a, axis=0)
+
+
+def _cdot(a, b):
+    """Per-column dot; keeps the exact 1-D dot primitive (and rounding) of
+    the pre-multi-RHS implementation."""
+    if a.ndim == 1:
+        return a @ b
+    return jnp.sum(a * b, axis=0)
+
+
+def _ct_v(C, v):
+    """C^T v without a transposed copy of C.
+
+    NOTE: for a vector this is written ``v @ C`` — XLA CPU otherwise
+    materializes a full transposed copy of C INSIDE the TRON while-loop
+    body (not hoisted), costing ~20x per CG step. See EXPERIMENTS.md
+    §Perf-K1. The (n, K) block case contracts the leading dim directly,
+    which lowers to the same transpose-free dot_general.
+    """
+    if v.ndim == 1:
+        return v @ C
+    import jax
+    return jax.lax.dot_general(C, v, (((0,), (0,)), ((), ())))
+
+
 @dataclasses.dataclass(frozen=True)
 class Formulation4:
     """f / grad / Hd for formulation (4) given materialized C, W.
@@ -29,6 +57,10 @@ class Formulation4:
     All methods are jit-traceable. ``aux`` returned by fgrad carries the
     Gauss-Newton diagonal D so Hd does not recompute outputs (matching the
     paper's TRON usage: one f/g per outer iteration, several Hd sharing D).
+
+    Rank-generic over a trailing class axis: beta (m, K) with y (n, K)
+    evaluates K one-vs-rest objectives through the same two C matmuls —
+    f becomes a (K,) vector, D an (n, K) block.
     """
 
     lam: float
@@ -39,24 +71,22 @@ class Formulation4:
 
     def value(self, C, W, y, beta):
         o = C @ beta
-        reg = 0.5 * self.lam * beta @ (W @ beta)
-        return reg + jnp.sum(self.loss.value(o, y))
+        reg = 0.5 * self.lam * _cdot(beta, W @ beta)
+        return reg + _colsum(self.loss.value(o, y))
 
     def fgrad(self, C, W, y, beta) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-        """Returns (f, grad, D). Cost O(nm): two matvecs with C."""
+        """Returns (f, grad, D). Cost O(nm[k]): two mat{vec,mul}s with C."""
         o = C @ beta
         Wb = W @ beta
-        f = 0.5 * self.lam * beta @ Wb + jnp.sum(self.loss.value(o, y))
-        # NOTE: C^T v is written v @ C — XLA CPU otherwise materializes a
-        # full transposed copy of C INSIDE the TRON while-loop body (not
-        # hoisted), costing ~20x per CG step. See EXPERIMENTS.md §Perf-K1.
-        g = self.lam * Wb + self.loss.grad(o, y) @ C
+        f = 0.5 * self.lam * _cdot(beta, Wb) \
+            + _colsum(self.loss.value(o, y))
+        g = self.lam * Wb + _ct_v(C, self.loss.grad(o, y))
         D = self.loss.diag(o, y)
         return f, g, D
 
     def hessd(self, C, W, D, d) -> jnp.ndarray:
-        """Gauss-Newton product (lam W + C^T D C) d; O(nm)."""
-        return self.lam * (W @ d) + (D * (C @ d)) @ C
+        """Gauss-Newton product (lam W + C^T D C) d; O(nm[k])."""
+        return self.lam * (W @ d) + _ct_v(C, D * (C @ d))
 
 
 def to_linearized(C, W, jitter: float = 1e-8, rank: int | None = None):

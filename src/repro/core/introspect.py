@@ -103,6 +103,23 @@ def max_intermediate_bytes(fn: Callable, *args, **kwargs) -> int:
     return max_intermediate_bytes_jaxpr(closed.jaxpr)
 
 
+def fused_contract_limit(rows: int, m: int, k: int = 1) -> int:
+    """Element limit for the fused-kmvp memory contract with ``k`` RHS.
+
+    The forbidden allocation is the (rows, m) gram block. A multi-RHS
+    evaluation legitimately materializes (rows, k) outputs and (m, k)
+    gradients, so the rows*m bound only *separates* legal from forbidden
+    while k < m — guard that loudly instead of letting a wide-k test
+    assert nothing.
+    """
+    if k >= m:
+        raise ValueError(
+            f"fused memory contract is vacuous at k={k} >= m={m}: the "
+            f"legal (rows, k) output block is at least as large as the "
+            f"forbidden (rows, m) gram block; test with k < m")
+    return rows * m
+
+
 def assert_max_intermediate_below(fn: Callable, limit_elems: int,
                                   *args, **kwargs) -> int:
     """Raise if any intermediate of ``fn`` reaches ``limit_elems``.

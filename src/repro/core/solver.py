@@ -58,6 +58,13 @@ def solve(X, y, basis, *, lam: float, loss: Loss | str = "squared_hinge",
         km.fit(X, y, basis, beta0=beta0)   # km.state_["beta"], km.result_
     """
     from repro.api import KernelMachine, MachineConfig  # lazy: avoid cycle
+    from repro.api.solvers import ovr_classes
+    if ovr_classes(X, y) is not None:
+        raise ValueError(
+            "repro.core.solve predates multiclass support and its "
+            "NystromMachine result is sign-based binary; integer "
+            "multiclass labels train one-vs-rest via "
+            "KernelMachine(MachineConfig(solver='tron', ...)).fit(X, y)")
     warnings.warn(
         "repro.core.solve is deprecated; use "
         "KernelMachine(MachineConfig(solver='tron', plan='local', ...))"

@@ -15,6 +15,18 @@ The solver is generic over two closures:
 so the same code runs the local, the shard_map-distributed, and the
 materialization-free (fused Pallas) problem variants.
 
+Both drivers are additionally generic over a trailing *column* axis:
+``beta0`` may be the classic (m,) vector or an (m, K) block of K
+independent problems (one-vs-rest multiclass — each column has its own y
+and therefore its own objective). Every scalar of the update rules (f,
+delta, gnorm, the CG dots) becomes a (K,)-vector, every branch a
+per-column mask, and the loop runs until all columns converge. The payoff
+is that each f/g/Hd closure call evaluates ALL columns at once: with the
+fused kmvp closures one gram recomputation pass serves K columns instead
+of K separate solves paying K passes. Columns that converge early are
+frozen by masks (their CG direction is zeroed), so lockstep iteration
+never changes any column's trajectory versus a solo run of that column.
+
 Two drivers share the update rules:
   * :func:`tron` — fully traced (``lax.while_loop``); closures must be
     jax-traceable. Every in-memory plan uses this.
@@ -49,13 +61,31 @@ class TronConfig:
 
 
 class TronResult(NamedTuple):
-    beta: jnp.ndarray
-    f: jnp.ndarray
-    gnorm: jnp.ndarray
-    n_iter: jnp.ndarray   # outer iterations performed
+    beta: jnp.ndarray     # (m,) — or (m, K) for a column-batched solve
+    f: jnp.ndarray        # scalar — or (K,) per-column objectives
+    gnorm: jnp.ndarray    # scalar — or (K,)
+    n_iter: jnp.ndarray   # outer iterations performed (shared loop trips)
     n_fg: jnp.ndarray     # function/gradient evaluations (paper step 4a/4b calls)
     n_hd: jnp.ndarray     # Hessian-vector products     (paper step 4c calls)
-    converged: jnp.ndarray
+    converged: jnp.ndarray  # scalar bool — or (K,) per column
+
+
+def _cdot(a, b):
+    """Per-column dot: a scalar for (m,) operands, (K,) for (m, K).
+
+    The 1-D case keeps the exact dot/norm primitives of the single-RHS
+    solver so its f32 rounding (and therefore its tested convergence
+    trajectories) is unchanged by the column-batched generalization.
+    """
+    if a.ndim == 1:
+        return a @ b
+    return jnp.sum(a * b, axis=0)
+
+
+def _cnorm(a):
+    if a.ndim == 1:
+        return jnp.linalg.norm(a)
+    return jnp.sqrt(jnp.sum(a * a, axis=0))
 
 
 class _CGState(NamedTuple):
@@ -67,49 +97,66 @@ class _CGState(NamedTuple):
     active: jnp.ndarray
 
 
-def _steihaug_cg(g, hvp: Callable, delta, tol, max_iter: int):
+def _steihaug_cg(g, hvp: Callable, delta, tol, max_iter: int, active0=None):
     """Steihaug-Toint CG: approximately minimize g.s + 0.5 s'Hs, ||s||<=delta.
 
     Returns (s, r, n_hd) with r = -g - H s maintained through boundary exits
     (liblinear trcg semantics) so the caller can form the predicted
     reduction as -0.5*(g.s - s.r).
+
+    Column-batched when g is (m, K): delta/tol are (K,), every iteration
+    makes ONE hvp call on the whole (m, K) direction block (the fused-kmvp
+    amortization), and columns that hit the boundary or their tolerance are
+    frozen (their direction zeroed) while the rest keep iterating.
+    ``active0`` masks out columns the outer loop already finished.
     """
-    m = g.shape[0]
+    multi = g.ndim > 1
+    # In the classic 1-D problem every mask below is trace-time True while
+    # the loop runs, so the masking selects are elided entirely — the
+    # lowered 1-D program (and its f32 rounding) is unchanged from the
+    # single-RHS solver.
+    sel = (lambda run, new, old: jnp.where(run, new, old)) if multi \
+        else (lambda run, new, old: new)
     zero = jnp.zeros_like(g)
     init = _CGState(
         s=zero, r=-g, d=-g,
-        rtr=g @ g,
+        rtr=_cdot(g, g),
         it=jnp.array(0, jnp.int32),
-        active=jnp.asarray(True),
+        active=(jnp.ones(g.shape[1:], bool) if active0 is None else active0)
+        if multi else jnp.asarray(True if active0 is None else active0),
     )
 
     def cond(st: _CGState):
-        return st.active & (jnp.sqrt(st.rtr) > tol) & (st.it < max_iter)
+        live = st.active & (jnp.sqrt(st.rtr) > tol)
+        return (jnp.any(live) if multi else live) & (st.it < max_iter)
 
     def body(st: _CGState):
-        Hd = hvp(st.d)
-        dHd = st.d @ Hd
+        run = st.active & (jnp.sqrt(st.rtr) > tol)
+        d_run = sel(run, st.d, jnp.zeros_like(st.d))  # frozen cols: no motion
+        Hd = hvp(d_run)
+        dHd = _cdot(d_run, Hd)
         # Negative curvature or step leaving the region -> go to boundary.
         alpha = st.rtr / jnp.where(dHd > 0, dHd, 1.0)
-        s_try = st.s + alpha * st.d
-        outside = (jnp.linalg.norm(s_try) >= delta) | (dHd <= 0)
+        s_try = st.s + alpha * d_run
+        outside = (_cnorm(s_try) >= delta) | (dHd <= 0)
 
         # tau >= 0 solving ||s + tau d|| = delta
-        sd = st.s @ st.d
-        dd = st.d @ st.d
-        ss = st.s @ st.s
+        sd = _cdot(st.s, d_run)
+        dd = _cdot(d_run, d_run)
+        ss = _cdot(st.s, st.s)
         rad = jnp.sqrt(jnp.maximum(sd * sd + dd * (delta * delta - ss), 0.0))
         tau = (rad - sd) / jnp.where(dd > 0, dd, 1.0)
 
         step = jnp.where(outside, tau, alpha)
-        s_new = st.s + step * st.d
-        r_new = st.r - step * Hd
-        rtr_new = r_new @ r_new
+        s_new = sel(run, st.s + step * d_run, st.s)
+        r_new = sel(run, st.r - step * Hd, st.r)
+        rtr_new = _cdot(r_new, r_new)
         beta_cg = rtr_new / jnp.where(st.rtr > 0, st.rtr, 1.0)
-        d_new = r_new + beta_cg * st.d
+        d_new = sel(run, r_new + beta_cg * st.d, st.d)
         return _CGState(
             s=s_new, r=r_new, d=d_new, rtr=rtr_new,
-            it=st.it + 1, active=~outside,
+            it=st.it + 1,
+            active=st.active & ~(run & outside) if multi else ~outside,
         )
 
     final = jax.lax.while_loop(cond, body, init)
@@ -131,9 +178,17 @@ class _TronState(NamedTuple):
 
 def tron(fgrad: Callable, hessd: Callable, beta0: jnp.ndarray,
          cfg: TronConfig = TronConfig()) -> TronResult:
-    """Minimize f via trust-region Newton-CG. See module docstring."""
+    """Minimize f via trust-region Newton-CG. See module docstring.
+
+    ``beta0`` (m,) runs the classic solver; (m, K) runs K independent
+    problems in lockstep — one fgrad/hessd call per iteration serves every
+    column, each column keeping its own f, trust radius, and convergence.
+    """
+    multi = jnp.ndim(beta0) > 1
+    sel = (lambda run, new, old: jnp.where(run, new, old)) if multi \
+        else (lambda run, new, old: new)
     f0, g0, aux0 = fgrad(beta0)
-    gnorm0 = jnp.linalg.norm(g0)
+    gnorm0 = _cnorm(g0)
     init = _TronState(
         beta=beta0, f=f0, g=g0, aux=aux0,
         delta=gnorm0,
@@ -145,20 +200,22 @@ def tron(fgrad: Callable, hessd: Callable, beta0: jnp.ndarray,
     )
 
     def cond(st: _TronState):
-        gnorm = jnp.linalg.norm(st.g)
-        return st.active & (gnorm > cfg.grad_rtol * st.gnorm0) & (st.it < cfg.max_iter)
+        live = st.active & (_cnorm(st.g) > cfg.grad_rtol * st.gnorm0)
+        return (jnp.any(live) if multi else live) & (st.it < cfg.max_iter)
 
     def body(st: _TronState):
-        gnorm = jnp.linalg.norm(st.g)
+        gnorm = _cnorm(st.g)
+        run = st.active & (gnorm > cfg.grad_rtol * st.gnorm0)
         hvp = lambda d: hessd(st.aux, d)
         s, r, cg_steps = _steihaug_cg(
-            st.g, hvp, st.delta, cfg.cg_rtol * gnorm, cfg.cg_max_iter)
+            st.g, hvp, st.delta, cfg.cg_rtol * gnorm, cfg.cg_max_iter,
+            active0=run if multi else None)
 
-        snorm = jnp.linalg.norm(s)
-        gs = st.g @ s
-        prered = -0.5 * (gs - s @ r)
+        snorm = _cnorm(s)
+        gs = _cdot(st.g, s)
+        prered = -0.5 * (gs - _cdot(s, r))
 
-        beta_try = st.beta + s
+        beta_try = st.beta + s          # finished columns have s = 0
         f_new, g_new, aux_new = fgrad(beta_try)
         actred = st.f - f_new
 
@@ -181,8 +238,10 @@ def tron(fgrad: Callable, hessd: Callable, beta0: jnp.ndarray,
                 ),
             ),
         )
+        delta = sel(run, delta, st.delta)
 
-        accept = actred > cfg.eta0 * prered
+        accept = (actred > cfg.eta0 * prered) & run if multi \
+            else actred > cfg.eta0 * prered
         beta = jnp.where(accept, beta_try, st.beta)
         f = jnp.where(accept, f_new, st.f)
         g = jnp.where(accept, g_new, st.g)
@@ -199,11 +258,12 @@ def tron(fgrad: Callable, hessd: Callable, beta0: jnp.ndarray,
             n_fg=st.n_fg + 1,
             n_hd=st.n_hd + cg_steps,
             gnorm0=st.gnorm0,
-            active=st.active & ~stagnated,
+            active=st.active & ~(run & stagnated) if multi
+            else st.active & ~stagnated,
         )
 
     st = jax.lax.while_loop(cond, body, init)
-    gnorm = jnp.linalg.norm(st.g)
+    gnorm = _cnorm(st.g)
     return TronResult(
         beta=st.beta, f=st.f, gnorm=gnorm,
         n_iter=st.it, n_fg=st.n_fg, n_hd=st.n_hd,
@@ -212,35 +272,59 @@ def tron(fgrad: Callable, hessd: Callable, beta0: jnp.ndarray,
 
 
 # --------------------------------------------------------------- host driver
-def _steihaug_cg_host(g, hvp: Callable, delta: float, tol: float,
-                      max_iter: int):
+def _cdot_np(a, b):
+    return np.sum(a * b, axis=0)
+
+
+def _cnorm_np(a):
+    return np.sqrt(np.sum(a * a, axis=0))
+
+
+def _steihaug_cg_host(g, hvp: Callable, delta, tol, max_iter: int,
+                      active0=None):
     """Host mirror of :func:`_steihaug_cg`: same trcg semantics, numpy
-    vectors, eager ``hvp`` calls (each one may stream the dataset)."""
+    vectors, eager ``hvp`` calls (each one may stream the dataset).
+
+    Column-batched like the traced version: (m, K) g runs K problems per
+    hvp call with per-column freeze masks; (m,) reduces to the classic
+    scalar loop (masks are 0-d and always true while the loop runs). All
+    m-vector state and scalar algebra run in float64 on the host, matching
+    the ``float()`` precision of the pre-batched implementation; only the
+    hvp argument drops to the problem dtype.
+    """
+    dtype = g.dtype
+    g = g.astype(np.float64)
     s = np.zeros_like(g)
     r = -g
     d = -g
-    rtr = float(g @ g)
+    rtr = _cdot_np(g, g)
+    active = np.ones(g.shape[1:], bool) if active0 is None \
+        else np.asarray(active0) & np.ones(g.shape[1:], bool)
     it = 0
-    while np.sqrt(rtr) > tol and it < max_iter:
-        Hd = np.asarray(hvp(d), g.dtype)
-        dHd = float(d @ Hd)
-        alpha = rtr / (dHd if dHd > 0 else 1.0)
-        s_try = s + alpha * d
-        outside = (np.linalg.norm(s_try) >= delta) or (dHd <= 0)
-        if outside:
-            sd, dd, ss = float(s @ d), float(d @ d), float(s @ s)
-            rad = np.sqrt(max(sd * sd + dd * (delta * delta - ss), 0.0))
-            step = (rad - sd) / (dd if dd > 0 else 1.0)
-        else:
-            step = alpha
-        s = s + step * d
-        r = r - step * Hd
-        rtr_new = float(r @ r)
-        d = r + (rtr_new / (rtr if rtr > 0 else 1.0)) * d
+    while np.any(active & (np.sqrt(rtr) > tol)) and it < max_iter:
+        run = active & (np.sqrt(rtr) > tol)
+        d_run = np.where(run, d, 0.0)
+        Hd = np.asarray(hvp(d_run.astype(dtype)), np.float64)
+        dHd = _cdot_np(d_run, Hd)
+        alpha = rtr / np.where(dHd > 0, dHd, 1.0)
+        s_try = s + alpha * d_run
+        outside = (_cnorm_np(s_try) >= delta) | (dHd <= 0)
+
+        sd = _cdot_np(s, d_run)
+        dd = _cdot_np(d_run, d_run)
+        ss = _cdot_np(s, s)
+        rad = np.sqrt(np.maximum(sd * sd + dd * (delta * delta - ss), 0.0))
+        tau = (rad - sd) / np.where(dd > 0, dd, 1.0)
+
+        step = np.where(outside, tau, alpha)
+        s = np.where(run, s + step * d_run, s)
+        r = np.where(run, r - step * Hd, r)
+        rtr_new = _cdot_np(r, r)
+        beta_cg = rtr_new / np.where(rtr > 0, rtr, 1.0)
+        d = np.where(run, r + beta_cg * d, d)
         rtr = rtr_new
+        active = active & ~(run & outside)
         it += 1
-        if outside:
-            break
     return s, r, it
 
 
@@ -252,69 +336,89 @@ def tron_host(fgrad: Callable, hessd: Callable, beta0,
     ``fgrad``/``hessd`` may be arbitrary Python callables — in the
     ``stream`` plan each call loops over dataset chunks, accumulating the
     m-vector on the host while per-chunk math runs jitted on the mesh.
-    ``aux`` is treated as an opaque value (the stream plan keeps the
-    Gauss-Newton diagonal as one row-sharded array per chunk).
+    ``aux`` is treated as a pytree of per-column arrays (the stream plan
+    keeps the Gauss-Newton diagonal as one row-sharded array per chunk).
+
+    Column-batched like :func:`tron` when ``beta0`` is (m, K): every
+    streamed fgrad/hessd pass over the dataset then serves all K columns.
     """
     beta = np.asarray(beta0)
     dtype = beta.dtype
+    cols = beta.shape[1:]
     f, g, aux = fgrad(beta)
-    f = float(f)
+    f = np.asarray(f, np.float64)
     g = np.asarray(g, dtype)
-    gnorm0 = float(np.linalg.norm(g))
-    delta = gnorm0
+    gnorm0 = _cnorm_np(g.astype(np.float64))
+    delta = np.asarray(gnorm0).copy()
     it, n_fg, n_hd = 0, 1, 0
-    active = gnorm0 > 0
-    while active and np.linalg.norm(g) > cfg.grad_rtol * gnorm0 \
+    active = np.asarray(gnorm0 > 0) & np.ones(cols, bool)
+    while np.any(active & (_cnorm_np(g) > cfg.grad_rtol * gnorm0)) \
             and it < cfg.max_iter:
-        gnorm = float(np.linalg.norm(g))
+        gnorm = _cnorm_np(g.astype(np.float64))
+        run = active & (gnorm > cfg.grad_rtol * gnorm0)
         s, r, cg_steps = _steihaug_cg_host(
             g, lambda d: hessd(aux, d), delta, cfg.cg_rtol * gnorm,
-            cfg.cg_max_iter)
+            cfg.cg_max_iter, active0=run)
         n_hd += cg_steps
 
-        snorm = float(np.linalg.norm(s))
-        gs = float(g @ s)
-        prered = -0.5 * (gs - float(s @ r))
+        snorm = _cnorm_np(s.astype(np.float64))
+        gs = _cdot_np(g.astype(np.float64), s)
+        prered = -0.5 * (gs - _cdot_np(s.astype(np.float64), r))
 
         beta_try = (beta + s).astype(dtype)
         f_new, g_new, aux_new = fgrad(beta_try)
-        f_new = float(f_new)
+        f_new = np.asarray(f_new, np.float64)
         g_new = np.asarray(g_new, dtype)
         n_fg += 1
         actred = f - f_new
 
         denom = f_new - f - gs
-        if denom <= 0:
-            alpha = cfg.sigma3
-        else:
-            alpha = max(cfg.sigma1, -0.5 * (gs / denom))
+        alpha = np.where(denom <= 0, cfg.sigma3,
+                         np.maximum(cfg.sigma1,
+                                    -0.5 * (gs / np.where(denom == 0, 1.0,
+                                                          denom))))
         if it == 0:
-            delta = min(delta, snorm)
-        if actred < cfg.eta0 * prered:
-            delta = min(max(alpha, cfg.sigma1) * snorm, cfg.sigma2 * delta)
-        elif actred < cfg.eta1 * prered:
-            delta = max(cfg.sigma1 * delta,
-                        min(alpha * snorm, cfg.sigma2 * delta))
-        elif actred < cfg.eta2 * prered:
-            delta = max(cfg.sigma1 * delta,
-                        min(alpha * snorm, cfg.sigma3 * delta))
-        else:
-            delta = max(delta, min(alpha * snorm, cfg.sigma3 * delta))
+            delta = np.minimum(delta, snorm)
+        delta_new = np.where(
+            actred < cfg.eta0 * prered,
+            np.minimum(np.maximum(alpha, cfg.sigma1) * snorm,
+                       cfg.sigma2 * delta),
+            np.where(
+                actred < cfg.eta1 * prered,
+                np.maximum(cfg.sigma1 * delta,
+                           np.minimum(alpha * snorm, cfg.sigma2 * delta)),
+                np.where(
+                    actred < cfg.eta2 * prered,
+                    np.maximum(cfg.sigma1 * delta,
+                               np.minimum(alpha * snorm, cfg.sigma3 * delta)),
+                    np.maximum(delta,
+                               np.minimum(alpha * snorm, cfg.sigma3 * delta)),
+                ),
+            ),
+        )
+        delta = np.where(run, delta_new, delta)
 
-        if actred > cfg.eta0 * prered:
-            beta, f, g, aux = beta_try, f_new, g_new, aux_new
+        accept = (actred > cfg.eta0 * prered) & run
+        beta = np.where(accept, beta_try, beta).astype(dtype)
+        f = np.where(accept, f_new, f)
+        g = np.where(accept, g_new, g).astype(dtype)
+        # jnp.where: stream aux chunks are sharded device arrays — merging
+        # on host would drag them off-device and re-transfer every Hd call
+        aux = jax.tree.map(lambda a, b: jnp.where(accept, a, b), aux_new, aux)
         it += 1
 
-        feps = abs(f) * 1e-12
-        if prered <= 0 or (abs(actred) <= feps and abs(prered) <= feps):
-            active = False
+        feps = np.abs(f) * 1e-12
+        stagnated = (prered <= 0) | (
+            (np.abs(actred) <= feps) & (np.abs(prered) <= feps))
+        active = active & ~(run & stagnated)
 
-    gnorm = float(np.linalg.norm(g))
+    gnorm = _cnorm_np(g.astype(np.float64))
     return TronResult(
-        beta=jnp.asarray(beta, dtype), f=jnp.asarray(f, jnp.float32),
-        gnorm=jnp.asarray(gnorm, jnp.float32),
+        beta=jnp.asarray(beta, dtype),
+        f=jnp.asarray(np.asarray(f), jnp.float32),
+        gnorm=jnp.asarray(np.asarray(gnorm), jnp.float32),
         n_iter=jnp.asarray(it, jnp.int32),
         n_fg=jnp.asarray(n_fg, jnp.int32),
         n_hd=jnp.asarray(n_hd, jnp.int32),
-        converged=jnp.asarray(gnorm <= cfg.grad_rtol * gnorm0),
+        converged=jnp.asarray(np.asarray(gnorm <= cfg.grad_rtol * gnorm0)),
     )

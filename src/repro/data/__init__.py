@@ -1,5 +1,6 @@
 from repro.data.synthetic import (DatasetSpec, PAPER_DATASETS, make_classification,
-                                  make_dataset, make_token_batches)
+                                  make_dataset, make_multiclass,
+                                  make_token_batches)
 from repro.data.chunks import (ArrayChunkSource, ChunkSource, MmapChunkSource,
-                               as_chunk_source, random_basis_from_source,
-                               save_chunks)
+                               as_chunk_source, ovr_targets,
+                               random_basis_from_source, save_chunks)

@@ -74,6 +74,24 @@ class ChunkSource:
         for i in range(self.n_chunks):
             yield self.chunk(i)
 
+    def iter_y(self) -> Iterator[np.ndarray]:
+        """Yield the label vector in order, in source-defined segments.
+
+        Subclasses that store y separately from X (mmap shard dirs)
+        override this to avoid touching any X bytes — label scans (class
+        discovery for one-vs-rest) then cost O(n) label reads, not a full
+        dataset pass."""
+        for i in range(self.n_chunks):
+            yield self.chunk(i)[1]
+
+    def unique_labels(self) -> np.ndarray:
+        """Sorted distinct y values (one pass over y via :meth:`iter_y`)."""
+        out: Optional[np.ndarray] = None
+        for yc in self.iter_y():
+            u = np.unique(np.asarray(yc))
+            out = u if out is None else np.union1d(out, u)
+        return out
+
     def take_rows(self, idx) -> np.ndarray:
         """Gather X rows by global index (basis selection: O(m) rows read,
         never the full set)."""
@@ -122,6 +140,9 @@ class ArrayChunkSource(ChunkSource):
 
     def with_chunk_rows(self, chunk_rows):
         return ArrayChunkSource(self.X, self.y, chunk_rows)
+
+    def iter_y(self):
+        yield self.y
 
 
 class MmapChunkSource(ChunkSource):
@@ -229,6 +250,16 @@ class MmapChunkSource(ChunkSource):
             _layout=(self._paths, self._npz, self._offsets, self.d,
                      self.dtype))
 
+    def iter_y(self):
+        if self._npz:                 # zip container: no y-only read exists
+            for p in self._paths:
+                yield self._load_shard(p)[1]
+            return
+        for p in self._paths:         # .npy pairs: read ONLY the y shard
+            mode = "r" if self.mmap else None
+            yield np.asarray(np.load(p.parent / ("y_" + p.name[2:]),
+                                     mmap_mode=mode))
+
 
 def save_chunks(data_dir, X, y, rows_per_shard: int = 65536,
                 compress: bool = False) -> Path:
@@ -278,6 +309,20 @@ def as_chunk_source(X, y=None, chunk_rows: Optional[int] = None,
     if y is None:
         raise ValueError("as_chunk_source needs y when X is an array")
     return ArrayChunkSource(X, y, chunk_rows)
+
+
+def ovr_targets(y, classes, dtype=np.float32) -> np.ndarray:
+    """One-vs-rest targets: (n,) labels -> (n, K) ±1 columns.
+
+    Column k is the binary problem "class ``classes[k]`` vs rest" — the
+    K independent formulation-(4) objectives a multi-RHS TRON solve
+    optimizes in one pass. Pure numpy so the stream plan can expand each
+    label chunk on the host right before transfer (the source keeps its
+    compact integer labels; the ±1 expansion never hits disk).
+    """
+    y = np.asarray(y)
+    classes = np.asarray(classes)
+    return np.where(y[:, None] == classes[None, :], 1.0, -1.0).astype(dtype)
 
 
 def random_basis_from_source(key, source: ChunkSource, m: int) -> np.ndarray:

@@ -60,6 +60,26 @@ def make_classification(key: jax.Array, n: int, d: int, *,
     return x, y
 
 
+def make_multiclass(key: jax.Array, n: int, d: int, n_classes: int, *,
+                    clusters_per_class: int = 4, margin: float = 1.0,
+                    dtype=jnp.float32) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """K-class Gaussian-mixture data; integer labels 0..K-1.
+
+    The one-vs-rest workload of the paper's large benchmarks (and of
+    EigenPro-style multi-output solvers): passing the integer labels to
+    ``KernelMachine.fit`` trains all K classes in one multi-RHS TRON pass.
+    Same mixture geometry as :func:`make_classification`, classes assigned
+    round-robin over clusters.
+    """
+    kc, kx, ky = jax.random.split(key, 3)
+    n_clusters = n_classes * clusters_per_class
+    centers = jax.random.normal(kc, (n_clusters, d), dtype) * margin
+    cls = jax.random.randint(ky, (n,), 0, n_clusters)
+    x = centers[cls] + jax.random.normal(kx, (n, d), dtype) * (margin * 0.6 + 0.2)
+    y = (cls % n_classes).astype(jnp.int32)
+    return x, y
+
+
 def make_dataset(name: str, key: jax.Array, scale: float = 1.0,
                  d_cap: int = 512, dtype=jnp.float32):
     """Simulated (X, y, Xt, yt, spec) for a paper dataset at reduced scale."""

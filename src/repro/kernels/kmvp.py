@@ -6,18 +6,28 @@ The TPU-native version of that idea is a FUSION: compute each (bn, bm)
 gram tile in VMEM and immediately contract it against the vector, so C
 never exists in HBM at all:
 
-    kmvp_fwd : o = C(x, z) @ beta        (TRON's  C beta)
-    kmvp_t   : g = C(x, z)^T @ v         (TRON's  C^T D r)
+    kmvp_fwd : O = C(x, z) @ B           (TRON's  C beta)
+    kmvp_t   : G = C(x, z)^T @ V         (TRON's  C^T D r)
 
 HBM traffic drops from O(n m) (read a materialized C per matvec) to
 O((n + m) d / bd') per call — arithmetic intensity rises by ~min(bn, bm),
 moving the op from memory-bound to compute-bound (see EXPERIMENTS.md §Perf).
 
+Both kernels take a *block* of right-hand sides: B is (m, k), V is (n, k),
+k padded to the 128-lane width by the ops.py wrapper. The contraction per
+gram tile is then an MXU-shaped (bn, bm) @ (bm, k) matmul instead of a
+matvec, and — the point of the multi-RHS generalization — every k column
+shares one gram-tile recomputation: a K-class one-vs-rest f/g/Hd costs one
+O(n m d) recompute pass, not K. On the MXU any k <= 128 occupies the same
+lanes as k = 1, so the extra columns are close to free.
+
 Grid layouts (sequential TPU grid => safe output accumulation):
-    fwd: (i over n-blocks, j over m-blocks, k over d-blocks), o[i] += E_ij b_j
-    t  : (j over m-blocks, i over n-blocks, k over d-blocks), g[j] += E_ij^T v_i
+    fwd: (i over n-blocks, j over m-blocks, l over d-blocks), O[i] += E_ij B_j
+    t  : (j over m-blocks, i over n-blocks, l over d-blocks), G[j] += E_ij^T V_i
 Both keep an (bn, bm) f32 VMEM scratch for the squared-distance accumulation
-over k, applying exp once on the last k step.
+over d-blocks, applying exp once on the last step. The k axis is never
+blocked: each RHS block rides whole in VMEM (k is small — classes, not
+examples).
 """
 from __future__ import annotations
 
@@ -67,7 +77,7 @@ def _kmvp_fwd_kernel(x_ref, z_ref, b_ref, o_ref, acc_ref, *, kind, sigma):
     @pl.when(k == nk - 1)
     def _contract():
         E = _finish_tile(acc_ref, kind, sigma)                 # (bn, bm)
-        o_ref[...] += E @ b_ref[...].astype(jnp.float32)       # (bn, 1)
+        o_ref[...] += E @ b_ref[...].astype(jnp.float32)       # (bn, k)
 
 
 def _kmvp_t_kernel(x_ref, z_ref, v_ref, g_ref, acc_ref, *, kind, sigma):
@@ -87,27 +97,45 @@ def _kmvp_t_kernel(x_ref, z_ref, v_ref, g_ref, acc_ref, *, kind, sigma):
     @pl.when(k == nk - 1)
     def _contract():
         E = _finish_tile(acc_ref, kind, sigma)                 # (bn, bm)
-        g_ref[...] += E.T @ v_ref[...].astype(jnp.float32)     # (bm, 1)
+        g_ref[...] += E.T @ v_ref[...].astype(jnp.float32)     # (bm, k)
+
+
+def _check_blocks(name: str, dims) -> None:
+    """Readable divisibility errors instead of bare asserts: every dim the
+    grid tiles must be a block multiple (the ops.py wrappers pad for you)."""
+    for dim, size, block in dims:
+        if block <= 0:
+            raise ValueError(f"{name}: block b{dim}={block} must be positive")
+        if size % block:
+            raise ValueError(
+                f"{name}: dim {dim}={size} is not divisible by its block "
+                f"b{dim}={block}; pad {dim} to a multiple of {block} (the "
+                f"repro.kernels.ops wrappers do this automatically)")
 
 
 def kmvp_fwd_pallas(x, z, beta, *, kind="gaussian", sigma=1.0,
                     bn=256, bm=256, bd=256, interpret=False):
-    """o = C(x, z) @ beta, C never materialized. beta: (m, 1); o: (n, 1)."""
+    """O = C(x, z) @ B, C never materialized. B: (m, k); O: (n, k).
+
+    All k right-hand-side columns share each (bn, bm) gram tile — the
+    recomputation cost is paid once per tile, not once per column."""
     n, d = x.shape
     m, _ = z.shape
-    assert n % bn == 0 and m % bm == 0 and d % bd == 0
+    k = beta.shape[1]
+    _check_blocks("kmvp_fwd_pallas", [("n", n, bn), ("m", m, bm),
+                                      ("d", d, bd)])
     grid = (n // bn, m // bm, d // bd)
     kernel = functools.partial(_kmvp_fwd_kernel, kind=kind, sigma=sigma)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bn, bd), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bm, bd), lambda i, j, k: (j, k)),
-            pl.BlockSpec((bm, 1), lambda i, j, k: (j, 0)),
+            pl.BlockSpec((bn, bd), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bm, bd), lambda i, j, l: (j, l)),
+            pl.BlockSpec((bm, k), lambda i, j, l: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((bn, 1), lambda i, j, k: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        out_specs=pl.BlockSpec((bn, k), lambda i, j, l: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bn, bm), jnp.float32)],
         interpret=interpret,
     )(x, z, beta)
@@ -115,22 +143,27 @@ def kmvp_fwd_pallas(x, z, beta, *, kind="gaussian", sigma=1.0,
 
 def kmvp_t_pallas(x, z, v, *, kind="gaussian", sigma=1.0,
                   bn=256, bm=256, bd=256, interpret=False):
-    """g = C(x, z)^T @ v, C never materialized. v: (n, 1); g: (m, 1)."""
+    """G = C(x, z)^T @ V, C never materialized. V: (n, k); G: (m, k).
+
+    Adjoint of :func:`kmvp_fwd_pallas` over the same implicit C; the k
+    columns likewise share every gram-tile recomputation."""
     n, d = x.shape
     m, _ = z.shape
-    assert n % bn == 0 and m % bm == 0 and d % bd == 0
+    k = v.shape[1]
+    _check_blocks("kmvp_t_pallas", [("n", n, bn), ("m", m, bm),
+                                    ("d", d, bd)])
     grid = (m // bm, n // bn, d // bd)
     kernel = functools.partial(_kmvp_t_kernel, kind=kind, sigma=sigma)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bn, bd), lambda j, i, k: (i, k)),
-            pl.BlockSpec((bm, bd), lambda j, i, k: (j, k)),
-            pl.BlockSpec((bn, 1), lambda j, i, k: (i, 0)),
+            pl.BlockSpec((bn, bd), lambda j, i, l: (i, l)),
+            pl.BlockSpec((bm, bd), lambda j, i, l: (j, l)),
+            pl.BlockSpec((bn, k), lambda j, i, l: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((bm, 1), lambda j, i, k: (j, 0)),
-        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        out_specs=pl.BlockSpec((bm, k), lambda j, i, l: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bn, bm), jnp.float32)],
         interpret=interpret,
     )(x, z, v)

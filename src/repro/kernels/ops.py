@@ -51,6 +51,26 @@ def _pad_cols(a, to):
     return a if pad == 0 else jnp.pad(a, ((0, 0), (0, pad)))
 
 
+def _as_cols(v):
+    """RHS as a (p, k) column block plus the flag to undo a 1-D squeeze.
+
+    The kmvp entry points accept a single vector (the historical matvec
+    call) or a block of k right-hand sides (multiclass one-vs-rest / CG
+    over K columns); everything downstream is uniformly 2-D.
+    """
+    if v.ndim == 1:
+        return v.reshape(-1, 1), True
+    return v, False
+
+
+def _pad_lanes(v, interpret: bool) -> jnp.ndarray:
+    """Pad the RHS column count to the 128-lane width on hardware (a k <=
+    128 block occupies the same MXU lanes as k = 1, so padded columns are
+    free); interpret mode keeps the exact k."""
+    k = v.shape[1]
+    return v if interpret else _pad_cols(v, _round_up(k, 128))
+
+
 @functools.partial(jax.jit, static_argnames=("kind", "sigma", "bn", "bm", "bd",
                                              "interpret"))
 def gram(x, z, *, kind: str = "gaussian", sigma: float = 1.0,
@@ -77,7 +97,12 @@ def gram(x, z, *, kind: str = "gaussian", sigma: float = 1.0,
 def kmvp_fwd(x, z, beta, *, kind: str = "gaussian", sigma: float = 1.0,
              bn: int = 256, bm: int = 256, bd: int = 256,
              interpret: bool | None = None):
-    """o = C(x, z) @ beta with C fused away (never in HBM)."""
+    """o = C(x, z) @ beta with C fused away (never in HBM).
+
+    ``beta`` may be a single (m,) vector or an (m, k) block of right-hand
+    sides; the k columns share every gram-tile recomputation, so a K-class
+    evaluation costs ~one recompute pass. Returns (n,) or (n, k) to match.
+    """
     if interpret is None:
         interpret = _interpret_default()
     n, d = x.shape
@@ -88,10 +113,12 @@ def kmvp_fwd(x, z, beta, *, kind: str = "gaussian", sigma: float = 1.0,
     np_, mp_, dp_ = _round_up(n, bn), _round_up(m, bm), _round_up(d, bd)
     xp = _pad_cols(_pad_rows(x, np_), dp_)
     zp = _pad_cols(_pad_rows(z, mp_), dp_)
-    bp = _pad_rows(beta.reshape(-1, 1), mp_)   # zero beta for padded basis rows
+    b2, squeeze = _as_cols(beta)
+    k = b2.shape[1]
+    bp = _pad_lanes(_pad_rows(b2, mp_), interpret)  # zero padded basis rows
     out = _kmvp.kmvp_fwd_pallas(xp, zp, bp, kind=kind, sigma=sigma, bn=bn,
                                 bm=bm, bd=bd, interpret=interpret)
-    return out[:n, 0]
+    return out[:n, 0] if squeeze else out[:n, :k]
 
 
 @functools.partial(jax.jit, static_argnames=("kind", "sigma", "bn", "bm", "bd",
@@ -99,7 +126,10 @@ def kmvp_fwd(x, z, beta, *, kind: str = "gaussian", sigma: float = 1.0,
 def kmvp_t(x, z, v, *, kind: str = "gaussian", sigma: float = 1.0,
            bn: int = 256, bm: int = 256, bd: int = 256,
            interpret: bool | None = None):
-    """g = C(x, z)^T @ v with C fused away (never in HBM)."""
+    """g = C(x, z)^T @ v with C fused away (never in HBM).
+
+    ``v`` may be (n,) or an (n, k) block; returns (m,) or (m, k).
+    """
     if interpret is None:
         interpret = _interpret_default()
     n, d = x.shape
@@ -110,10 +140,12 @@ def kmvp_t(x, z, v, *, kind: str = "gaussian", sigma: float = 1.0,
     np_, mp_, dp_ = _round_up(n, bn), _round_up(m, bm), _round_up(d, bd)
     xp = _pad_cols(_pad_rows(x, np_), dp_)
     zp = _pad_cols(_pad_rows(z, mp_), dp_)
-    vp = _pad_rows(v.reshape(-1, 1), np_)      # zero v for padded example rows
+    v2, squeeze = _as_cols(v)
+    k = v2.shape[1]
+    vp = _pad_lanes(_pad_rows(v2, np_), interpret)  # zero padded example rows
     out = _kmvp.kmvp_t_pallas(xp, zp, vp, kind=kind, sigma=sigma, bn=bn,
                               bm=bm, bd=bd, interpret=interpret)
-    return out[:m, 0]
+    return out[:m, 0] if squeeze else out[:m, :k]
 
 
 # --------------------------------------------------------------------- on-the-
@@ -139,16 +171,19 @@ def otf_block_rows(n: int, m: int, d: int, budget_bytes: int = 1 << 20) -> int:
     return int(max(8, min(by_budget, by_fraction, _round_up(n, 8))))
 
 
-def otf_tiles(n: int, m: int, d: int,
+def otf_tiles(n: int, m: int, d: int, k: int = 1,
               vmem_budget: int = 4 << 20) -> tuple[int, int, int]:
     """(bn, bm, bd) Pallas tile sizes keyed on the per-shard n: large shards
     take a taller bn (amortizes re-streaming z across the n-block loop),
-    shrunk until the f32 working set (x, z, acc tiles) fits the budget."""
+    shrunk until the f32 working set (x, z, acc tiles plus the (bm, k) RHS
+    and (bn, k) output blocks of the multi-RHS path) fits the budget."""
     interp = _interpret_default()
+    kp = k if interp else _round_up(max(k, 1), 128)
     bn = _block(n, 512 if n >= 512 else 256, 8, interp)
     bm = _block(m, 256, 128, interp)
     bd = _block(d, 256, 128, interp)
-    while bn > 8 and 4 * (bn * bd + bm * bd + bn * bm) > vmem_budget:
+    while bn > 8 and 4 * (bn * bd + bm * bd + bn * bm
+                          + (bn + bm) * kp) > vmem_budget:
         bn = max(8, _round_up(bn // 2, 8))
     return bn, bm, bd
 
@@ -158,21 +193,25 @@ def kmvp_fwd_chunked(x, z, beta, *, kind: str = "gaussian", sigma: float = 1.0,
     """o = C(x, z) @ beta via row-chunked recomputation (jnp fallback).
 
     Peak transient is one (block_rows, m) gram chunk — the fallback keeps
-    the fused kernels' memory contract on backends without Pallas.
+    the fused kernels' memory contract on backends without Pallas. ``beta``
+    may be (m,) or (m, k); every RHS column contracts against the same
+    recomputed gram chunk (one recompute pass per evaluation, not k).
     """
     from repro.kernels import ref
     n, d = x.shape
     m = z.shape[0]
+    b2, squeeze = _as_cols(beta)
     bn = block_rows or otf_block_rows(n, m, d)
     nb = -(-n // bn)
     xp = _pad_rows(x, nb * bn).reshape(nb, bn, d)
 
     @jax.checkpoint
     def chunk(c):
-        return ref.gram_ref(c, z, kind=kind, sigma=sigma) @ beta.astype(
+        return ref.gram_ref(c, z, kind=kind, sigma=sigma) @ b2.astype(
             jnp.float32)
 
-    return jax.lax.map(chunk, xp).reshape(-1)[:n]
+    out = jax.lax.map(chunk, xp).reshape(nb * bn, -1)[:n]
+    return out[:, 0] if squeeze else out
 
 
 def kmvp_t_chunked(x, z, v, *, kind: str = "gaussian", sigma: float = 1.0,
@@ -181,24 +220,29 @@ def kmvp_t_chunked(x, z, v, *, kind: str = "gaussian", sigma: float = 1.0,
 
     Padded x rows have nonzero gaussian kernel values against z, but their
     v entries are zero-padded, so their contribution to g vanishes exactly.
+    ``v`` may be (n,) or (n, k); the accumulator contracts the k columns
+    against each gram chunk without ever transposing it.
     """
     from repro.kernels import ref
     n, d = x.shape
     m = z.shape[0]
+    v2, squeeze = _as_cols(v)
+    k = v2.shape[1]
     bn = block_rows or otf_block_rows(n, m, d)
     nb = -(-n // bn)
     xp = _pad_rows(x, nb * bn).reshape(nb, bn, d)
-    vp = jnp.pad(v.astype(jnp.float32), (0, nb * bn - n)).reshape(nb, bn)
+    vp = _pad_rows(v2.astype(jnp.float32), nb * bn).reshape(nb, bn, k)
 
     @jax.checkpoint
     def contrib(c, vc):
-        return vc @ ref.gram_ref(c, z, kind=kind, sigma=sigma)
+        E = ref.gram_ref(c, z, kind=kind, sigma=sigma)          # (bn, m)
+        return jax.lax.dot_general(vc, E, (((0,), (0,)), ((), ())))  # (k, m)
 
     def body(g, cv):
         return g + contrib(*cv), None
 
-    g, _ = jax.lax.scan(body, jnp.zeros((m,), jnp.float32), (xp, vp))
-    return g
+    g, _ = jax.lax.scan(body, jnp.zeros((k, m), jnp.float32), (xp, vp))
+    return g[0] if squeeze else g.T
 
 
 def otf_kmvp_fwd(x, z, beta, *, kind: str = "gaussian", sigma: float = 1.0,
@@ -207,10 +251,12 @@ def otf_kmvp_fwd(x, z, beta, *, kind: str = "gaussian", sigma: float = 1.0,
 
     ``pallas`` fuses the gram tile into the matvec in VMEM (tile sizes from
     :func:`otf_tiles`); ``jnp`` recomputes row chunks. Callable inside
-    shard_map bodies — x is the per-shard row block there.
+    shard_map bodies — x is the per-shard row block there. ``beta`` may be
+    (m,) or an (m, k) multi-RHS block on either backend.
     """
     if backend == "pallas":
-        bn, bm, bd = otf_tiles(x.shape[0], z.shape[0], x.shape[1])
+        k = 1 if beta.ndim == 1 else beta.shape[1]
+        bn, bm, bd = otf_tiles(x.shape[0], z.shape[0], x.shape[1], k)
         return kmvp_fwd(x, z, beta, kind=kind, sigma=sigma,
                         bn=bn, bm=bm, bd=bd)
     return kmvp_fwd_chunked(x, z, beta, kind=kind, sigma=sigma,
@@ -219,9 +265,12 @@ def otf_kmvp_fwd(x, z, beta, *, kind: str = "gaussian", sigma: float = 1.0,
 
 def otf_kmvp_t(x, z, v, *, kind: str = "gaussian", sigma: float = 1.0,
                backend: str = "jnp", block_rows: int | None = None):
-    """Backend dispatch for g = C(x, z)^T @ v with C never in HBM."""
+    """Backend dispatch for g = C(x, z)^T @ v with C never in HBM.
+
+    ``v`` may be (n,) or an (n, k) multi-RHS block on either backend."""
     if backend == "pallas":
-        bn, bm, bd = otf_tiles(x.shape[0], z.shape[0], x.shape[1])
+        k = 1 if v.ndim == 1 else v.shape[1]
+        bn, bm, bd = otf_tiles(x.shape[0], z.shape[0], x.shape[1], k)
         return kmvp_t(x, z, v, kind=kind, sigma=sigma, bn=bn, bm=bm, bd=bd)
     return kmvp_t_chunked(x, z, v, kind=kind, sigma=sigma,
                           block_rows=block_rows)

@@ -73,19 +73,24 @@ class ServingEndpoint:
         return len(self._compiled)
 
 
-def _train_demo_machine(path: str, n: int = 2048, m: int = 64) -> str:
+def _train_demo_machine(path: str, n: int = 2048, m: int = 64,
+                        classes: int = 2) -> str:
     from repro.core import KernelSpec, TronConfig, random_basis
-    from repro.data import make_classification
+    from repro.data import make_classification, make_multiclass
 
-    X, y = make_classification(jax.random.PRNGKey(0), n, 16,
-                               clusters_per_class=4)
+    if classes > 2:    # integer labels -> one multi-RHS one-vs-rest fit
+        X, y = make_multiclass(jax.random.PRNGKey(0), n, 16, classes,
+                               clusters_per_class=2)
+    else:
+        X, y = make_classification(jax.random.PRNGKey(0), n, 16,
+                                   clusters_per_class=4)
     basis = random_basis(jax.random.PRNGKey(1), X, m)
     config = MachineConfig(kernel=KernelSpec("gaussian", sigma=2.0), lam=1.0,
                            tron=TronConfig(max_iter=60))
     km = KernelMachine(config).fit(X, y, basis)
     km.save(path)
-    print(f"[train] demo machine: m={m} train_acc={km.score(X, y):.4f} "
-          f"-> {path}")
+    print(f"[train] demo machine: m={m} classes={classes} "
+          f"train_acc={km.score(X, y):.4f} -> {path}")
     return path
 
 
@@ -140,9 +145,20 @@ def main():
         err = float(jnp.max(jnp.abs(served - direct)))
         assert err < 1e-5, f"served != direct decision_function (max {err})"
         print(f"[serve] {stats}")
+        # multiclass round trip: checkpoint carries classes, served margins
+        # are (b, K), argmax labels match the direct predict path
+        _train_demo_machine(path, n=512, m=32, classes=3)
+        km = KernelMachine.load(path)
+        endpoint = ServingEndpoint(km, max_batch=64)
+        served = endpoint(Xq)
+        assert served.shape == (37, 3), served.shape
+        labels = km.state_["classes"][jnp.argmax(served, axis=-1)]
+        assert bool(jnp.all(labels == km.predict(Xq))), \
+            "served argmax labels != km.predict"
         print(f"[selftest] OK: served==direct (max diff {err:.2e}), "
               f"{stats['executables']} executables for {stats['requests']} "
-              f"request sizes")
+              f"request sizes; multiclass (K=3) margins served + argmax "
+              f"labels verified")
         return
 
     import os

@@ -34,7 +34,7 @@ from repro.api import (KernelMachine, MachineConfig, StreamConfig,
                        available_plans, available_solvers, get_solver)
 from repro.core import KernelSpec, TronConfig, select_basis
 from repro.core.compat import make_mesh
-from repro.data import PAPER_DATASETS, make_dataset
+from repro.data import PAPER_DATASETS, make_dataset, make_multiclass
 from repro.data.chunks import MmapChunkSource, save_chunks
 
 
@@ -59,6 +59,11 @@ def main():
     ap.add_argument("--max-iter", type=int, default=200)
     ap.add_argument("--lam", type=float, default=None)
     ap.add_argument("--sigma", type=float, default=None)
+    ap.add_argument("--classes", type=int, default=2,
+                    help="class count: 2 trains the paper's binary problem; "
+                         ">2 generates K-class data (integer labels) and "
+                         "trains all one-vs-rest columns in ONE multi-RHS "
+                         "TRON pass (solver 'tron' only)")
     ap.add_argument("--data-dir", default=None,
                     help="stream training data from this .npy/.npz shard "
                          "directory (plan 'stream'; see "
@@ -83,6 +88,25 @@ def main():
     needs_basis = get_solver(args.solver).needs_basis
     if args.data_dir and args.plan != "stream":
         ap.error("--data-dir streams from disk and requires --plan stream")
+    if args.classes > 2 and args.solver != "tron":
+        ap.error(f"--classes {args.classes} trains one-vs-rest via the "
+                 f"multi-RHS kmvp path, which only solver 'tron' supports")
+
+    def load_data(key):
+        """(X, y, Xt, yt, spec): the paper's binary simulation, or K-class
+        integer-label data when --classes > 2 (same mixture geometry)."""
+        spec = PAPER_DATASETS[args.dataset]
+        if args.classes <= 2:
+            return make_dataset(args.dataset, key, scale=args.scale,
+                                d_cap=784)
+        n = max(int(spec.n * args.scale), 256)
+        nt = max(int(spec.n_test * args.scale), 128)
+        Xa, ya = make_multiclass(
+            key, n + nt, min(spec.d, 784), args.classes,
+            clusters_per_class=max(spec.clusters_per_class
+                                   // args.classes, 2),
+            margin=spec.margin)
+        return Xa[:n], ya[:n], Xa[n:], ya[n:], spec
 
     def build_config(lam, sigma, m):
         return MachineConfig(
@@ -107,8 +131,7 @@ def main():
                   f"--scale {args.scale} export (delete the directory to "
                   f"re-export)")
         else:
-            Xe, ye, _, _, _ = make_dataset(args.dataset, jax.random.PRNGKey(0),
-                                           scale=args.scale, d_cap=784)
+            Xe, ye, _, _, _ = load_data(jax.random.PRNGKey(0))
             save_chunks(args.data_dir, Xe, ye)
             print(f"[export] wrote {Xe.shape[0]} rows to {args.data_dir} "
                   f"({time.time() - t0:.2f}s)")
@@ -117,10 +140,9 @@ def main():
         print(f"[step1] streaming {args.data_dir}: n={X.n} d={X.d} "
               f"chunks={X.n_chunks} ({time.time() - t0:.2f}s)")
     else:
-        X, y, Xt, yt, spec = make_dataset(args.dataset, jax.random.PRNGKey(0),
-                                          scale=args.scale, d_cap=784)
+        X, y, Xt, yt, spec = load_data(jax.random.PRNGKey(0))
         print(f"[step1] loaded {args.dataset}: n={X.shape[0]} d={X.shape[1]} "
-              f"({time.time() - t0:.2f}s)")
+              f"classes={args.classes} ({time.time() - t0:.2f}s)")
     lam = args.lam if args.lam is not None else max(spec.lam * args.scale, 1e-4)
     sigma = args.sigma if args.sigma is not None else max(spec.sigma, 1.0)
 

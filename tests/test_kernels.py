@@ -103,6 +103,107 @@ def test_chunked_fallback_parity(shape, kind):
         ref.kmvp_t_ref(x, z, v, **kw), jnp.float32)
 
 
+# ------------------------------------------------------- multi-RHS (m, k)
+# k = 1 keeps the 2-D block shape (not the squeezed vector path), odd k
+# exercises the 128-lane padding, k = 8 a real one-vs-rest class count.
+MULTI_KS = [1, 3, 8]
+
+
+def _multi_data(n, m, d, k, dtype, seed=0):
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(k1, (n, d), dtype)
+    z = jax.random.normal(k2, (m, d), dtype)
+    B = jax.random.normal(k3, (m, k), jnp.float32)
+    V = jax.random.normal(k4, (n, k), jnp.float32)
+    return x, z, B, V
+
+
+@pytest.mark.parametrize("k", MULTI_KS)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("kind", KINDS)
+def test_multirhs_parity_grid(k, dtype, kind):
+    """(m, k) / (n, k) RHS blocks match the dense oracle — Pallas and the
+    chunked jnp fallback — including non-block-aligned shapes."""
+    for shape in [(64, 32, 16), (129, 257, 3)]:
+        n, m, d = shape
+        x, z, B, V = _multi_data(n, m, d, k, dtype)
+        kw = dict(kind=kind, sigma=_sigma(d))
+        G = ref.gram_ref(x, z, **kw)
+        got_fwd = ops.kmvp_fwd(x, z, B, **kw)
+        got_t = ops.kmvp_t(x, z, V, **kw)
+        assert got_fwd.shape == (n, k) and got_t.shape == (m, k)
+        assert_allclose_dtype(got_fwd, G @ B, dtype)
+        assert_allclose_dtype(got_t, G.T @ V, dtype)
+        if dtype == jnp.float32:
+            assert_allclose_dtype(ops.kmvp_fwd_chunked(x, z, B, **kw),
+                                  G @ B, dtype)
+            assert_allclose_dtype(ops.kmvp_t_chunked(x, z, V, **kw),
+                                  G.T @ V, dtype)
+
+
+@pytest.mark.parametrize("k", MULTI_KS)
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("impl", ["pallas", "chunked"])
+def test_multirhs_column_independence(k, kind, impl):
+    """Each column of a multi-RHS call equals the single-vector call on
+    that column: the batched contraction is K independent matvecs sharing
+    gram recomputation, never mixing columns."""
+    n, m, d = 65, 40, 7
+    x, z, B, V = _multi_data(n, m, d, k, jnp.float32)
+    kw = dict(kind=kind, sigma=_sigma(d))
+    fwd = ops.kmvp_fwd if impl == "pallas" else ops.kmvp_fwd_chunked
+    t = ops.kmvp_t if impl == "pallas" else ops.kmvp_t_chunked
+    O, G = fwd(x, z, B, **kw), t(x, z, V, **kw)
+    for c in range(k):
+        np.testing.assert_allclose(np.asarray(O[:, c]),
+                                   np.asarray(fwd(x, z, B[:, c], **kw)),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(G[:, c]),
+                                   np.asarray(t(x, z, V[:, c], **kw)),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("k", MULTI_KS)
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("impl", ["pallas", "chunked"])
+def test_multirhs_adjoint(k, kind, impl):
+    """<kmvp_fwd(x,z,B), V>_F == <B, kmvp_t(x,z,V)>_F: the multi-RHS
+    kernels stay adjoints of the same implicit C, column-batched."""
+    n, m, d = 129, 64, 16
+    x, z, B, V = _multi_data(n, m, d, k, jnp.float32)
+    kw = dict(kind=kind, sigma=_sigma(d))
+    if impl == "pallas":
+        O, G = ops.kmvp_fwd(x, z, B, **kw), ops.kmvp_t(x, z, V, **kw)
+    else:
+        O = ops.kmvp_fwd_chunked(x, z, B, **kw)
+        G = ops.kmvp_t_chunked(x, z, V, **kw)
+    lhs, rhs = float(jnp.sum(O * V)), float(jnp.sum(B * G))
+    scale = max(1.0, abs(lhs), abs(rhs))
+    assert abs(lhs - rhs) / scale < 1e-5, (lhs, rhs)
+
+
+def test_kmvp_block_divisibility_errors():
+    """The raw Pallas entry points reject non-divisible dims with errors
+    naming the offending dim and block (the old bare asserts said nothing)."""
+    from repro.kernels import kmvp
+    x = jnp.zeros((100, 128))
+    z = jnp.zeros((128, 128))
+    b = jnp.zeros((128, 1))
+    v = jnp.zeros((100, 1))
+    with pytest.raises(ValueError, match=r"n=100.*bn=256"):
+        kmvp.kmvp_fwd_pallas(x, z, b, bn=256, bm=128, bd=128)
+    with pytest.raises(ValueError, match=r"m=128.*bm=96"):
+        kmvp.kmvp_fwd_pallas(jnp.zeros((128, 128)), z, b,
+                             bn=128, bm=96, bd=128)
+    with pytest.raises(ValueError, match=r"d=128.*bd=100"):
+        kmvp.kmvp_t_pallas(jnp.zeros((128, 128)), z, jnp.zeros((128, 1)),
+                           bn=128, bm=128, bd=100)
+    with pytest.raises(ValueError, match=r"kmvp_t_pallas.*n=100"):
+        kmvp.kmvp_t_pallas(x, z, v, bn=256, bm=128, bd=128)
+    with pytest.raises(ValueError, match=r"positive"):
+        kmvp.kmvp_fwd_pallas(x, z, b, bn=0, bm=128, bd=128)
+
+
 @pytest.mark.parametrize("kind", KINDS)
 @pytest.mark.parametrize("shape", [(64, 32, 16), (129, 257, 3)])
 @pytest.mark.parametrize("impl", ["pallas", "chunked"])

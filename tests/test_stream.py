@@ -150,3 +150,129 @@ def test_rff_solver_rejects_chunk_source(data, shard_dir):
     with pytest.raises(TypeError, match="needs X in memory"):
         KernelMachine(CFG.replace(solver="rff")).fit(
             MmapChunkSource(shard_dir), None)
+
+
+# -------------------------------------------- chunk I/O pipeline (_ChunkFeeder)
+def _stream_closures(data, chunk_rows=48, cache_chunks=None, prefetch=2,
+                     classes=None):
+    from repro.core.compat import make_mesh
+    from repro.core.distributed import DistConfig, DistributedNystrom
+    X, y = data
+    mesh = make_mesh((1,), ("data",))
+    solver = DistributedNystrom(
+        mesh, 0.5, "squared_hinge", KernelSpec("gaussian", sigma=2.0),
+        DistConfig(materialize=False, fused=True))
+    basis = np.asarray(random_basis(jax.random.PRNGKey(2), jnp.asarray(X), M))
+    src = ArrayChunkSource(X, y, chunk_rows)
+    return solver.make_stream_closures(src, basis, classes=classes,
+                                       cache_chunks=cache_chunks,
+                                       prefetch=prefetch), basis
+
+
+@pytest.mark.parametrize("cache_chunks,prefetch", [(0, 0), (0, 2), (2, 2),
+                                                   (None, 2), (None, 4)])
+def test_feeder_cache_and_prefetch_invariance(data, cache_chunks, prefetch):
+    """Every cache size x prefetch depth yields the same f/g/Hd values as
+    the synchronous uncached walk — the pipeline changes WHEN bytes move,
+    never what is computed."""
+    sc0, basis = _stream_closures(data, cache_chunks=0, prefetch=0)
+    sc, _ = _stream_closures(data, cache_chunks=cache_chunks,
+                             prefetch=prefetch)
+    b = np.linspace(-1, 1, M).astype(np.float32)
+    f0, g0, aux0 = sc0.fgrad(b)
+    f1, g1, aux1 = sc.fgrad(b)
+    assert float(f0) == float(f1)
+    np.testing.assert_array_equal(g0, g1)
+    h0 = sc0.hessd(aux0, g0)
+    h1 = sc.hessd(aux1, g1)
+    np.testing.assert_array_equal(h0, h1)
+    # and again with the cache warm
+    np.testing.assert_array_equal(h0, sc.hessd(aux1, g1))
+
+
+def test_feeder_device_cache_stops_retransfer(data):
+    """Acceptance: with the chunk cache warm, repeated evaluations move
+    zero host->device bytes; with the cache off, every evaluation re-pays
+    the full transfer (the PR 3 behavior)."""
+    sc_on, basis = _stream_closures(data, cache_chunks=None)   # auto: all fit
+    sc_off, _ = _stream_closures(data, cache_chunks=0)
+    assert sc_on.feeder.cache_chunks == sc_on.n_chunks
+    b = np.zeros((M,), np.float32)
+    _, _, aux_on = sc_on.fgrad(b)
+    warm = sc_on.feeder.h2d_bytes
+    sc_on.hessd(aux_on, b)
+    sc_on.hessd(aux_on, b)
+    assert sc_on.feeder.h2d_bytes == warm        # zero new bytes when warm
+    _, _, aux_off = sc_off.fgrad(b)
+    cold = sc_off.feeder.h2d_bytes
+    sc_off.hessd(aux_off, b)
+    assert sc_off.feeder.h2d_bytes > cold        # uncached: re-transfers
+
+
+def test_feeder_host_cache_pads_ragged_chunk_once(data):
+    """Satellite: the padded host arrays (ragged-tail X, y targets, weight
+    mask) are built once per chunk and reused across evaluations — but
+    full-size X chunks are NOT host-cached (out-of-core contract)."""
+    X, y = data
+    sc, _ = _stream_closures((X[:200], y[:200]), chunk_rows=48,
+                             cache_chunks=0)
+    feeder = sc.feeder
+    first = [feeder._host_chunk(i) for i in range(feeder.source.n_chunks)]
+    second = [feeder._host_chunk(i) for i in range(feeder.source.n_chunks)]
+    for i, ((X1, y1, w1), (X2, y2, w2)) in enumerate(zip(first, second)):
+        assert y1 is y2 and w1 is w2             # mask/targets cached
+        ragged = (i == feeder.source.n_chunks - 1)
+        assert (X1 is X2) == ragged              # only the padded tail is
+        assert X1.shape == (48, D)               # held; full chunks re-read
+    np.testing.assert_array_equal(first[-1][0][8:], 0.0)   # 200 = 4*48 + 8
+    np.testing.assert_array_equal(first[-1][2][:8], 1.0)
+    np.testing.assert_array_equal(first[-1][2][8:], 0.0)
+
+
+def test_feeder_prefetch_propagates_errors(data):
+    """An exception in the background reader surfaces to the caller (not a
+    hang, not a swallowed thread death)."""
+    sc, _ = _stream_closures(data, cache_chunks=0, prefetch=2)
+
+    class Boom(RuntimeError):
+        pass
+
+    def explode(i):
+        raise Boom("disk on fire")
+
+    sc.feeder.source.chunk = explode
+    with pytest.raises(Boom, match="disk on fire"):
+        list(sc.feeder.chunks())
+
+
+def test_stream_multiclass_from_shard_directory(data, tmp_path):
+    """Out-of-core one-vs-rest: integer labels live in .npy shards, class
+    discovery reads only the y files, each chunk expands to ±1 targets on
+    the host, and the fit matches the in-memory local multi-RHS fit."""
+    X, _ = data
+    yi = (np.argmax(np.asarray(X[:, :3]), axis=1)).astype(np.int64)
+    save_chunks(tmp_path, X, yi, rows_per_shard=100)
+    src = MmapChunkSource(tmp_path, chunk_rows=64)
+    np.testing.assert_array_equal(np.asarray(src.unique_labels()), [0, 1, 2])
+    basis = np.asarray(random_basis(jax.random.PRNGKey(2), jnp.asarray(X), M))
+    km = KernelMachine(CFG).fit(src, None, basis)
+    assert km.state_["beta"].shape == (M, 3)
+    ref = KernelMachine(CFG.replace(plan="local")).fit(X, jnp.asarray(yi),
+                                                       basis)
+    b, br = np.asarray(km.state_["beta"]), np.asarray(ref.state_["beta"])
+    assert np.linalg.norm(b - br) / np.linalg.norm(br) < 5e-3
+    assert km.score(X[:64], yi[:64]) == ref.score(X[:64], yi[:64])
+
+
+def test_stream_config_new_knobs_round_trip(tmp_path, data):
+    """cache_chunks/prefetch survive save/load; configs written before
+    the knobs existed (no such keys) still load with defaults."""
+    X, y = data
+    basis = np.asarray(random_basis(jax.random.PRNGKey(2), jnp.asarray(X), M))
+    sconf = StreamConfig(chunk_rows=32, cache_chunks=1, prefetch=0)
+    km = KernelMachine(CFG.replace(stream=sconf)).fit(X, y, basis)
+    path = str(tmp_path / "m.npz")
+    km.save(path)
+    assert KernelMachine.load(path).config.stream == sconf
+    legacy = CFG.stream.__class__(**{"chunk_rows": 16})   # pre-knob dict
+    assert legacy.cache_chunks is None and legacy.prefetch == 2
