@@ -1,0 +1,175 @@
+"""Inference scaling: local vs fused vs stream scoring at growing n_test.
+
+The prediction map o(x) = k(x, basis)·β is the same row-partitioned
+contraction training evaluates, so each execution plan's decide arm keeps
+its training-side memory contract at serving time. For each plan at each
+n_test this measures:
+
+  * score_s / rows_per_s — wall-clock for one full margin pass over the
+    test set (this container's reduced CPU scale; relative numbers).
+    The stream plan is timed over real .npy shards written to a temp
+    directory and read back memory-mapped — the scoring shape for test
+    sets larger than RAM.
+  * peak_intermediate_bytes — largest array the margin evaluation
+    materializes (jaxpr shape instrumentation): the dense local arm pays
+    the full (n_test, m) test gram; the fused arm stays under the
+    per-shard block heuristic; the stream arm is bounded by its per-chunk
+    body no matter how large n_test grows.
+
+Emits the repo-root ``BENCH_infer.json`` perf-trajectory record (append
+semantics: one entry per run, regressions visible across PRs). ``--smoke``
+runs the smallest size only and asserts the memory contracts — the
+``scripts/verify.sh --bench-smoke`` step.
+
+Run:  PYTHONPATH=src python -m benchmarks.infer_scaling [--devices 4]
+"""
+import argparse
+import os
+
+parser = argparse.ArgumentParser()
+parser.add_argument("--devices", type=int, default=4)
+parser.add_argument("--d", type=int, default=32)
+parser.add_argument("--m", type=int, default=256)
+parser.add_argument("--ns", type=int, nargs="*", default=[4096, 16384, 65536])
+parser.add_argument("--chunk-rows", type=int, default=4096)
+parser.add_argument("--classes", type=int, default=3,
+                    help="K one-vs-rest margin columns (one multi-RHS pass)")
+parser.add_argument("--smoke", action="store_true",
+                    help="smallest size only + contract asserts "
+                         "(the verify.sh --bench-smoke step)")
+parser.add_argument("--out", default=None,
+                    help="output JSON path (default: <repo>/BENCH_infer.json)")
+args = parser.parse_args()
+if args.smoke:
+    args.ns = [2048]
+    args.chunk_rows = 512
+# append (not setdefault): a user-set XLA_FLAGS must not silently disable
+# the forced device count --devices asked for
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") +
+    f" --xla_force_host_platform_device_count={args.devices}").strip()
+
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import MachineConfig, StreamConfig
+from repro.api.infer import (DecisionSpec, decide_fused, decide_local,
+                             make_margin_body, make_stream_decider)
+from repro.core import KernelSpec
+from repro.core.compat import make_mesh
+from repro.core.introspect import max_intermediate_bytes
+from repro.core.nystrom import gram
+from repro.data.chunks import MmapChunkSource, save_chunks
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+# Each arm is timed the way serving runs it: one jit-compiled decide
+# callable (what ServingEndpoint caches per bucket) warmed once, timed on
+# its second call — compile time never leaks into the trajectory.
+
+def bench_local(config, spec, X):
+    def margins(X):
+        return gram(X, spec.basis, spec.kernel, spec.backend) @ spec.beta
+
+    peak = max_intermediate_bytes(margins, X)
+    run = jax.jit(lambda X: decide_local(config, None, spec, X))
+    jax.block_until_ready(run(X))                # compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(run(X))
+    return time.perf_counter() - t0, peak
+
+
+def bench_fused(config, mesh, spec, X):
+    body = make_margin_body(config, mesh, spec)
+    with mesh:
+        peak = max_intermediate_bytes(body, X, spec.basis, spec.beta)
+    run = jax.jit(lambda X: decide_fused(config, mesh, spec, X))
+    jax.block_until_ready(run(X))                # compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(run(X))
+    return time.perf_counter() - t0, peak
+
+
+def bench_stream(config, mesh, spec, shard_dir):
+    src = MmapChunkSource(shard_dir, chunk_rows=args.chunk_rows)
+    sd = make_stream_decider(config, mesh, spec, src)
+    cr = sd.chunk_rows
+    shapes = (jax.ShapeDtypeStruct((cr, args.d), jnp.float32),
+              jax.ShapeDtypeStruct(np.shape(spec.basis), jnp.float32),
+              jax.ShapeDtypeStruct(np.shape(spec.beta), jnp.float32))
+    with mesh:
+        peak = max_intermediate_bytes(sd.o_chunk, *shapes)
+    for _ in sd.margins():                       # compile + warm page cache
+        pass
+    t0 = time.perf_counter()                     # second pass: same jitted
+    rows = sum(oc.shape[0] for oc in sd.margins())   # o_chunk body, reused
+    assert rows == src.n
+    return time.perf_counter() - t0, peak
+
+
+def main():
+    p, d, m, k = args.devices, args.d, args.m, args.classes
+    mesh = make_mesh((p,), ("data",))
+    kern = KernelSpec("gaussian", sigma=4.0)
+    config = MachineConfig(kernel=kern, stream=StreamConfig(
+        chunk_rows=args.chunk_rows))
+    basis = jax.random.normal(jax.random.PRNGKey(2), (m, d))
+    beta_shape = (m,) if k <= 1 else (m, k)
+    beta = jax.random.normal(jax.random.PRNGKey(3), beta_shape)
+    spec = DecisionSpec(map_x=lambda x: x, basis=basis, beta=beta,
+                        kernel=kern, backend="jnp")
+    results = []
+    print(f"d={d} m={m} K={max(k, 1)} p={p} chunk_rows={args.chunk_rows}")
+    print("| n_test | plan | score_s | rows/s | peak intermediate |")
+    print("|--------|------|---------|--------|-------------------|")
+    for n in args.ns:
+        X = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+        y = np.zeros((n,), np.float32)
+        with tempfile.TemporaryDirectory() as td:
+            save_chunks(td, np.asarray(X), y, rows_per_shard=args.chunk_rows)
+            for plan in ("local", "fused", "stream"):
+                if plan == "local":
+                    dt, peak = bench_local(config, spec, X)
+                elif plan == "fused":
+                    dt, peak = bench_fused(config, mesh, spec, X)
+                else:
+                    dt, peak = bench_stream(config, mesh, spec, td)
+                row = dict(n_test=n, plan=plan, score_s=round(dt, 5),
+                           rows_per_s=round(n / max(dt, 1e-9), 1),
+                           peak_intermediate_bytes=peak)
+                results.append(row)
+                print(f"| {n} | {plan} | {dt:.4f} | {row['rows_per_s']:.0f} "
+                      f"| {peak / 2**20:.2f} MiB |", flush=True)
+
+    if args.smoke:
+        by = {r["plan"]: r for r in results}
+        dense = args.ns[0] * m * 4          # the (n, m) f32 test-gram bytes
+        assert by["local"]["peak_intermediate_bytes"] >= dense, \
+            "instrumentation lost the dense test gram (positive control)"
+        assert by["fused"]["peak_intermediate_bytes"] < args.ns[0] * m * 4, \
+            "fused decide materialized an (n, m)-scale block"
+        assert by["stream"]["peak_intermediate_bytes"] < \
+            args.chunk_rows * m * 4, \
+            "stream decide materialized a (chunk_rows, m)-scale block"
+        print("[smoke] inference memory contracts hold "
+              "(dense gram seen locally; fused < n*m; stream < chunk*m)")
+
+    from benchmarks.run import append_trajectory   # one trajectory format
+    out = Path(args.out) if args.out else REPO_ROOT / "BENCH_infer.json"
+    append_trajectory(out, {
+        "benchmark": "infer_scaling", "run_at": time.strftime(
+            "%Y-%m-%dT%H:%M:%S"), "config": {
+                "devices": p, "d": d, "m": m, "classes": max(k, 1),
+                "chunk_rows": args.chunk_rows, "smoke": args.smoke,
+                "backend": jax.default_backend()}, "results": results})
+    print(f"appended {out}")
+
+
+if __name__ == "__main__":
+    main()

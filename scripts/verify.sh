@@ -5,10 +5,12 @@
 #                              + docs smoke (runs the README quickstart)
 #   scripts/verify.sh --full   tier-1 (the full pytest suite) + the smokes
 #   scripts/verify.sh --bench-smoke
-#                              fast gate + the smallest-size run of
-#                              benchmarks/kmvp_multirhs.py, which asserts
-#                              the multi-RHS amortization and the stream
-#                              chunk-cache transfer reduction still hold
+#                              fast gate + the smallest-size runs of
+#                              benchmarks/kmvp_multirhs.py (multi-RHS
+#                              amortization + stream chunk-cache transfer
+#                              reduction) and benchmarks/infer_scaling.py
+#                              (inference memory contracts; appends a
+#                              BENCH_infer.json trajectory point per PR)
 #
 # The fast gate is what you run in the inner loop (a couple of minutes);
 # the slow marker holds the 8-fake-device subprocess suites
@@ -61,11 +63,21 @@ if [[ "$status" -ne 0 ]]; then
 fi
 
 echo "== API smoke: train -> save -> load -> serve =="
-python -m repro.launch.kernel_serve --selftest || status=1
+serve_out="$tmp/serve_selftest.out"
+python -m repro.launch.kernel_serve --selftest 2>&1 | tee "$serve_out" \
+    || status=1
+# the selftest must exercise serving a stream-plan machine (the plan
+# override path); a silently narrowed selftest fails the gate
+grep -q "stream-plan machine served" "$serve_out" || {
+    echo "serve selftest no longer covers a stream-plan machine" >&2
+    status=1
+}
 
 if [[ "$bench_smoke" -eq 1 ]]; then
     echo "== bench smoke: multi-RHS kmvp amortization + stream chunk cache =="
     python -m benchmarks.kmvp_multirhs --smoke || status=1
+    echo "== bench smoke: inference scaling + memory contracts =="
+    python -m benchmarks.infer_scaling --smoke || status=1
 fi
 
 echo "== docs smoke: README quickstart block =="

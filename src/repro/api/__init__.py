@@ -6,6 +6,7 @@ solvers (tron | linearized | rff | ppacksvm) and execution plans
 repro.api.machine for the tour.
 """
 from repro.api.config import MachineConfig, StreamConfig
+from repro.api.infer import DecisionSpec
 from repro.api.result import FitResult
 from repro.api.machine import KernelMachine
 from repro.api.registry import (available_plans, available_solvers,
@@ -14,6 +15,7 @@ from repro.api.registry import (available_plans, available_solvers,
 
 __all__ = [
     "KernelMachine", "MachineConfig", "StreamConfig", "FitResult",
+    "DecisionSpec",
     "available_plans", "available_solvers", "get_plan", "get_solver",
     "register_plan", "register_solver", "valid_combinations", "validate",
 ]

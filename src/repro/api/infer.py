@@ -1,0 +1,274 @@
+"""Plan-aware inference engine: the paper's prediction map under every plan.
+
+Training and prediction are the same distributed primitive. The margin
+o(x) = k(x, basis)·β is one row of C·β — exactly the row-partitioned
+contraction every f/g/Hd evaluation performs — so each execution plan's
+``decide`` arm (registered alongside its ``fit`` arm in
+:mod:`repro.api.plans`) reuses the plan's training machinery:
+
+* ``local``      — the dense reference: materialize the (n_test, m) test
+                   gram on one device, one matmul. Fastest for batches that
+                   fit; also the numerical reference every other decide arm
+                   is tested against.
+* ``shard_map`` / ``auto`` / ``otf`` / ``otf_shard``
+                 — rows of the query batch sharded over the mesh's data
+                   axes, margins evaluated through the fused/chunked kmvp
+                   dispatchers (:func:`repro.kernels.ops.otf_kmvp_fwd`):
+                   no (n/p, m) test-gram block ever exists on any device —
+                   the same memory contract the training closures keep,
+                   asserted by ``repro.core.introspect`` in tests. Margins
+                   are row-partitioned like C·β, so prediction needs NO
+                   AllReduce — β is broadcast (the paper's step 2) and each
+                   device keeps the margins of its own rows. Multiclass
+                   (m, K) β blocks ride the multi-RHS kernels: one gram
+                   recomputation serves all K columns per batch.
+* ``stream``     — out-of-core scoring: the query set lives in a
+                   :class:`repro.data.chunks.ChunkSource` (in-memory
+                   arrays, or a directory of memory-mapped .npy shards
+                   larger than RAM) and margins are produced chunk by
+                   chunk through the same ``_ChunkFeeder`` pipeline the
+                   training plan uses (background-thread prefetch,
+                   host-pad caching). No intermediate reaches
+                   chunk_rows × m elements.
+
+Solvers contribute only a :class:`DecisionSpec` — which feature map,
+basis points, and weights realize o(x). Nyström solvers (tron,
+linearized, ppacksvm) use the identity map with their stored basis; rff
+maps x through φ(·) and contracts against an identity basis under a
+linear kernel — the same exact reduction its training path uses, so every
+plan applies unchanged.
+"""
+from __future__ import annotations
+
+import math
+from pathlib import Path
+from typing import Any, Callable, Iterator, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.compat import default_mesh, shard_map
+from repro.core.nystrom import KernelSpec, gram
+from repro.data.chunks import (ArrayChunkSource, ChunkSource,
+                               as_chunk_source)
+
+
+class DecisionSpec(NamedTuple):
+    """How a fitted state realizes the prediction map o(x).
+
+    ``map_x`` is a jit-traceable feature map applied to query rows before
+    the kernel contraction (identity for Nyström states, φ(·) for rff);
+    ``basis``/``beta`` are the points and weights of o(x) = k(map_x(x),
+    basis)·β; ``kernel``/``backend`` parameterize the gram/kmvp calls.
+    β may be (m,) or an (m, K) one-vs-rest block — every decide arm is
+    rank-generic over the trailing class axis.
+
+    ``identity_basis`` marks the rff-style reduction where the linear
+    kernel against an identity basis makes o(x) = map_x(x)·β exactly:
+    decide arms then contract the features directly — O(n_q·m·K) instead
+    of the O(n_q·m²) identity-gram detour — and never read ``basis``
+    (it may be None).
+    """
+    map_x: Callable
+    basis: Any
+    beta: Any
+    kernel: KernelSpec
+    backend: str
+    identity_basis: bool = False
+
+
+def _is_chunked(X) -> bool:
+    """Query sets that must route through the stream decide arm."""
+    return isinstance(X, (ChunkSource, str, Path))
+
+
+def as_inference_source(X, config) -> ChunkSource:
+    """Coerce a query set into a ChunkSource for chunked scoring.
+
+    Delegates to :func:`repro.data.chunks.as_chunk_source` (same rechunk /
+    shard-directory semantics as training) except that plain arrays wrap
+    label-less: inference never reads y, so requiring it would be noise.
+    """
+    if isinstance(X, (ChunkSource, str, Path)):
+        return as_chunk_source(X, None, chunk_rows=config.stream.chunk_rows,
+                               mmap=config.stream.mmap)
+    return ArrayChunkSource(np.asarray(X), None, config.stream.chunk_rows)
+
+
+def _basis_operand(spec: DecisionSpec):
+    """Array to ship as the basis argument of a margin body. Identity-basis
+    specs never read it, so a scalar placeholder keeps the body signature
+    uniform without materializing an (m, m) eye."""
+    if spec.identity_basis:
+        return jnp.zeros((), jnp.float32)
+    return jnp.asarray(spec.basis)
+
+
+# ------------------------------------------------------------------- local
+def decide_local(config, mesh, spec: DecisionSpec, X, *,
+                 backend: Optional[str] = None):
+    """Dense single-device reference: materialize the test gram, contract
+    (identity-basis specs contract their features directly)."""
+    del mesh
+    Xe = spec.map_x(jnp.asarray(X))
+    if spec.identity_basis:
+        return Xe @ spec.beta
+    C = gram(Xe, spec.basis, spec.kernel,
+             backend if backend is not None else spec.backend)
+    return C @ spec.beta
+
+
+# ------------------------------------------------------- fused (on-mesh)
+def _resolve_mesh(config, mesh):
+    if mesh is not None:
+        return mesh
+    return default_mesh(config.data_axes, None)
+
+
+def _data_extent(config, mesh) -> int:
+    return math.prod(mesh.shape[a] for a in config.data_axes)
+
+
+def make_margin_body(config, mesh, spec: DecisionSpec,
+                     backend: Optional[str] = None) -> Callable:
+    """shard_map body evaluating row-sharded margins through the fused
+    kmvp dispatchers — the decide-side sibling of
+    ``DistributedNystrom.make_fused_closures``. Rows-only partition;
+    margins stay with their rows (no collective). Exposed unjitted so
+    tests can trace it and prove the no-(n/p, m) memory contract."""
+    from repro.kernels.ops import otf_kmvp_fwd
+    da = tuple(config.data_axes)
+    kw = dict(kind=spec.kernel.kind, sigma=spec.kernel.sigma,
+              backend=backend if backend is not None else spec.backend,
+              block_rows=config.otf_block_rows)
+    x_spec = P(da, None)
+    o_spec = x_spec if jnp.ndim(spec.beta) == 2 else P(da)
+    map_x = spec.map_x
+
+    if spec.identity_basis:
+        def o_local(Xl, basis, beta):
+            del basis                      # o = φ(x)·β exactly, no gram
+            return map_x(Xl) @ beta
+    else:
+        def o_local(Xl, basis, beta):
+            return otf_kmvp_fwd(map_x(Xl), basis, beta, **kw)
+
+    return shard_map(o_local, mesh=mesh, check_vma=False,
+                     in_specs=(x_spec, P(), P()), out_specs=o_spec)
+
+
+def decide_fused(config, mesh, spec: DecisionSpec, X, *,
+                 backend: Optional[str] = None):
+    """Mesh-sharded margins, C never materialized: query rows over the
+    data axes, basis/β replicated, per-shard fused kmvp. Any n — ragged
+    batches are zero-row padded (padded margins are sliced off, so the
+    garbage rows never escape)."""
+    mesh = _resolve_mesh(config, mesh)
+    dp = _data_extent(config, mesh)
+    Xe = jnp.asarray(X)
+    n = Xe.shape[0]
+    npad = -(-n // dp) * dp
+    if npad != n:
+        Xe = jnp.pad(Xe, ((0, npad - n), (0, 0)))
+    body = make_margin_body(config, mesh, spec, backend)
+    with mesh:
+        o = body(Xe, _basis_operand(spec), jnp.asarray(spec.beta))
+    return o[:n]
+
+
+# ------------------------------------------------------ stream (out of core)
+class StreamDecider(NamedTuple):
+    """Chunked margin evaluation over a :class:`ChunkSource`.
+
+    ``o_chunk`` is the jitted per-chunk shard_map body — tests trace it
+    to prove no intermediate reaches chunk_rows × m elements. ``margins``
+    is a zero-arg callable returning the per-chunk margin iterator
+    (np arrays trimmed to true rows). ``feeder`` exposes ``h2d_bytes``
+    for transfer accounting."""
+    o_chunk: Callable
+    chunk_rows: int
+    n_chunks: int
+    feeder: Any
+    source: ChunkSource
+    margins: Callable
+
+
+def make_stream_decider(config, mesh, spec: DecisionSpec,
+                        source: ChunkSource, *,
+                        backend: Optional[str] = None,
+                        cache_chunks: int = 0,
+                        prefetch: Optional[int] = None) -> StreamDecider:
+    """Build the chunk-by-chunk margin pipeline over ``source``.
+
+    Chunks ride the same :class:`repro.core.distributed._ChunkFeeder`
+    the training plan uses — X-only transfers (``need_y=False``),
+    background-thread prefetch ``prefetch`` deep (default: the machine's
+    ``StreamConfig.prefetch``). The device cache defaults to 0: scoring
+    is one pass, so resident chunks would only burn HBM."""
+    from repro.core.distributed import _ChunkFeeder
+    mesh = _resolve_mesh(config, mesh)
+    dp = _data_extent(config, mesh)
+    cr = -(-source.chunk_rows // dp) * dp
+    if cr != source.chunk_rows:
+        source = source.with_chunk_rows(cr)
+    body = jax.jit(make_margin_body(config, mesh, spec, backend))
+    da = tuple(config.data_axes)
+    feeder = _ChunkFeeder(
+        source, cr, np.dtype(source.dtype),
+        x_sh=NamedSharding(mesh, P(da, None)),
+        y_sh=NamedSharding(mesh, P(da)),
+        r_sh=NamedSharding(mesh, P(da)),
+        cache_chunks=cache_chunks,
+        prefetch=config.stream.prefetch if prefetch is None else prefetch)
+    basis_dev = _basis_operand(spec)
+    beta_dev = jnp.asarray(spec.beta)
+    n, n_chunks = source.n, source.n_chunks
+
+    def margins() -> Iterator[np.ndarray]:
+        with mesh:
+            for i, Xd in enumerate(feeder.chunks(need_y=False)):
+                rows = min(n - i * cr, cr)
+                yield np.asarray(body(Xd, basis_dev, beta_dev))[:rows]
+
+    return StreamDecider(o_chunk=body, chunk_rows=cr, n_chunks=n_chunks,
+                         feeder=feeder, source=source, margins=margins)
+
+
+def decide_stream(config, mesh, spec: DecisionSpec, X, *,
+                  backend: Optional[str] = None):
+    """Out-of-core margins: accumulate the (n[, K]) output chunk by chunk
+    on the host. The only full-size array is the margin vector itself
+    (O(n·K) floats — a factor d/K smaller than the X the plan refuses to
+    hold); every device intermediate stays under chunk_rows × m. Returns
+    a host np.ndarray. For score/predict over sets where even the margin
+    vector binds, use the ``KernelMachine.decision_chunks`` /
+    ``predict_chunks`` iterators instead."""
+    source = as_inference_source(X, config)
+    sd = make_stream_decider(config, mesh, spec, source, backend=backend)
+    out = None
+    at = 0
+    for oc in sd.margins():
+        if out is None:
+            out = np.empty((source.n,) + oc.shape[1:], oc.dtype)
+        out[at:at + oc.shape[0]] = oc
+        at += oc.shape[0]
+    return out
+
+
+def iter_label_chunks(source: ChunkSource, chunk_rows: int) -> Iterator:
+    """Re-chunk ``source``'s label stream to exactly ``chunk_rows`` rows
+    per block (last block ragged), aligned with a same-sized
+    :class:`StreamDecider`. Uses :meth:`ChunkSource.iter_y`, so .npy
+    shard dirs read only their y files — no X bytes touched."""
+    buf: Optional[np.ndarray] = None
+    for seg in source.iter_y():
+        seg = np.asarray(seg)
+        buf = seg if buf is None or not buf.size else np.concatenate(
+            [buf, seg])
+        while buf.shape[0] >= chunk_rows:
+            yield buf[:chunk_rows]
+            buf = buf[chunk_rows:]
+    if buf is not None and buf.shape[0]:
+        yield buf

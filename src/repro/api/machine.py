@@ -13,13 +13,17 @@ the baselines is a config edit, not a code path change — the paper's
 """
 from __future__ import annotations
 
-from typing import List, Optional
+import hashlib
+from typing import Callable, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api.config import MachineConfig
-from repro.api.registry import validate
+from repro.api.infer import (_is_chunked, as_inference_source,
+                             iter_label_chunks, make_stream_decider)
+from repro.api.registry import get_plan, get_solver, validate
 from repro.api.result import FitResult
 from repro.checkpoint import load_arrays, save_checkpoint
 from repro.core.basis import select_basis
@@ -30,6 +34,24 @@ import repro.api.plans    # noqa: F401
 import repro.api.solvers  # noqa: F401
 
 _CKPT_FORMAT = 1
+
+
+def _x_fingerprint(X) -> tuple:
+    """Cheap dataset identity for the local-plan (C, W) growth cache.
+
+    Shape alone is NOT identity — two same-shape datasets must not share
+    cached kernel columns — so the key adds dtype and a strided-sample
+    checksum (≤ ~8k elements hashed regardless of n·d: O(1)-ish against
+    the O(n·m·d) gram build the cache avoids). Sampling is a deliberate
+    tradeoff: a swap to independently-generated data is caught with
+    near-certainty, but a surgical in-place edit confined to unsampled
+    rows is not — callers who mutate X between grow calls should treat it
+    as a new dataset (jax arrays, being immutable, cannot hit this)."""
+    n, d = map(int, X.shape)
+    sample = np.ascontiguousarray(
+        np.asarray(X[:: max(1, n // 64), :: max(1, d // 8)]))
+    return (n, d, str(sample.dtype),
+            hashlib.sha1(sample.tobytes()).hexdigest())
 
 
 class KernelMachine:
@@ -48,7 +70,7 @@ class KernelMachine:
         self.state_: Optional[dict] = None
         self.history_: List[FitResult] = []
         self._cw = None          # (C, W) cache for local stage-wise growth
-        self._cw_shape = None    # X shape the cache was built against
+        self._cw_key = None      # data fingerprint the cache was built on
 
     # ------------------------------------------------------------------- fit
     @property
@@ -87,7 +109,7 @@ class KernelMachine:
                                mesh=self.mesh, plan=self.config.plan, key=key)
         self.state_ = state
         self.history_ = [res]
-        self._cw = self._cw_shape = None
+        self._cw = self._cw_key = None
         return self
 
     def partial_fit(self, X, y, new_basis, *, key=None):
@@ -97,8 +119,10 @@ class KernelMachine:
         Under the ``local`` plan only the NEW columns of C (and new blocks
         of W) are computed — the incrementality the paper highlights as
         formulation (4)'s advantage over (3)'s incremental SVD. Distributed
-        plans rebuild their sharded (C, W) but keep the warm start. ``X, y``
-        must be the same dataset across calls.
+        plans rebuild their sharded (C, W) but keep the warm start. The
+        cache is keyed on a data fingerprint (shape + dtype + sampled
+        checksum), so passing *different* data of the same shape rebuilds
+        the kernel columns instead of silently reusing stale ones.
         """
         entry = validate(self.config.solver, self.config.plan)
         if not entry.grows:
@@ -108,6 +132,7 @@ class KernelMachine:
         new_basis = jnp.asarray(new_basis)
         kern, backend = self.config.kernel, self.config.backend
         local = self.config.plan == "local"
+        xkey = _x_fingerprint(X) if local else None   # computed once per call
 
         if self.state_ is None:
             basis = new_basis
@@ -115,7 +140,7 @@ class KernelMachine:
             if local:
                 self._cw = (build_C(X, basis, kern, backend),
                             build_W(basis, kern, backend))
-                self._cw_shape = X.shape
+                self._cw_key = xkey
         else:
             old_basis, old_beta = self.state_["basis"], self.state_["beta"]
             basis = jnp.concatenate([old_basis, new_basis], axis=0)
@@ -125,9 +150,12 @@ class KernelMachine:
                 [old_beta, jnp.zeros((new_basis.shape[0],)
                                      + old_beta.shape[1:], old_beta.dtype)])
             if local:
-                if self._cw is not None and self._cw_shape == X.shape:
+                # sampled-checksum comparison, never id(): an id fast path
+                # would falsely hit on in-place-mutated numpy arrays and on
+                # CPython id reuse
+                if self._cw is not None and self._cw_key == xkey:
                     C, W = self._cw          # only new columns/blocks below
-                else:                        # e.g. fit() first, then grow
+                else:                        # fit() first, or swapped data
                     C = build_C(X, old_basis, kern, backend)
                     W = build_W(old_basis, kern, backend)
                 C_new = gram(X, new_basis, kern, backend)
@@ -136,7 +164,7 @@ class KernelMachine:
                 C = jnp.concatenate([C, C_new], axis=1)
                 W = jnp.block([[W, W_cross], [W_cross.T, W_new]])
                 self._cw = (C, W)
-                self._cw_shape = X.shape
+                self._cw_key = xkey
 
         state, res = entry.fit(self.config, X, y, basis, beta0,
                                mesh=self.mesh, plan=self.config.plan,
@@ -151,23 +179,114 @@ class KernelMachine:
             raise RuntimeError("KernelMachine is not fitted; call fit() or "
                                "load() first")
 
-    def decision_function(self, X, *, backend: Optional[str] = None):
-        """Raw margin o(x); jit-traceable given fixed state. Shape (n,) for
-        a binary machine, (n, K) per-class margins for one-vs-rest."""
-        self._require_fitted()
-        entry = validate(self.config.solver, self.config.plan)
-        return entry.decision(self.config, self.state_, X, backend=backend)
+    def _decision_plan(self, X, plan: Optional[str]) -> str:
+        """Resolve which plan's decide arm serves this query set."""
+        if plan is None:
+            return "stream" if _is_chunked(X) else self.config.plan
+        get_plan(plan)                       # fail fast on unknown names
+        if _is_chunked(X) and plan != "stream":
+            raise ValueError(
+                f"plan {plan!r} scores in-memory batches; a ChunkSource / "
+                f"shard-directory query set routes through plan='stream' "
+                f"(or use decision_chunks/predict_chunks)")
+        return plan
 
-    def predict(self, X):
+    def _spec(self):
+        return get_solver(self.config.solver).decision_spec(self.config,
+                                                            self.state_)
+
+    def decision_function(self, X, *, plan: Optional[str] = None,
+                          backend: Optional[str] = None):
+        """Raw margin o(x) through the execution-plan registry. Shape (n,)
+        for a binary machine, (n, K) per-class margins for one-vs-rest.
+
+        ``plan`` overrides the training plan for this evaluation — any
+        registered plan is valid for inference regardless of how the
+        machine was trained (a ``stream``-trained machine serves small
+        batches via ``'local'``; a ``local``-trained machine scores a
+        larger-than-RAM shard directory via ``'stream'``). ``X`` may be a
+        :class:`~repro.data.chunks.ChunkSource` or shard-directory path
+        (routed through ``'stream'``, margins returned as one host
+        array); arrays go to the resolved plan's decide arm.
+        """
+        self._require_fitted()
+        plan = self._decision_plan(X, plan)
+        return get_plan(plan).decide(self.config, self.mesh, self._spec(),
+                                     X, backend=backend)
+
+    def decision_chunks(self, X) -> Iterator:
+        """Streaming margins: yield one (rows[, K]) host array per chunk of
+        ``X`` (array, ChunkSource, or shard-directory path), evaluated
+        through the stream decide pipeline — bounded memory even when the
+        full margin vector would not fit."""
+        self._require_fitted()
+        sd = make_stream_decider(self.config, self.mesh, self._spec(),
+                                 as_inference_source(X, self.config))
+        return sd.margins()
+
+    def _labels(self, o):
+        if "classes" in self.state_:
+            return self.state_["classes"][jnp.argmax(jnp.asarray(o), axis=-1)]
+        return jnp.sign(jnp.asarray(o))
+
+    def predict(self, X, *, plan: Optional[str] = None):
         """±1 signs for a binary machine; original integer labels (argmax
         over the one-vs-rest margins) for a multiclass machine."""
-        o = self.decision_function(X)
-        if self.state_ is not None and "classes" in self.state_:
-            return self.state_["classes"][jnp.argmax(o, axis=-1)]
-        return jnp.sign(o)
+        return self._labels(self.decision_function(X, plan=plan))
 
-    def score(self, X, y) -> float:
-        return float(jnp.mean(self.predict(X) == jnp.asarray(y)))
+    def predict_chunks(self, X) -> Iterator:
+        """Streaming :meth:`predict`: one host label array per chunk."""
+        for o in self.decision_chunks(X):
+            yield np.asarray(self._labels(o))
+
+    def score(self, X, y=None, *, plan: Optional[str] = None) -> float:
+        """Mean accuracy. A chunked ``X`` (ChunkSource / shard directory)
+        scores chunk-by-chunk in bounded memory; ``y=None`` then reads the
+        labels from the source itself (y-only shard reads)."""
+        self._require_fitted()
+        if _is_chunked(X):
+            self._decision_plan(X, plan)   # reject non-stream overrides
+            source = as_inference_source(X, self.config)
+            sd = make_stream_decider(self.config, self.mesh, self._spec(),
+                                     source)
+            labels = iter_label_chunks(sd.source, sd.chunk_rows) \
+                if y is None else None
+            correct = total = 0
+            at = 0
+            for o in sd.margins():
+                pred = np.asarray(self._labels(o))
+                rows = pred.shape[0]
+                yc = next(labels) if labels is not None \
+                    else np.asarray(y)[at:at + rows]
+                correct += int(np.sum(pred == yc))
+                total += rows
+                at += rows
+            return correct / total
+        if y is None:
+            raise TypeError("score() needs y for in-memory X (only chunked "
+                            "sources carry their own labels)")
+        # exact-count division (not f32 jnp.mean) so the in-memory and
+        # chunked paths return bit-identical accuracies for identical
+        # predictions at any n
+        pred = np.asarray(self.predict(X, plan=plan))
+        return int(np.sum(pred == np.asarray(y))) / pred.shape[0]
+
+    def decider(self, *, plan: Optional[str] = None,
+                backend: Optional[str] = None) -> Callable:
+        """A stable ``X -> margins`` callable bound to one plan's decide
+        arm — what a serving loop jit-compiles per batch bucket
+        (:mod:`repro.launch.kernel_serve`). The ``local`` and fused-plan
+        deciders are jit-traceable; the ``stream`` decider is host-driven
+        (serve a stream-trained machine via ``plan='local'`` or
+        ``'otf_shard'`` instead)."""
+        self._require_fitted()
+        entry = get_plan(plan or self.config.plan)
+        config, mesh, spec = self.config, self.mesh, self._spec()
+
+        def decide(X):
+            return entry.decide(config, mesh, spec, X, backend=backend)
+
+        return decide
 
     # ------------------------------------------------------------- save/load
     def save(self, path: str):

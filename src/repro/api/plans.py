@@ -3,7 +3,12 @@
 Every plan has the same contract — take the global problem
 ``(X, y, basis, beta0)`` plus a :class:`MachineConfig`, return a
 ``TronResult`` — so solvers compose with plans without knowing which one
-they got:
+they got. Each registration also carries a ``decide`` arm
+(:mod:`repro.api.infer`) executing the prediction map o(x) = k(x, basis)·β
+under the same memory/distribution contract as the plan's training
+closures — ``local`` materializes the dense test gram, the mesh plans
+route through the fused kmvp dispatchers, ``stream`` scores chunk by
+chunk from a :class:`~repro.data.chunks.ChunkSource`:
 
 * ``local``     — one device, materialized (C, W), Formulation4 closures.
                   Accepts a precomputed ``CW`` cache (stage-wise growth
@@ -53,6 +58,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.api.infer import decide_fused, decide_local, decide_stream
 from repro.api.registry import register_plan
 from repro.core.compat import default_mesh
 from repro.core.distributed import DistConfig, DistributedNystrom
@@ -62,7 +68,7 @@ from repro.core.tron import TronResult, tron
 from repro.data.chunks import as_chunk_source
 
 
-@register_plan("local")
+@register_plan("local", decide=decide_local)
 def plan_local(config, mesh, X, y, basis, beta0,
                CW: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
                classes=None) -> TronResult:
@@ -121,7 +127,7 @@ def _distributed(config, mesh, X, y, basis, beta0, *, mode: str,
     return solver.solve(X, y, basis, beta0=beta0, cfg=config.tron)
 
 
-@register_plan("shard_map")
+@register_plan("shard_map", decide=decide_fused)
 def plan_shard_map(config, mesh, X, y, basis, beta0, CW=None,
                    classes=None) -> TronResult:
     del CW, classes  # distributed plans build their own sharded (C, W);
@@ -130,7 +136,7 @@ def plan_shard_map(config, mesh, X, y, basis, beta0, CW=None,
                         mode="shard_map", materialize=True, plan="shard_map")
 
 
-@register_plan("auto")
+@register_plan("auto", decide=decide_fused)
 def plan_auto(config, mesh, X, y, basis, beta0, CW=None,
               classes=None) -> TronResult:
     del CW, classes
@@ -138,7 +144,7 @@ def plan_auto(config, mesh, X, y, basis, beta0, CW=None,
                         mode="auto", materialize=True, plan="auto")
 
 
-@register_plan("otf")
+@register_plan("otf", decide=decide_fused)
 def plan_otf(config, mesh, X, y, basis, beta0, CW=None,
              classes=None) -> TronResult:
     del CW, classes  # the whole point: C is never materialized
@@ -146,7 +152,7 @@ def plan_otf(config, mesh, X, y, basis, beta0, CW=None,
                         mode="shard_map", materialize=False, plan="otf")
 
 
-@register_plan("stream")
+@register_plan("stream", decide=decide_stream)
 def plan_stream(config, mesh, X, y, basis, beta0, CW=None,
                 classes=None) -> TronResult:
     """Out-of-core accumulation: X may be an in-memory array (wrapped into
@@ -178,7 +184,7 @@ def plan_stream(config, mesh, X, y, basis, beta0, CW=None,
                                prefetch=config.stream.prefetch)
 
 
-@register_plan("otf_shard")
+@register_plan("otf_shard", decide=decide_fused)
 def plan_otf_shard(config, mesh, X, y, basis, beta0, CW=None,
                    classes=None) -> TronResult:
     del CW, classes  # no (n/p, m) block exists to cache, let alone (C, W)

@@ -7,49 +7,74 @@ out-of-core chunk streaming). Any
 solver composes with any plan it declares mathematically valid — the
 composition is checked here, once, with an error message that lists the
 legal choices instead of failing deep inside a trace.
+
+The same split holds for inference. A solver contributes only a
+*decision spec* — which points/features and weights realize the paper's
+prediction map o(x) = k(x, basis)·β (``SolverEntry.decision_spec``) — and
+every plan carries a ``decide`` arm that executes that map under its own
+memory/distribution contract (``PlanEntry.decide``, implemented in
+:mod:`repro.api.infer`). Training validity (``SolverEntry.plans``) does
+NOT constrain inference: o(x) is one kmvp regardless of how β was
+obtained, so any fitted machine may serve under any registered plan via
+``KernelMachine.decision_function(..., plan=...)``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, FrozenSet, Optional
+from typing import Callable, Dict, FrozenSet
 
 SolverFn = Callable  # (config, X, y, basis, beta0, *, mesh, plan, key, CW) -> (state, FitResult)
-DecisionFn = Callable  # (config, state, X) -> outputs
+DecisionSpecFn = Callable  # (config, state) -> repro.api.infer.DecisionSpec
 PlanFn = Callable    # (config, mesh, X, y, basis, beta0, CW=None) -> TronResult
+DecideFn = Callable  # (config, mesh, spec, X, *, backend=None) -> margins
 
 
 @dataclasses.dataclass(frozen=True)
 class SolverEntry:
     name: str
     fit: SolverFn
-    decision: DecisionFn
+    decision_spec: DecisionSpecFn  # state -> (features, basis, beta) of o(x)
     plans: FrozenSet[str]      # execution plans this solver is valid under
     grows: bool = False        # supports partial_fit basis growth
     needs_basis: bool = False  # fit consumes a point basis (else ignores it)
 
 
+@dataclasses.dataclass(frozen=True)
+class PlanEntry:
+    name: str
+    fit: PlanFn                # run a TRON solve under this plan
+    decide: DecideFn           # evaluate o(x) margins under this plan
+
+
 _SOLVERS: Dict[str, SolverEntry] = {}
-_PLANS: Dict[str, PlanFn] = {}
+_PLANS: Dict[str, PlanEntry] = {}
 
 
 def register_solver(name: str, *, plans, grows: bool = False,
                     needs_basis: bool = False,
-                    decision: Optional[DecisionFn] = None):
+                    decision_spec: DecisionSpecFn = None):
     def deco(fn: SolverFn):
         if name in _SOLVERS:
             raise ValueError(f"solver {name!r} already registered")
-        _SOLVERS[name] = SolverEntry(name=name, fit=fn, decision=decision,
+        if decision_spec is None:
+            raise ValueError(f"solver {name!r} needs a decision_spec: every "
+                             f"fitted machine must be able to predict")
+        _SOLVERS[name] = SolverEntry(name=name, fit=fn,
+                                     decision_spec=decision_spec,
                                      plans=frozenset(plans), grows=grows,
                                      needs_basis=needs_basis)
         return fn
     return deco
 
 
-def register_plan(name: str):
+def register_plan(name: str, *, decide: DecideFn = None):
     def deco(fn: PlanFn):
         if name in _PLANS:
             raise ValueError(f"plan {name!r} already registered")
-        _PLANS[name] = fn
+        if decide is None:
+            raise ValueError(f"plan {name!r} needs a decide arm: inference "
+                             f"routes through the plan registry")
+        _PLANS[name] = PlanEntry(name=name, fit=fn, decide=decide)
         return fn
     return deco
 
@@ -69,7 +94,7 @@ def get_solver(name: str) -> SolverEntry:
     return _SOLVERS[name]
 
 
-def get_plan(name: str) -> PlanFn:
+def get_plan(name: str) -> PlanEntry:
     if name not in _PLANS:
         raise KeyError(
             f"unknown execution plan {name!r}; registered: {available_plans()}")

@@ -22,6 +22,11 @@ be a ChunkSource), ``rff`` with phi(X) in memory but the solve chunked.
 its O(m^3) eigendecomposition is the inherently-serial step the paper
 argues against. ``ppacksvm`` is pinned to ``local``: sequential SGD with
 O(n/r) communication rounds has no honest mapping onto the fused-loop plans.
+
+Training validity does NOT constrain inference: every solver contributes a
+``decision_spec`` (what o(x) is) and the plan registry's decide arms
+(repro.api.infer) execute it, so even a local-pinned solver's machine can
+serve its margins fused on a mesh or chunked out-of-core.
 """
 from __future__ import annotations
 
@@ -31,12 +36,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.infer import DecisionSpec
 from repro.api.registry import get_plan, register_solver
 from repro.api.result import FitResult
 from repro.core import linearized as lin
 from repro.core import ppacksvm as pps
 from repro.core import rff as rffm
-from repro.core.nystrom import KernelSpec, gram
+from repro.core.nystrom import KernelSpec
 
 
 def _key(config, key):
@@ -89,25 +95,38 @@ def _reject_ovr(X, y, solver: str):
             f"targets if you really meant a binary/regression problem)")
 
 
-# ------------------------------------------------------------------ decisions
-def _decision_nystrom(config, state, X, backend: Optional[str] = None):
-    C = gram(X, state["basis"], config.kernel,
-             backend if backend is not None else config.backend)
-    return C @ state["beta"]
+# ------------------------------------------------------------ decision specs
+# Solvers no longer execute predictions; they only declare what o(x) *is*
+# (feature map, basis points, weights) and the plan registry's decide arms
+# (repro.api.infer) execute it — dense locally, fused on a mesh, or chunked
+# out-of-core — exactly like the fit side of the registry.
+
+def _spec_nystrom(config, state) -> DecisionSpec:
+    """o(x) = k(x, basis)·β over the stored point basis (tron, linearized,
+    ppacksvm — for the last, the 'basis' is the full training set)."""
+    return DecisionSpec(map_x=lambda x: x, basis=state["basis"],
+                        beta=state["beta"], kernel=config.kernel,
+                        backend=config.backend)
 
 
-def _decision_rff(config, state, X, backend: Optional[str] = None):
-    del backend
+def _spec_rff(config, state) -> DecisionSpec:
+    """o(x) = φ(x)·β via the exact linear-kernel reduction the rff training
+    path uses (C = φ(X), identity basis): every plan's decide arm applies
+    unchanged. ``identity_basis`` lets the arms contract the features
+    directly instead of detouring through an (m, m) identity gram."""
     basis = rffm.RFFBasis(omega=state["omega"], phase=state["phase"],
                           sigma=config.kernel.sigma)
-    return rffm.rff_features(X, basis) @ state["beta"]
+    return DecisionSpec(map_x=lambda x: rffm.rff_features(x, basis),
+                        basis=None, beta=state["beta"],
+                        kernel=KernelSpec("linear"), backend="jnp",
+                        identity_basis=True)
 
 
 # -------------------------------------------------------------------- solvers
 @register_solver("tron",
                  plans={"local", "shard_map", "auto", "otf", "otf_shard",
                         "stream"},
-                 grows=True, needs_basis=True, decision=_decision_nystrom)
+                 grows=True, needs_basis=True, decision_spec=_spec_nystrom)
 def fit_tron(config, X, y, basis, beta0=None, *, mesh=None, plan=None,
              key=None, CW=None):
     """Formulation (4) + trust-region Newton — the paper's solver.
@@ -123,7 +142,8 @@ def fit_tron(config, X, y, basis, beta0=None, *, mesh=None, plan=None,
     classes = ovr_classes(X, y)
     if classes is None:
         beta0 = _zeros_like_beta(X, basis.shape[0], beta0)
-        res = get_plan(plan)(config, mesh, X, y, basis, beta0, CW=CW)
+        res = get_plan(plan).fit(config, mesh, X, y, basis, beta0,
+                                 CW=CW)
         state = {"basis": basis, "beta": res.beta}
     else:
         from repro.data.chunks import ovr_targets
@@ -138,8 +158,8 @@ def fit_tron(config, X, y, basis, beta0=None, *, mesh=None, plan=None,
             y_fit = y    # source keeps integer labels; chunks expand on host
         else:
             y_fit = jnp.asarray(ovr_targets(y, classes, dtype=X.dtype))
-        res = get_plan(plan)(config, mesh, X, y_fit, basis, beta0, CW=CW,
-                             classes=classes)
+        res = get_plan(plan).fit(config, mesh, X, y_fit, basis, beta0,
+                                 CW=CW, classes=classes)
         state = {"basis": basis, "beta": res.beta,
                  "classes": jnp.asarray(classes)}
     return state, FitResult.from_tron(res, solver="tron", plan=plan,
@@ -147,7 +167,7 @@ def fit_tron(config, X, y, basis, beta0=None, *, mesh=None, plan=None,
 
 
 @register_solver("linearized", plans={"local"}, needs_basis=True,
-                 decision=_decision_nystrom)
+                 decision_spec=_spec_nystrom)
 def fit_linearized(config, X, y, basis, beta0=None, *, mesh=None, plan=None,
                    key=None, CW=None):
     """Formulation (3) baseline: eigendecompose W, solve the linear machine."""
@@ -173,7 +193,7 @@ def fit_linearized(config, X, y, basis, beta0=None, *, mesh=None, plan=None,
 @register_solver("rff",
                  plans={"local", "shard_map", "auto", "otf", "otf_shard",
                         "stream"},
-                 decision=_decision_rff)
+                 decision_spec=_spec_rff)
 def fit_rff(config, X, y, basis=None, beta0=None, *, mesh=None, plan=None,
             key=None, CW=None):
     """Random Fourier features, then the SAME formulation-(4) machinery.
@@ -205,12 +225,13 @@ def fit_rff(config, X, y, basis=None, beta0=None, *, mesh=None, plan=None,
     beta0 = _zeros_like_beta(A, m, beta0)
     lin_cfg = config.replace(kernel=KernelSpec("linear"), backend="jnp")
     CW = (A, eye) if plan == "local" else None
-    res = get_plan(plan)(lin_cfg, mesh, A, y, eye, beta0, CW=CW)
+    res = get_plan(plan).fit(lin_cfg, mesh, A, y, eye, beta0, CW=CW)
     state = {"omega": basis.omega, "phase": basis.phase, "beta": res.beta}
     return state, FitResult.from_tron(res, solver="rff", plan=plan, m=m)
 
 
-@register_solver("ppacksvm", plans={"local"}, decision=_decision_nystrom)
+@register_solver("ppacksvm", plans={"local"},
+                 decision_spec=_spec_nystrom)
 def fit_ppacksvm(config, X, y, basis=None, beta0=None, *, mesh=None,
                  plan=None, key=None, CW=None):
     """P-packSVM baseline: packed Pegasos SGD in the full kernel space.

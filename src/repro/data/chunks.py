@@ -119,13 +119,23 @@ class ChunkSource:
 
 
 class ArrayChunkSource(ChunkSource):
-    """In-memory adapter: chunked view over arrays already in RAM."""
+    """In-memory adapter: chunked view over arrays already in RAM.
+
+    ``y=None`` builds a label-less view — the shape inference-only callers
+    (``KernelMachine.decision_function`` under the ``stream`` plan) need;
+    training paths always pass real labels (:func:`as_chunk_source`
+    enforces it). Chunk reads substitute a zero vector (margin evaluation
+    never looks at it), but any *label* read (:meth:`iter_y`, and thus
+    label-from-source scoring or class discovery) raises instead of
+    silently serving zeros as ground truth.
+    """
 
     def __init__(self, X, y, chunk_rows: Optional[int] = None):
         X = np.asarray(X)
-        y = np.asarray(y)
         if X.ndim != 2:
             raise ValueError(f"X must be (n, d), got shape {X.shape}")
+        self.has_y = y is not None
+        y = np.zeros((X.shape[0],), X.dtype) if y is None else np.asarray(y)
         if y.shape != (X.shape[0],):
             raise ValueError(
                 f"y shape {y.shape} does not match X rows {X.shape[0]}")
@@ -139,9 +149,15 @@ class ArrayChunkSource(ChunkSource):
         return self.X[np.asarray(idx, np.int64)]
 
     def with_chunk_rows(self, chunk_rows):
-        return ArrayChunkSource(self.X, self.y, chunk_rows)
+        return ArrayChunkSource(self.X, self.y if self.has_y else None,
+                                chunk_rows)
 
     def iter_y(self):
+        if not self.has_y:
+            raise ValueError(
+                "this ArrayChunkSource was built without labels (y=None, "
+                "an inference-only view); pass y explicitly to score "
+                "against it")
         yield self.y
 
 

@@ -1,16 +1,27 @@
 """Batched serving driver for a saved KernelMachine.
 
-Loads a checkpoint written by ``KernelMachine.save`` (any solver), builds a
-jit-compiled decision endpoint, and drives a synthetic request stream
-through it. Requests are padded up to power-of-two batch buckets so the
-jit cache holds one executable per bucket instead of one per request size —
-the standard shape-bucketing trick for latency-stable serving.
+Loads a checkpoint written by ``KernelMachine.save`` (any solver), binds a
+decision endpoint through the execution-plan registry's decide arms
+(``KernelMachine.decider`` — the same engine ``decision_function`` uses,
+no private serving math), and drives a synthetic request stream through
+it. Requests are padded up to power-of-two batch buckets so the jit cache
+holds one executable per bucket instead of one per request size — the
+standard shape-bucketing trick for latency-stable serving. Multiclass
+machines serve all K per-class margins in ONE multi-RHS evaluation per
+batch (β is the (m, K) block the kmvp kernels contract in one pass).
+
+A ``stream``-trained machine serves through the ``local`` decide arm by
+default (request batches are small and in memory; the host-driven chunk
+pipeline is for scoring datasets, not requests) — the plan-override
+symmetry the registry exists for. Pass ``--plan`` to pick any arm
+explicitly (e.g. ``otf_shard`` to serve huge-m machines without ever
+materializing the request gram).
 
   PYTHONPATH=src python -m repro.launch.kernel_serve --ckpt machine.npz \
       --requests 64 --max-batch 256
 
-  # end-to-end self-test: train a small machine on synthetic data, save,
-  # load, serve, and check served outputs equal direct decision_function
+  # end-to-end self-test: train small machines (local + stream plans),
+  # save, load, serve, and check served outputs equal decision_function
   PYTHONPATH=src python -m repro.launch.kernel_serve --selftest
 """
 from __future__ import annotations
@@ -33,27 +44,34 @@ def _bucket(n: int, max_batch: int) -> int:
     return min(b, max_batch)
 
 
-class ServingEndpoint:
-    """jit-cached batched ``decision_function`` over a loaded machine.
+def _serving_plan(km: KernelMachine, plan: Optional[str]) -> str:
+    """Resolve which decide arm serves request batches. The stream arm is
+    host-driven chunk I/O — wrong shape for latency serving — so stream
+    machines flip to the dense local arm unless overridden."""
+    plan = plan or km.config.plan
+    if plan == "stream":
+        plan = "local"
+    return plan
 
-    One compiled executable per (bucket size); state arrays are closed over
-    as jit constants-by-reference, so recompilation only happens on new
-    bucket sizes, never per request.
+
+class ServingEndpoint:
+    """jit-cached batched margins over a loaded machine, one plan arm.
+
+    One compiled executable per bucket size; the decide closure (state
+    arrays, plan, mesh) is closed over as jit constants-by-reference, so
+    recompilation only happens on new bucket sizes, never per request.
     """
 
-    def __init__(self, km: KernelMachine, max_batch: int = 256):
+    def __init__(self, km: KernelMachine, max_batch: int = 256,
+                 plan: Optional[str] = None, backend: Optional[str] = None):
         self.km = km
         self.max_batch = max_batch
+        self.plan = _serving_plan(km, plan)
+        self._decide = km.decider(plan=self.plan, backend=backend)
         self._compiled = {}
 
     def _fn(self):
-        km = self.km
-
-        @jax.jit
-        def decide(X):
-            return km.decision_function(X)
-
-        return decide
+        return jax.jit(self._decide)
 
     def __call__(self, X) -> jnp.ndarray:
         X = jnp.asarray(X)
@@ -74,7 +92,7 @@ class ServingEndpoint:
 
 
 def _train_demo_machine(path: str, n: int = 2048, m: int = 64,
-                        classes: int = 2) -> str:
+                        classes: int = 2, plan: str = "local") -> str:
     from repro.core import KernelSpec, TronConfig, random_basis
     from repro.data import make_classification, make_multiclass
 
@@ -86,21 +104,22 @@ def _train_demo_machine(path: str, n: int = 2048, m: int = 64,
                                    clusters_per_class=4)
     basis = random_basis(jax.random.PRNGKey(1), X, m)
     config = MachineConfig(kernel=KernelSpec("gaussian", sigma=2.0), lam=1.0,
-                           tron=TronConfig(max_iter=60))
+                           plan=plan, tron=TronConfig(max_iter=60))
     km = KernelMachine(config).fit(X, y, basis)
     km.save(path)
-    print(f"[train] demo machine: m={m} classes={classes} "
+    print(f"[train] demo machine: m={m} classes={classes} plan={plan} "
           f"train_acc={km.score(X, y):.4f} -> {path}")
     return path
 
 
 def serve_stream(km: KernelMachine, *, requests: int, max_batch: int,
-                 seed: int = 0, d: Optional[int] = None):
+                 seed: int = 0, d: Optional[int] = None,
+                 plan: Optional[str] = None):
     """Drive a random-size request stream; return latency stats."""
     if d is None:
         ref = km.state_.get("basis", km.state_.get("omega"))
         d = ref.shape[1] if "basis" in km.state_ else ref.shape[0]
-    endpoint = ServingEndpoint(km, max_batch=max_batch)
+    endpoint = ServingEndpoint(km, max_batch=max_batch, plan=plan)
     rng = np.random.default_rng(seed)
     sizes = rng.integers(1, max_batch + 1, size=requests)
     # warm every bucket so measured latencies are compile-free
@@ -116,6 +135,7 @@ def serve_stream(km: KernelMachine, *, requests: int, max_batch: int,
     stats = {
         "requests": requests,
         "rows": int(sizes.sum()),
+        "plan": endpoint.plan,
         "executables": endpoint.n_executables,
         "p50_ms": float(np.percentile(lat_ms, 50)),
         "p99_ms": float(np.percentile(lat_ms, 99)),
@@ -124,41 +144,67 @@ def serve_stream(km: KernelMachine, *, requests: int, max_batch: int,
     return endpoint, stats
 
 
+def _selftest():
+    path = "/tmp/repro_kernel_serve_selftest.npz"
+    _train_demo_machine(path, n=512, m=32)
+    km = KernelMachine.load(path)
+    endpoint, stats = serve_stream(km, requests=16, max_batch=64)
+    Xq = jax.random.normal(jax.random.PRNGKey(9), (37, 16))
+    served = endpoint(Xq)
+    direct = km.decision_function(Xq)
+    err = float(jnp.max(jnp.abs(served - direct)))
+    assert err < 1e-5, f"served != direct decision_function (max {err})"
+    print(f"[serve] {stats}")
+
+    # a stream-trained machine must serve too: the endpoint flips its
+    # host-driven chunk plan to the local decide arm, and the served
+    # margins must match BOTH the local arm and the machine's own
+    # (chunked) decision path — the plan-override symmetry in one check
+    _train_demo_machine(path, n=512, m=32, plan="stream")
+    km = KernelMachine.load(path)
+    endpoint = ServingEndpoint(km, max_batch=64)
+    assert endpoint.plan == "local", endpoint.plan
+    served = endpoint(Xq)
+    local = km.decision_function(Xq, plan="local")
+    chunked = km.decision_function(Xq)            # plan='stream' from config
+    err_l = float(jnp.max(jnp.abs(served - local)))
+    err_c = float(jnp.max(jnp.abs(served - jnp.asarray(chunked))))
+    assert err_l < 1e-5, f"stream machine served != local arm ({err_l})"
+    assert err_c < 1e-5, f"stream machine served != chunked arm ({err_c})"
+    print(f"[serve] stream-plan machine served via local arm OK "
+          f"(vs chunked decide max diff {err_c:.2e})")
+
+    # multiclass round trip: checkpoint carries classes, served margins
+    # are (b, K) from ONE multi-RHS evaluation, argmax labels match predict
+    _train_demo_machine(path, n=512, m=32, classes=3)
+    km = KernelMachine.load(path)
+    endpoint = ServingEndpoint(km, max_batch=64)
+    served = endpoint(Xq)
+    assert served.shape == (37, 3), served.shape
+    labels = km.state_["classes"][jnp.argmax(served, axis=-1)]
+    assert bool(jnp.all(labels == km.predict(Xq))), \
+        "served argmax labels != km.predict"
+    print(f"[selftest] OK: served==direct (max diff {err:.2e}), "
+          f"{stats['executables']} executables for {stats['requests']} "
+          f"request sizes; stream-plan machine served; multiclass (K=3) "
+          f"margins served + argmax labels verified")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--ckpt", default="/tmp/repro_kernel_machine.npz")
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--plan", default=None,
+                    help="decide arm override (default: the machine's plan; "
+                         "stream machines serve via 'local')")
     ap.add_argument("--train-if-missing", action="store_true")
     ap.add_argument("--selftest", action="store_true",
                     help="train->save->load->serve->verify, tiny sizes")
     args = ap.parse_args()
 
     if args.selftest:
-        path = "/tmp/repro_kernel_serve_selftest.npz"
-        _train_demo_machine(path, n=512, m=32)
-        km = KernelMachine.load(path)
-        endpoint, stats = serve_stream(km, requests=16, max_batch=64)
-        Xq = jax.random.normal(jax.random.PRNGKey(9), (37, 16))
-        served = endpoint(Xq)
-        direct = km.decision_function(Xq)
-        err = float(jnp.max(jnp.abs(served - direct)))
-        assert err < 1e-5, f"served != direct decision_function (max {err})"
-        print(f"[serve] {stats}")
-        # multiclass round trip: checkpoint carries classes, served margins
-        # are (b, K), argmax labels match the direct predict path
-        _train_demo_machine(path, n=512, m=32, classes=3)
-        km = KernelMachine.load(path)
-        endpoint = ServingEndpoint(km, max_batch=64)
-        served = endpoint(Xq)
-        assert served.shape == (37, 3), served.shape
-        labels = km.state_["classes"][jnp.argmax(served, axis=-1)]
-        assert bool(jnp.all(labels == km.predict(Xq))), \
-            "served argmax labels != km.predict"
-        print(f"[selftest] OK: served==direct (max diff {err:.2e}), "
-              f"{stats['executables']} executables for {stats['requests']} "
-              f"request sizes; multiclass (K=3) margins served + argmax "
-              f"labels verified")
+        _selftest()
         return
 
     import os
@@ -171,7 +217,7 @@ def main():
     print(f"[load ] solver={km.config.solver} loss={km.config.loss} "
           f"state={ {k: tuple(v.shape) for k, v in km.state_.items()} }")
     _, stats = serve_stream(km, requests=args.requests,
-                            max_batch=args.max_batch)
+                            max_batch=args.max_batch, plan=args.plan)
     print(f"[serve] {stats}")
 
 

@@ -152,6 +152,50 @@ def test_partial_fit_after_fit_grows_basis(data, basis):
     assert len(km.history_) == 2
 
 
+def test_partial_fit_detects_swapped_same_shape_data(data, basis):
+    """Regression: the local-plan (C, W) growth cache used to be keyed on
+    X.shape alone, so growing a basis after swapping X for *different*
+    data of the same shape silently reused stale kernel columns. The cache
+    is now keyed on a sampled-checksum fingerprint: the grown machine must
+    land on the optimum of the data it actually saw."""
+    X, y, _, _ = data
+    # a different dataset of the SAME shape (fresh draw, same generator)
+    from repro.data import make_classification
+    X2_all, y2_all = make_classification(jax.random.PRNGKey(7), 1280, 12,
+                                         clusters_per_class=4, margin=1.0)
+    X2, y2 = X2_all[:1024], y2_all[:1024]
+    assert X2.shape == X.shape
+
+    cfg = CFG.replace(tron=TronConfig(max_iter=120, grad_rtol=1e-5))
+    km = KernelMachine(cfg)
+    km.partial_fit(X, y, basis[:32])      # builds the (C, W) cache on X
+    km.partial_fit(X2, y2, basis[32:])    # swapped data: must rebuild
+
+    # reference: the identical call sequence with the cache force-cleared
+    ref = KernelMachine(cfg)
+    ref.partial_fit(X, y, basis[:32])
+    ref._cw = ref._cw_key = None
+    ref.partial_fit(X2, y2, basis[32:])
+    assert float(jnp.max(jnp.abs(km.state_["beta"] -
+                                 ref.state_["beta"]))) == 0.0
+    assert km.result_.f == ref.result_.f
+
+    # and the fast path still holds: growing on the SAME data reuses the
+    # cache — the old basis columns of C are never rebuilt
+    import repro.api.machine as machine_mod
+    km2 = KernelMachine(cfg)
+    km2.partial_fit(X, y, basis[:32])
+    orig_build_C, rebuilds = machine_mod.build_C, []
+    machine_mod.build_C = lambda *a, **k: (rebuilds.append(1),
+                                           orig_build_C(*a, **k))[1]
+    try:
+        km2.partial_fit(X, y, basis[32:40])
+    finally:
+        machine_mod.build_C = orig_build_C
+    assert not rebuilds                       # cache hit: no full C rebuild
+    assert km2._cw[0].shape == (1024, 40)     # grew FROM the cached block
+
+
 def test_partial_fit_rejected_for_non_growing_solver(data):
     X, y, _, _ = data
     km = KernelMachine(CFG.replace(solver="ppacksvm"))

@@ -352,6 +352,101 @@ def test_stream_multirhs_memory_contract(mc_problem, backend):
                                       jnp.asarray(basis), beta)
 
 
+# ------------------------------------------------- plan-aware inference
+def _fitted_for(solver, problem, config):
+    """One machine per solver, trained under its cheapest valid plan."""
+    from repro.api import get_solver
+    X, y, basis = problem
+    cfg = config.replace(solver=solver, plan="local", rff_features=M,
+                         ppack_epochs=1)
+    entry = get_solver(solver)
+    return KernelMachine(cfg).fit(X, y, basis if entry.needs_basis else None)
+
+
+@pytest.mark.parametrize("solver", ["tron", "linearized", "rff", "ppacksvm"])
+def test_decision_plan_matrix_parity(solver, problem, config):
+    """Every registered (solver, plan) pair's decision_function matches the
+    local dense reference at 1e-5 — including pairs whose TRAINING
+    composition is invalid (linearized/ppacksvm are local-pinned solvers,
+    but o(x) is one kmvp, valid under every decide arm)."""
+    X, _, _ = problem
+    km = _fitted_for(solver, problem, config)
+    Xt = X[:100]                      # ragged vs chunk_rows AND mesh extent
+    ref = np.asarray(km.decision_function(Xt, plan="local"))
+    scale = max(np.max(np.abs(ref)), 1e-6)
+    for plan in available_plans():
+        o = np.asarray(km.decision_function(Xt, plan=plan))
+        assert o.shape == ref.shape, (solver, plan)
+        assert np.max(np.abs(o - ref)) / scale < 1e-5, (solver, plan)
+
+
+def test_decision_unknown_plan_rejected(problem, config):
+    km = _fitted_for("tron", problem, config)
+    with pytest.raises(KeyError, match="unknown execution plan"):
+        km.decision_function(problem[0][:8], plan="no_such_plan")
+
+
+def test_multiclass_decision_plan_parity(mc_fits, mc_problem):
+    """The (n, K) multi-RHS margin block survives every decide arm: same
+    one-multi-RHS-evaluation margins, same argmax labels."""
+    X, _, _, _ = mc_problem
+    km = mc_fits["local"]
+    ref = np.asarray(km.decision_function(X[:50], plan="local"))
+    for plan in available_plans():
+        o = np.asarray(km.decision_function(X[:50], plan=plan))
+        assert o.shape == (50, KCLS), plan
+        assert np.max(np.abs(o - ref)) / np.max(np.abs(ref)) < 1e-5, plan
+        np.testing.assert_array_equal(
+            np.asarray(km.predict(X[:50], plan=plan)),
+            np.asarray(km.predict(X[:50], plan="local")))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_fused_decision_never_materializes_test_gram(problem, config,
+                                                     backend):
+    """Inference keeps the training-side memory contract: no intermediate
+    of the fused margin body reaches n x m elements; the dense local arm
+    is the positive control proving the walker sees test grams."""
+    from repro.api.infer import DecisionSpec, make_margin_body
+    from repro.core.nystrom import gram as dense_gram
+    X, _, basis = problem
+    mesh = make_mesh((1,), ("data",))
+    kern = KernelSpec("gaussian", sigma=2.0)
+    beta = jnp.zeros((M,), X.dtype)
+    spec = DecisionSpec(map_x=lambda x: x, basis=basis, beta=beta,
+                        kernel=kern, backend=backend)
+    body = make_margin_body(config, mesh, spec)
+    with mesh:
+        assert_max_intermediate_below(body, N * M, X, basis, beta)
+    control = lambda Xq: dense_gram(Xq, basis, kern, "jnp") @ beta
+    assert max_intermediate_elems(control, X) >= N * M
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_stream_decision_memory_contract(mc_problem, config, backend):
+    """Acceptance: the stream decide arm's per-chunk body stays under
+    chunk_rows x m elements with a K=8 multi-RHS beta block
+    (fused_contract_limit guards the bound still separates)."""
+    from repro.api.infer import DecisionSpec, make_stream_decider
+    from repro.core.introspect import fused_contract_limit
+    X, _, _, basis = mc_problem
+    K = 8
+    mesh = make_mesh((1,), ("data",))
+    spec = DecisionSpec(map_x=lambda x: x, basis=jnp.asarray(basis),
+                        beta=jnp.zeros((M, K)),
+                        kernel=KernelSpec("gaussian", sigma=2.0),
+                        backend=backend)
+    src = ArrayChunkSource(np.asarray(X), np.zeros((N,), np.float32), CHUNK)
+    sd = make_stream_decider(config, mesh, spec, src)
+    cr = sd.chunk_rows
+    shapes = (jax.ShapeDtypeStruct((cr, D), jnp.float32),
+              jax.ShapeDtypeStruct((M, D), jnp.float32),
+              jax.ShapeDtypeStruct((M, K), jnp.float32))
+    with mesh:
+        assert_max_intermediate_below(sd.o_chunk,
+                                      fused_contract_limit(cr, M, K), *shapes)
+
+
 @pytest.mark.parametrize("solver", ["rff", "linearized", "ppacksvm"])
 def test_multiclass_rejected_by_binary_solvers(mc_problem, solver):
     """Integer multiclass labels route to tron's multi-RHS path; the

@@ -152,6 +152,71 @@ def test_rff_solver_rejects_chunk_source(data, shard_dir):
             MmapChunkSource(shard_dir), None)
 
 
+# ------------------------------------------------- out-of-core scoring
+def test_decision_function_accepts_mmap_source(data, shard_dir):
+    """Acceptance: a stream-plan machine scores a shard-directory test set
+    straight from disk — margins, chunk iterator, and score all match the
+    in-memory evaluation."""
+    X, y = data
+    basis = np.asarray(random_basis(jax.random.PRNGKey(2), jnp.asarray(X), M))
+    km = KernelMachine(CFG).fit(X, y, basis)
+    src = MmapChunkSource(shard_dir, chunk_rows=64)
+    o_disk = km.decision_function(src)
+    o_mem = np.asarray(km.decision_function(X, plan="local"))
+    assert isinstance(o_disk, np.ndarray) and o_disk.shape == (N,)
+    assert np.max(np.abs(o_disk - o_mem)) < 1e-5
+    # a shard-directory PATH routes the same way
+    o_path = km.decision_function(str(shard_dir))
+    np.testing.assert_array_equal(o_path, o_disk)
+    # score with y=None reads labels from the source's y shards
+    assert km.score(src) == km.score(X, y)
+    # chunked prediction iterator covers the set exactly, in order
+    preds = np.concatenate(list(km.predict_chunks(src)))
+    np.testing.assert_array_equal(preds, np.asarray(km.predict(X)))
+
+
+def test_chunked_source_rejected_by_in_memory_plans(data, shard_dir):
+    X, y = data
+    basis = np.asarray(random_basis(jax.random.PRNGKey(2), jnp.asarray(X), M))
+    km = KernelMachine(CFG.replace(plan="local")).fit(X, y, basis)
+    src = MmapChunkSource(shard_dir)
+    # no explicit plan: chunked inputs auto-route through 'stream'
+    assert km.decision_function(src).shape == (N,)
+    with pytest.raises(ValueError, match="stream"):
+        km.decision_function(src, plan="local")
+
+
+def test_labelless_source_scoring_needs_explicit_y(data):
+    """A y=None ArrayChunkSource (inference view) must refuse
+    label-from-source scoring instead of silently grading against its
+    synthetic zero labels; passing y explicitly still works, and matches
+    the in-memory path exactly even at a non-power-of-two n."""
+    X, y = data
+    basis = np.asarray(random_basis(jax.random.PRNGKey(2), jnp.asarray(X), M))
+    km = KernelMachine(CFG).fit(X, y, basis)
+    src = ArrayChunkSource(X[:200], None, chunk_rows=48)   # ragged, no labels
+    assert km.decision_function(src).shape == (200,)       # margins: fine
+    with pytest.raises(ValueError, match="without labels"):
+        km.score(src)
+    assert km.score(src, y[:200]) == km.score(X[:200], y[:200])
+
+
+def test_stream_multiclass_scoring_from_disk(data, tmp_path):
+    """One multi-RHS margin pass per chunk: (n, K) margins from disk match
+    the local dense reference; chunked score equals in-memory score."""
+    X, _ = data
+    yi = (np.argmax(np.asarray(X[:, :3]), axis=1)).astype(np.int64)
+    save_chunks(tmp_path, X, yi, rows_per_shard=100)
+    src = MmapChunkSource(tmp_path, chunk_rows=64)
+    basis = np.asarray(random_basis(jax.random.PRNGKey(2), jnp.asarray(X), M))
+    km = KernelMachine(CFG).fit(src, None, basis)
+    o_disk = km.decision_function(src)
+    assert o_disk.shape == (N, 3)
+    o_mem = np.asarray(km.decision_function(X, plan="local"))
+    assert np.max(np.abs(o_disk - o_mem)) < 1e-5
+    assert km.score(src) == km.score(X, yi)
+
+
 # -------------------------------------------- chunk I/O pipeline (_ChunkFeeder)
 def _stream_closures(data, chunk_rows=48, cache_chunks=None, prefetch=2,
                      classes=None):
