@@ -1,0 +1,178 @@
+"""Serve SLO: continuous batching vs request-at-a-time under client load.
+
+One fleet of concurrent client threads fires identical mixed-size request
+streams at both serving architectures, with ``--window`` requests
+outstanding per client (the offered load is the same; only the server
+changes):
+
+  * baseline — the pre-engine ``ServingEndpoint`` semantics: a global
+    lock serializes dispatches, one request's rows per dispatch, so a
+    queued (2, d) request pays a whole (bucket, m) contraction alone;
+  * engine — :class:`repro.serve.ServeEngine` continuous batching: queued
+    rows from many clients coalesce into ONE power-of-two-bucketed
+    dispatch and the multi-RHS margins are scattered back per caller.
+
+Per-request latency is timed submit-to-result; responses are verified
+AFTER the timed region against references computed synchronously through
+the same bucketed jit family (``--atol`` bounds the comparison: at large
+m XLA may split the m-reduction differently per batch shape, so exact
+bitwise equality is only contractual at small m — the engine's own
+tier-1 tests pin that). The report per target: rows/s, p50/p95/p99 (the
+shared ``repro.serve.metrics.percentiles`` helper), completion/rejection
+counts, and for the engine batch occupancy + requests per dispatch.
+
+Emits the repo-root ``BENCH_serve.json`` perf-trajectory record (append
+semantics: one entry per run, regressions visible across PRs). ``--smoke``
+shrinks everything and asserts the serving contracts — the
+``scripts/verify.sh --bench-smoke`` step.
+
+Run:  PYTHONPATH=src python -m benchmarks.serve_slo [--clients 8]
+"""
+import argparse
+
+parser = argparse.ArgumentParser()
+parser.add_argument("--clients", type=int, default=8,
+                    help="concurrent client threads (acceptance: >= 8)")
+parser.add_argument("--requests", type=int, default=100,
+                    help="requests per client")
+parser.add_argument("--window", type=int, default=16,
+                    help="submissions outstanding per client (1 = fully "
+                         "synchronous callers)")
+parser.add_argument("--max-rows", type=int, default=4,
+                    help="request sizes drawn uniformly from [1, max-rows] "
+                         "— small requests are where coalescing pays")
+parser.add_argument("--m", type=int, default=4096,
+                    help="basis size (large m = expensive per-dispatch "
+                         "contraction, the serving-relevant regime)")
+parser.add_argument("--d", type=int, default=128)
+parser.add_argument("--max-batch", type=int, default=256,
+                    help="rows per engine dispatch: the top batch bucket")
+parser.add_argument("--atol", type=float, default=1e-6,
+                    help="verification tolerance vs the synchronous "
+                         "reference (0 = bitwise)")
+parser.add_argument("--seed", type=int, default=0)
+parser.add_argument("--smoke", action="store_true",
+                    help="tiny sizes + contract asserts "
+                         "(the verify.sh --bench-smoke step)")
+parser.add_argument("--out", default=None,
+                    help="output JSON path (default: <repo>/BENCH_serve.json)")
+args = parser.parse_args()
+if args.smoke:
+    args.clients, args.requests, args.window = 4, 40, 8
+    args.m, args.d, args.max_batch = 512, 32, 64
+
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.api import KernelMachine, MachineConfig
+from repro.core import KernelSpec
+from repro.serve import (EngineConfig, ModelRegistry, ServeEngine,
+                         baseline_target, engine_target, make_workload,
+                         run_load)
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def make_machine(m: int, d: int, seed: int = 0) -> KernelMachine:
+    """A served-shape machine with synthetic weights — serving cost depends
+    only on (m, d), not on how beta was fit, so no slow training here."""
+    km = KernelMachine(MachineConfig(kernel=KernelSpec("gaussian",
+                                                       sigma=4.0)))
+    km.state_ = {
+        "basis": jax.random.normal(jax.random.PRNGKey(seed), (m, d)),
+        "beta": jax.random.normal(jax.random.PRNGKey(seed + 1), (m,)),
+    }
+    return km
+
+
+def main():
+    print(f"clients={args.clients} requests/client={args.requests} "
+          f"window={args.window} sizes=1-{args.max_rows} m={args.m} "
+          f"d={args.d} max_batch={args.max_batch}")
+    registry = ModelRegistry(max_batch=args.max_batch)
+    registry.add("bin", make_machine(args.m, args.d, seed=args.seed))
+    t0 = time.perf_counter()
+    n_exec = sum(registry.warmup().values())
+    print(f"warmup: {n_exec} executables in {time.perf_counter() - t0:.2f}s")
+
+    streams = make_workload(registry, clients=args.clients,
+                            requests_per_client=args.requests,
+                            max_rows=args.max_rows, seed=args.seed)
+
+    base_tgt = baseline_target(registry,
+                               workers=args.clients * args.window)
+    base = run_load(base_tgt, streams, label="baseline",
+                    window=args.window, atol=args.atol)
+    base_tgt.close()
+
+    cfg = EngineConfig(max_batch=args.max_batch,
+                       max_queue=max(4096, 2 * args.clients * args.window),
+                       timeout_s=300.0)
+    with ServeEngine(registry, cfg) as engine:
+        eng = run_load(engine_target(engine), streams, label="engine",
+                       window=args.window, atol=args.atol)
+        snap = engine.metrics.snapshot()
+
+    speedup = eng.rows_per_s / max(base.rows_per_s, 1e-9)
+    results = []
+    print("| target | rows/s | p50 ms | p99 ms | done | rej | mismatch |")
+    print("|--------|--------|--------|--------|------|-----|----------|")
+    for rep in (base, eng):
+        row = rep.row()
+        row = {k: (round(v, 2) if isinstance(v, float) else v)
+               for k, v in row.items()}
+        if rep is eng:
+            row.update(occupancy=round(snap["occupancy"], 4),
+                       requests_per_dispatch=round(
+                           snap["requests_per_dispatch"], 2),
+                       rejection_rate=round(snap["rejection_rate"], 4),
+                       speedup_rows_per_s=round(speedup, 2))
+        results.append(row)
+        print(f"| {rep.label} | {rep.rows_per_s:.0f} "
+              f"| {rep.latency_ms['p50_ms']:.2f} "
+              f"| {rep.latency_ms['p99_ms']:.2f} | {rep.completed} "
+              f"| {rep.rejected} | {rep.mismatches} |", flush=True)
+    print(f"speedup: {speedup:.2f}x rows/s | engine p99 "
+          f"{eng.latency_ms['p99_ms']:.1f}ms vs baseline "
+          f"{base.latency_ms['p99_ms']:.1f}ms | occupancy "
+          f"{snap['occupancy']:.2f} | {snap['requests_per_dispatch']:.1f} "
+          f"requests/dispatch")
+
+    # the serving contracts, asserted hard in the fast gate
+    assert base.mismatches == 0 and eng.mismatches == 0, \
+        (base.mismatches, eng.mismatches)
+    assert eng.completed == eng.requests and eng.rejected == 0, \
+        (eng.completed, eng.requests, eng.rejected)
+    assert snap["requests_per_dispatch"] > 1.0, \
+        f"engine never coalesced ({snap['requests_per_dispatch']})"
+    assert 0.0 < snap["occupancy"] <= 1.0, snap["occupancy"]
+    if args.smoke:
+        assert speedup > 0.8, \
+            f"smoke floor: engine fell behind request-at-a-time ({speedup:.2f}x)"
+        print("[smoke] serve contracts hold (0 mismatches, 0 rejections, "
+              "coalescing > 1 request/dispatch)")
+    else:
+        assert speedup >= 2.0, \
+            f"acceptance: continuous batching must give >= 2x rows/s " \
+            f"({speedup:.2f}x)"
+        assert eng.latency_ms["p99_ms"] <= base.latency_ms["p99_ms"], \
+            "acceptance: engine p99 must be equal or better"
+
+    from benchmarks.run import append_trajectory   # one trajectory format
+    out = Path(args.out) if args.out else REPO_ROOT / "BENCH_serve.json"
+    append_trajectory(out, {
+        "benchmark": "serve_slo", "run_at": time.strftime(
+            "%Y-%m-%dT%H:%M:%S"), "config": {
+                "clients": args.clients, "requests": args.requests,
+                "window": args.window, "max_rows": args.max_rows,
+                "m": args.m, "d": args.d, "max_batch": args.max_batch,
+                "atol": args.atol, "smoke": args.smoke,
+                "backend": jax.default_backend()}, "results": results})
+    print(f"appended {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,9 +8,13 @@
 #                              fast gate + the smallest-size runs of
 #                              benchmarks/kmvp_multirhs.py (multi-RHS
 #                              amortization + stream chunk-cache transfer
-#                              reduction) and benchmarks/infer_scaling.py
+#                              reduction), benchmarks/infer_scaling.py
 #                              (inference memory contracts; appends a
-#                              BENCH_infer.json trajectory point per PR)
+#                              BENCH_infer.json trajectory point per PR),
+#                              and benchmarks/serve_slo.py (continuous
+#                              batching vs request-at-a-time with
+#                              occupancy/latency asserts; appends
+#                              BENCH_serve.json)
 #
 # The fast gate is what you run in the inner loop (a couple of minutes);
 # the slow marker holds the 8-fake-device subprocess suites
@@ -72,12 +76,20 @@ grep -q "stream-plan machine served" "$serve_out" || {
     echo "serve selftest no longer covers a stream-plan machine" >&2
     status=1
 }
+# ... and the concurrent continuous-batching engine (client threads firing
+# interleaved mixed-size mixed-K requests, every response verified)
+grep -q "concurrent engine OK" "$serve_out" || {
+    echo "serve selftest no longer covers the concurrent serve engine" >&2
+    status=1
+}
 
 if [[ "$bench_smoke" -eq 1 ]]; then
     echo "== bench smoke: multi-RHS kmvp amortization + stream chunk cache =="
     python -m benchmarks.kmvp_multirhs --smoke || status=1
     echo "== bench smoke: inference scaling + memory contracts =="
     python -m benchmarks.infer_scaling --smoke || status=1
+    echo "== bench smoke: serve SLO (continuous batching vs baseline) =="
+    python -m benchmarks.serve_slo --smoke || status=1
 fi
 
 echo "== docs smoke: README quickstart block =="

@@ -257,6 +257,114 @@ def decide_stream(config, mesh, spec: DecisionSpec, X, *,
     return out
 
 
+# ------------------------------------------------------- bucketed serving
+# Never dispatch a single-row bucket: XLA lowers a (1, d) contraction to a
+# different dot/gemm strategy than multi-row shapes, and the one-ULP drift
+# that causes would break the continuous-batching determinism contract
+# (a row served alone must be bitwise the row served inside a coalesced
+# block). Flooring at 2 keeps every bucket in the same gemm family for the
+# cost of one padded row on 1-row requests.
+MIN_BUCKET = 2
+
+
+def bucket_rows(n: int, max_batch: int) -> int:
+    """Power-of-two batch bucket for ``n`` query rows (floor
+    ``MIN_BUCKET``), capped at ``max_batch``. One jit executable per bucket
+    instead of one per request size — the standard shape-bucketing trick
+    for latency-stable serving."""
+    b = MIN_BUCKET
+    while b < n:
+        b <<= 1
+    return min(b, max_batch)
+
+
+def scatter_rows(margins, sizes) -> list:
+    """Split a coalesced margin block back into per-request row slices.
+
+    ``margins`` is the (sum(sizes)[, K]) output of one decide dispatch over
+    rows concatenated from many requests; the returned list has one
+    (sizes[i][, K]) view per request, in submission order. The inverse of
+    the ``np.concatenate`` the batcher performs — together they are the
+    continuous-batching contract: one dispatch, many callers, no row ever
+    crossing a request boundary."""
+    out, at = [], 0
+    for s in sizes:
+        out.append(margins[at:at + s])
+        at += s
+    return out
+
+
+class BucketedDecider:
+    """Bucketed jit-executable cache over one plan's decide callable.
+
+    The batch-composable serving primitive: ``__call__`` pads a request (or
+    a coalesced multi-request block) up to its power-of-two bucket, runs
+    the cached executable for that bucket, and trims the padding rows off —
+    so the jit cache holds at most log2(max_batch)+1 executables no matter
+    how many distinct batch sizes traffic produces. Oversize inputs split
+    into max_batch-row dispatches. Per-row margins are batch-composition
+    independent (rows reduce over m only), so a row served inside any
+    bucket equals the same row served alone — the property continuous
+    batching relies on and tests assert bitwise.
+    """
+
+    def __init__(self, decide: Callable, max_batch: int = 256):
+        self.max_batch = int(max_batch)
+        self._decide = decide
+        self._compiled = {}
+
+    def _compiled_for(self, b: int):
+        if b not in self._compiled:
+            self._compiled[b] = jax.jit(self._decide)
+        return self._compiled[b]
+
+    def __call__(self, X) -> np.ndarray:
+        """Margins for ``X`` as a host array, synchronously. Padding and
+        trimming happen host-side in numpy — only the bucket-shaped
+        executable itself touches XLA, so no request size ever triggers an
+        eager pad/slice compile (those one-off ~100 ms stalls would
+        dominate tail latency)."""
+        X = np.asarray(X)
+        n = X.shape[0]
+        if n > self.max_batch:          # split oversize (coalesced) blocks
+            parts = [self(X[i:i + self.max_batch])
+                     for i in range(0, n, self.max_batch)]
+            return np.concatenate(parts)
+        b = bucket_rows(n, self.max_batch)
+        if b != n:
+            Xp = np.zeros((b,) + X.shape[1:], X.dtype)
+            Xp[:n] = X
+        else:
+            Xp = X
+        return np.asarray(self._compiled_for(b)(Xp))[:n]
+
+    def padded_rows(self, n: int) -> int:
+        """Device rows one ``__call__(n rows)`` dispatches, padding and
+        oversize splits included — the denominator of batch occupancy."""
+        full, rem = divmod(n, self.max_batch)
+        total = full * self.max_batch
+        if rem:
+            total += bucket_rows(rem, self.max_batch)
+        return total
+
+    def warmup(self, d: int, dtype=np.float32) -> int:
+        """Precompile every bucket (1, 2, 4, ..., max_batch) for feature
+        dimension ``d`` so no live request ever pays a compile. Returns the
+        executable count. Reachable buckets are the powers of two from
+        ``MIN_BUCKET`` below ``max_batch`` plus ``max_batch`` itself (the
+        cap bucket, which need not be a power of two)."""
+        b = MIN_BUCKET
+        while b < self.max_batch:
+            self(np.zeros((b, d), dtype))
+            b <<= 1
+        self(np.zeros((self.max_batch, d), dtype))
+        return self.n_executables
+
+    @property
+    def n_executables(self) -> int:
+        return len(self._compiled)
+
+
 def iter_label_chunks(source: ChunkSource, chunk_rows: int) -> Iterator:
     """Re-chunk ``source``'s label stream to exactly ``chunk_rows`` rows
     per block (last block ragged), aligned with a same-sized

@@ -1,0 +1,28 @@
+"""Shared CLI plumbing for the launch drivers.
+
+``kernel_train`` and ``kernel_serve`` both advertise the live solver/plan
+registries in ``--help``; the formatting lives here once so the two can
+never drift (a newly registered solver or plan shows up in both drivers
+without touching either file).
+"""
+from __future__ import annotations
+
+from repro.api import available_plans, available_solvers
+
+
+def registry_epilog() -> str:
+    """The ``--help`` epilog enumerating the live registries."""
+    return (f"registered solvers: {', '.join(available_solvers())} | "
+            f"registered plans: {', '.join(available_plans())} "
+            f"(see repro.api.registry; docs/paper_map.md maps each to "
+            f"the paper)")
+
+
+def plan_choices() -> list:
+    """Live plan names, for ``choices=`` on a ``--plan`` argument."""
+    return available_plans()
+
+
+def solver_choices() -> list:
+    """Live solver names, for ``choices=`` on a ``--solver`` argument."""
+    return available_solvers()

@@ -1,27 +1,37 @@
-"""Batched serving driver for a saved KernelMachine.
+"""Serving driver for saved KernelMachines over the repro.serve engine.
 
-Loads a checkpoint written by ``KernelMachine.save`` (any solver), binds a
-decision endpoint through the execution-plan registry's decide arms
-(``KernelMachine.decider`` — the same engine ``decision_function`` uses,
-no private serving math), and drives a synthetic request stream through
-it. Requests are padded up to power-of-two batch buckets so the jit cache
-holds one executable per bucket instead of one per request size — the
-standard shape-bucketing trick for latency-stable serving. Multiclass
-machines serve all K per-class margins in ONE multi-RHS evaluation per
-batch (β is the (m, K) block the kmvp kernels contract in one pass).
+Loads checkpoints written by ``KernelMachine.save`` (any solver), registers
+them in a :class:`repro.serve.ModelRegistry` (one bucketed jit-executable
+cache per model, decide arms from the execution-plan registry — the same
+engine ``decision_function`` uses, no private serving math), precompiles
+every batch bucket (``warmup``; ``--no-warmup`` opts out), and drives a
+concurrent synthetic client fleet through the asynchronous
+continuous-batching :class:`repro.serve.ServeEngine`: queued rows from
+many callers coalesce into ONE power-of-two-bucketed dispatch, multi-RHS
+margins come back in one pass and are scattered to each caller's future.
+Admission control (bounded queue, in-flight cap, per-request timeout)
+turns overload into clean rejections.
 
 A ``stream``-trained machine serves through the ``local`` decide arm by
 default (request batches are small and in memory; the host-driven chunk
-pipeline is for scoring datasets, not requests) — the plan-override
-symmetry the registry exists for. Pass ``--plan`` to pick any arm
-explicitly (e.g. ``otf_shard`` to serve huge-m machines without ever
-materializing the request gram).
+pipeline is for scoring datasets, not requests). Pass ``--plan`` to pick
+any arm explicitly (e.g. ``otf_shard`` to serve huge-m machines without
+ever materializing the request gram).
 
+  # concurrent load against one machine (the default path)
   PYTHONPATH=src python -m repro.launch.kernel_serve --ckpt machine.npz \
-      --requests 64 --max-batch 256
+      --clients 8 --requests 64 --max-batch 256
 
-  # end-to-end self-test: train small machines (local + stream plans),
-  # save, load, serve, and check served outputs equal decision_function
+  # several checkpoints served side by side, traffic mixed across them
+  PYTHONPATH=src python -m repro.launch.kernel_serve \
+      --ckpt a.npz --ckpt b.npz
+
+  # the old single-client request-at-a-time loop
+  PYTHONPATH=src python -m repro.launch.kernel_serve --ckpt m.npz --serial
+
+  # end-to-end self-test: train small machines (local + stream plans,
+  # binary + multiclass), save, load, serve synchronously AND through the
+  # concurrent engine, verify every response
   PYTHONPATH=src python -m repro.launch.kernel_serve --selftest
 """
 from __future__ import annotations
@@ -35,60 +45,33 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import KernelMachine, MachineConfig
+from repro.api.infer import BucketedDecider, bucket_rows
+from repro.launch.cli import plan_choices, registry_epilog
+from repro.serve import (EngineConfig, ModelRegistry, ServeEngine,
+                         baseline_target, engine_target, make_workload,
+                         percentiles, run_load, serving_plan)
+
+# back-compat aliases: tests and older scripts import these names from here
+_bucket = bucket_rows
+_serving_plan = serving_plan
 
 
-def _bucket(n: int, max_batch: int) -> int:
-    b = 1
-    while b < n:
-        b <<= 1
-    return min(b, max_batch)
+class ServingEndpoint(BucketedDecider):
+    """Deprecated single-caller shim over :class:`BucketedDecider`.
 
-
-def _serving_plan(km: KernelMachine, plan: Optional[str]) -> str:
-    """Resolve which decide arm serves request batches. The stream arm is
-    host-driven chunk I/O — wrong shape for latency serving — so stream
-    machines flip to the dense local arm unless overridden."""
-    plan = plan or km.config.plan
-    if plan == "stream":
-        plan = "local"
-    return plan
-
-
-class ServingEndpoint:
-    """jit-cached batched margins over a loaded machine, one plan arm.
-
-    One compiled executable per bucket size; the decide closure (state
-    arrays, plan, mesh) is closed over as jit constants-by-reference, so
-    recompilation only happens on new bucket sizes, never per request.
+    The pre-engine synchronous endpoint: one caller, one request at a
+    time. New code should register machines in a
+    :class:`repro.serve.ModelRegistry` and serve through
+    :class:`repro.serve.ServeEngine`; this class remains as the
+    request-at-a-time baseline the SLO harness measures against.
     """
 
     def __init__(self, km: KernelMachine, max_batch: int = 256,
                  plan: Optional[str] = None, backend: Optional[str] = None):
         self.km = km
-        self.max_batch = max_batch
-        self.plan = _serving_plan(km, plan)
-        self._decide = km.decider(plan=self.plan, backend=backend)
-        self._compiled = {}
-
-    def _fn(self):
-        return jax.jit(self._decide)
-
-    def __call__(self, X) -> jnp.ndarray:
-        X = jnp.asarray(X)
-        n = X.shape[0]
-        if n > self.max_batch:          # split oversize requests
-            parts = [self(X[i:i + self.max_batch])
-                     for i in range(0, n, self.max_batch)]
-            return jnp.concatenate(parts)
-        b = _bucket(n, self.max_batch)
-        if b not in self._compiled:
-            self._compiled[b] = self._fn()
-        Xp = jnp.pad(X, ((0, b - n), (0, 0)))
-        return self._compiled[b](Xp)[:n]
-
-    @property
-    def n_executables(self) -> int:
-        return len(self._compiled)
+        self.plan = serving_plan(km, plan)
+        super().__init__(km.decider(plan=self.plan, backend=backend),
+                         max_batch=max_batch)
 
 
 def _train_demo_machine(path: str, n: int = 2048, m: int = 64,
@@ -115,33 +98,69 @@ def _train_demo_machine(path: str, n: int = 2048, m: int = 64,
 def serve_stream(km: KernelMachine, *, requests: int, max_batch: int,
                  seed: int = 0, d: Optional[int] = None,
                  plan: Optional[str] = None):
-    """Drive a random-size request stream; return latency stats."""
+    """Single-client request-at-a-time loop; returns latency stats with
+    tail percentiles (p50/p95/p99 via the shared serve-metrics helper, so
+    this report and the SLO load harness can never disagree)."""
     if d is None:
-        ref = km.state_.get("basis", km.state_.get("omega"))
-        d = ref.shape[1] if "basis" in km.state_ else ref.shape[0]
+        from repro.serve.registry import model_dim
+        d = model_dim(km)
     endpoint = ServingEndpoint(km, max_batch=max_batch, plan=plan)
     rng = np.random.default_rng(seed)
     sizes = rng.integers(1, max_batch + 1, size=requests)
     # warm every bucket so measured latencies are compile-free
-    for b in sorted({_bucket(int(s), max_batch) for s in sizes}):
-        jax.block_until_ready(endpoint(jnp.zeros((b, d), jnp.float32)))
+    endpoint.warmup(d)
     lat = []
     for s in sizes:
         Xq = jnp.asarray(rng.standard_normal((int(s), d)), jnp.float32)
         t0 = time.perf_counter()
         jax.block_until_ready(endpoint(Xq))
         lat.append(time.perf_counter() - t0)
-    lat_ms = np.sort(np.array(lat)) * 1e3
     stats = {
         "requests": requests,
         "rows": int(sizes.sum()),
         "plan": endpoint.plan,
         "executables": endpoint.n_executables,
-        "p50_ms": float(np.percentile(lat_ms, 50)),
-        "p99_ms": float(np.percentile(lat_ms, 99)),
+        **percentiles(lat),
         "rows_per_s": float(sizes.sum() / max(sum(lat), 1e-9)),
     }
     return endpoint, stats
+
+
+def build_registry(ckpts, *, max_batch: int, plan: Optional[str] = None,
+                   warmup: bool = True) -> ModelRegistry:
+    """Load checkpoints into a registry (model names m0, m1, ... in CLI
+    order) and optionally precompile every bucket of every model."""
+    registry = ModelRegistry(max_batch=max_batch)
+    for i, path in enumerate(ckpts):
+        entry = registry.load(f"m{i}", path, plan=plan)
+        beta = entry.km.state_["beta"]
+        print(f"[load ] {entry.name}: {path} solver={entry.km.config.solver} "
+              f"plan={entry.plan} d={entry.d} "
+              f"K={beta.shape[1] if beta.ndim == 2 else 1}")
+    if warmup:
+        t0 = time.perf_counter()
+        counts = registry.warmup()
+        print(f"[warm ] precompiled {sum(counts.values())} executables "
+              f"across {len(counts)} models in {time.perf_counter() - t0:.2f}s"
+              f" (first-request latency is compile-free)")
+    return registry
+
+
+def serve_concurrent(registry: ModelRegistry, *, clients: int, requests: int,
+                     max_batch: int, engine_config: EngineConfig,
+                     seed: int = 0):
+    """Drive a concurrent mixed-size client fleet through the engine."""
+    streams = make_workload(registry, clients=clients,
+                            requests_per_client=requests,
+                            max_rows=max_batch, seed=seed)
+    with ServeEngine(registry, engine_config) as engine:
+        report = run_load(engine_target(engine), streams, label="engine")
+        snap = engine.metrics.snapshot()
+    stats = {**report.row(),
+             "occupancy": round(snap["occupancy"], 4),
+             "requests_per_dispatch": round(snap["requests_per_dispatch"], 2),
+             "rejection_rate": round(snap["rejection_rate"], 4)}
+    return report, stats
 
 
 def _selftest():
@@ -160,13 +179,14 @@ def _selftest():
     # host-driven chunk plan to the local decide arm, and the served
     # margins must match BOTH the local arm and the machine's own
     # (chunked) decision path — the plan-override symmetry in one check
-    _train_demo_machine(path, n=512, m=32, plan="stream")
-    km = KernelMachine.load(path)
-    endpoint = ServingEndpoint(km, max_batch=64)
+    path_stream = "/tmp/repro_kernel_serve_selftest_stream.npz"
+    _train_demo_machine(path_stream, n=512, m=32, plan="stream")
+    km_stream = KernelMachine.load(path_stream)
+    endpoint = ServingEndpoint(km_stream, max_batch=64)
     assert endpoint.plan == "local", endpoint.plan
     served = endpoint(Xq)
-    local = km.decision_function(Xq, plan="local")
-    chunked = km.decision_function(Xq)            # plan='stream' from config
+    local = km_stream.decision_function(Xq, plan="local")
+    chunked = km_stream.decision_function(Xq)     # plan='stream' from config
     err_l = float(jnp.max(jnp.abs(served - local)))
     err_c = float(jnp.max(jnp.abs(served - jnp.asarray(chunked))))
     assert err_l < 1e-5, f"stream machine served != local arm ({err_l})"
@@ -176,31 +196,77 @@ def _selftest():
 
     # multiclass round trip: checkpoint carries classes, served margins
     # are (b, K) from ONE multi-RHS evaluation, argmax labels match predict
-    _train_demo_machine(path, n=512, m=32, classes=3)
-    km = KernelMachine.load(path)
-    endpoint = ServingEndpoint(km, max_batch=64)
+    path_mc = "/tmp/repro_kernel_serve_selftest_mc.npz"
+    _train_demo_machine(path_mc, n=512, m=32, classes=3)
+    km_mc = KernelMachine.load(path_mc)
+    endpoint = ServingEndpoint(km_mc, max_batch=64)
     served = endpoint(Xq)
     assert served.shape == (37, 3), served.shape
-    labels = km.state_["classes"][jnp.argmax(served, axis=-1)]
-    assert bool(jnp.all(labels == km.predict(Xq))), \
+    labels = km_mc.state_["classes"][jnp.argmax(served, axis=-1)]
+    assert bool(jnp.all(labels == km_mc.predict(Xq))), \
         "served argmax labels != km.predict"
+
+    # concurrent engine: all three machines (binary, stream-trained,
+    # multiclass) registered side by side, 4 client threads firing a few
+    # hundred interleaved mixed-size mixed-K requests — every response
+    # must exactly equal its precomputed synchronous reference, and the
+    # batcher must actually coalesce (requests per dispatch > 1)
+    registry = build_registry([path, path_stream, path_mc],
+                              max_batch=64, warmup=True)
+    report, cstats = serve_concurrent(
+        registry, clients=4, requests=60, max_batch=64,
+        engine_config=EngineConfig(max_batch=64, timeout_s=30.0))
+    assert report.mismatches == 0, \
+        f"{report.mismatches} concurrent responses mismatched their " \
+        f"synchronous reference"
+    assert report.completed == report.requests, (report.completed,
+                                                 report.requests)
+    assert cstats["requests_per_dispatch"] > 1.0, \
+        f"engine never coalesced (requests/dispatch = " \
+        f"{cstats['requests_per_dispatch']})"
+    print(f"[serve] concurrent engine OK: {cstats}")
+
     print(f"[selftest] OK: served==direct (max diff {err:.2e}), "
-          f"{stats['executables']} executables for {stats['requests']} "
-          f"request sizes; stream-plan machine served; multiclass (K=3) "
-          f"margins served + argmax labels verified")
+          f"{stats['executables']} executables; stream-plan machine served; "
+          f"multiclass (K=3) margins served + argmax labels verified; "
+          f"concurrent engine served {report.completed} requests from "
+          f"{report.clients} clients with 0 mismatches "
+          f"({cstats['requests_per_dispatch']:.1f} requests/dispatch, "
+          f"occupancy {cstats['occupancy']:.2f})")
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--ckpt", default="/tmp/repro_kernel_machine.npz")
-    ap.add_argument("--requests", type=int, default=64)
-    ap.add_argument("--max-batch", type=int, default=256)
-    ap.add_argument("--plan", default=None,
-                    help="decide arm override (default: the machine's plan; "
-                         "stream machines serve via 'local')")
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        epilog=registry_epilog())
+    ap.add_argument("--ckpt", action="append", default=None,
+                    help="checkpoint path (repeat to serve several machines "
+                         "side by side from one engine)")
+    ap.add_argument("--requests", type=int, default=64,
+                    help="requests per client (concurrent) / total (serial)")
+    ap.add_argument("--clients", type=int, default=8,
+                    help="concurrent client threads driving the engine")
+    ap.add_argument("--max-batch", type=int, default=256,
+                    help="rows per dispatch: the top batch bucket")
+    ap.add_argument("--max-queue", type=int, default=1024,
+                    help="admission bound on waiting requests")
+    ap.add_argument("--timeout", type=float, default=None,
+                    help="per-request deadline seconds (default: none)")
+    ap.add_argument("--plan", default=None, choices=plan_choices(),
+                    help="decide arm override (default: each machine's own "
+                         "plan; stream machines serve via 'local'; live "
+                         "registry: %(choices)s)")
+    ap.add_argument("--serial", action="store_true",
+                    help="single-client request-at-a-time loop (the "
+                         "pre-engine behavior) instead of the concurrent "
+                         "engine")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip precompiling batch buckets at startup (first "
+                         "request per bucket then pays its compile)")
     ap.add_argument("--train-if-missing", action="store_true")
     ap.add_argument("--selftest", action="store_true",
-                    help="train->save->load->serve->verify, tiny sizes")
+                    help="train->save->load->serve->verify (synchronous + "
+                         "concurrent engine), tiny sizes")
     args = ap.parse_args()
 
     if args.selftest:
@@ -208,16 +274,31 @@ def main():
         return
 
     import os
-    if not os.path.exists(args.ckpt):
-        if not args.train_if_missing:
-            ap.error(f"{args.ckpt} not found (pass --train-if-missing to "
-                     f"bootstrap a demo machine)")
-        _train_demo_machine(args.ckpt)
-    km = KernelMachine.load(args.ckpt)
-    print(f"[load ] solver={km.config.solver} loss={km.config.loss} "
-          f"state={ {k: tuple(v.shape) for k, v in km.state_.items()} }")
-    _, stats = serve_stream(km, requests=args.requests,
-                            max_batch=args.max_batch, plan=args.plan)
+    ckpts = args.ckpt or ["/tmp/repro_kernel_machine.npz"]
+    for path in ckpts:
+        if not os.path.exists(path):
+            if not args.train_if_missing:
+                ap.error(f"{path} not found (pass --train-if-missing to "
+                         f"bootstrap a demo machine)")
+            _train_demo_machine(path)
+
+    if args.serial:
+        km = KernelMachine.load(ckpts[0])
+        print(f"[load ] solver={km.config.solver} loss={km.config.loss} "
+              f"state={ {k: tuple(v.shape) for k, v in km.state_.items()} }")
+        _, stats = serve_stream(km, requests=args.requests,
+                                max_batch=args.max_batch, plan=args.plan)
+        print(f"[serve] {stats}")
+        return
+
+    registry = build_registry(ckpts, max_batch=args.max_batch,
+                              plan=args.plan, warmup=not args.no_warmup)
+    _, stats = serve_concurrent(
+        registry, clients=args.clients, requests=args.requests,
+        max_batch=args.max_batch,
+        engine_config=EngineConfig(max_batch=args.max_batch,
+                                   max_queue=args.max_queue,
+                                   timeout_s=args.timeout))
     print(f"[serve] {stats}")
 
 

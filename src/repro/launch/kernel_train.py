@@ -31,20 +31,18 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.api import (KernelMachine, MachineConfig, StreamConfig,
-                       available_plans, available_solvers, get_solver)
+                       get_solver)
 from repro.core import KernelSpec, TronConfig, select_basis
 from repro.core.compat import make_mesh
 from repro.data import PAPER_DATASETS, make_dataset, make_multiclass
 from repro.data.chunks import MmapChunkSource, save_chunks
+from repro.launch.cli import plan_choices, registry_epilog, solver_choices
 
 
 def main():
     ap = argparse.ArgumentParser(
         description=__doc__.splitlines()[0],
-        epilog=(f"registered solvers: {', '.join(available_solvers())} | "
-                f"registered plans: {', '.join(available_plans())} "
-                f"(see repro.api.registry; docs/paper_map.md maps each to "
-                f"the paper)"))
+        epilog=registry_epilog())
     ap.add_argument("--dataset", default="covtype", choices=list(PAPER_DATASETS))
     ap.add_argument("--scale", type=float, default=0.01)
     ap.add_argument("--m", type=int, default=512)
@@ -52,9 +50,9 @@ def main():
                     dest="strategy", choices=["auto", "random", "kmeans"])
     ap.add_argument("--mesh", default=None,
                     help="comma mesh shape, e.g. 4,2 -> (data, model)")
-    ap.add_argument("--solver", default="tron", choices=available_solvers(),
+    ap.add_argument("--solver", default="tron", choices=solver_choices(),
                     help="optimization strategy (live registry: %(choices)s)")
-    ap.add_argument("--plan", default="shard_map", choices=available_plans(),
+    ap.add_argument("--plan", default="shard_map", choices=plan_choices(),
                     help="execution plan (live registry: %(choices)s)")
     ap.add_argument("--max-iter", type=int, default=200)
     ap.add_argument("--lam", type=float, default=None)

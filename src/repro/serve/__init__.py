@@ -1,0 +1,35 @@
+"""repro.serve — production serving over the plan registry's decide arms.
+
+The paper stops at training (AllReduce on Hadoop); this package is the
+deployment half the ROADMAP's "millions of users" north star asks for.
+Prediction under every plan is collective-free batched kmvp work, so
+serving reduces to batch formation: :class:`ServeEngine` continuously
+coalesces concurrent clients' rows into the bucketed jit executables
+(:class:`~repro.api.infer.BucketedDecider`), a :class:`ModelRegistry`
+routes across side-by-side checkpoints, and admission control (bounded
+queue, in-flight cap, per-request deadlines) turns overload into clean
+:class:`Rejected` errors instead of collapse. ``repro.serve.loadgen``
+is the SLO harness that proves the coalescing wins
+(``benchmarks/serve_slo.py`` -> ``BENCH_serve.json``).
+"""
+from repro.api.infer import BucketedDecider, bucket_rows, scatter_rows
+from repro.serve.batching import (EngineStopped, QueueFull, Rejected,
+                                  Request, RequestQueue, RequestTimeout,
+                                  ServeFuture)
+from repro.serve.engine import EngineConfig, ServeEngine
+from repro.serve.loadgen import (LoadReport, LoadRequest, baseline_target,
+                                 engine_target, make_workload, run_load)
+from repro.serve.metrics import ServeMetrics, percentiles
+from repro.serve.registry import (ModelRegistry, ServedModel, model_dim,
+                                  serving_plan)
+
+__all__ = [
+    "BucketedDecider", "bucket_rows", "scatter_rows",
+    "ServeEngine", "EngineConfig",
+    "ModelRegistry", "ServedModel", "model_dim", "serving_plan",
+    "ServeFuture", "Request", "RequestQueue",
+    "Rejected", "QueueFull", "RequestTimeout", "EngineStopped",
+    "ServeMetrics", "percentiles",
+    "LoadRequest", "LoadReport", "make_workload", "run_load",
+    "baseline_target", "engine_target",
+]

@@ -1,0 +1,224 @@
+"""Asynchronous continuous-batching serve engine over the decide arms.
+
+The paper's deployment punchline — prediction is row-partitioned, needs no
+AllReduce, and is one kmvp — means serving is pure batched matrix work,
+and the only thing standing between a single-caller endpoint and
+production throughput is *batch formation*. This engine does exactly
+that: many client threads ``submit`` rows concurrently, a single batcher
+thread continuously drains the admission queue, coalesces queued requests
+for the same model into one block, runs ONE bucketed jit dispatch
+(:class:`~repro.api.infer.BucketedDecider` pads to the power-of-two
+bucket), and scatters the margin rows back to each caller's future
+(:func:`~repro.api.infer.scatter_rows`). Continuous means no waiting for
+full batches: whatever is queued when the dispatcher frees up forms the
+next batch, so latency stays request-bounded at low load and occupancy
+climbs with pressure.
+
+Correctness contract: per-row margins are batch-composition independent
+(each row reduces over m alone), so a request's rows served inside any
+coalesced block are bitwise-identical to the same rows served alone
+through the same jitted decide family — asserted, not assumed, by
+``tests/test_serve_engine.py``. No cross-request leakage is possible by
+construction: scatter slices are disjoint row ranges of one output block.
+
+Admission control: a bounded waiting queue and an in-flight cap reject at
+``submit`` with :class:`~repro.serve.batching.QueueFull`; per-request
+deadlines reject queued-too-long work with
+:class:`~repro.serve.batching.RequestTimeout` before it wastes a dispatch.
+Rejections are clean — the batcher never wedges, and ``stop()`` fails
+stragglers with :class:`~repro.serve.batching.EngineStopped`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.api.infer import scatter_rows
+from repro.serve.batching import (EngineStopped, QueueFull, Request,
+                                  RequestQueue, RequestTimeout, ServeFuture)
+from repro.serve.metrics import ServeMetrics
+from repro.serve.registry import ModelRegistry
+
+_UNSET = object()
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """SLO knobs for :class:`ServeEngine`.
+
+    ``max_batch`` caps rows per dispatch (the top bucket). ``max_queue``
+    bounds *waiting* requests; ``max_inflight`` bounds admitted-but-
+    uncompleted requests (waiting + being dispatched) — both reject at
+    submit. ``timeout_s`` is the default per-request deadline (None =
+    wait forever); ``poll_s`` is the batcher's idle wait between queue
+    checks (latency floor when the queue is empty is one notify, not one
+    poll — the queue wakes the batcher on push)."""
+    max_batch: int = 256
+    max_queue: int = 1024
+    max_inflight: int = 4096
+    timeout_s: Optional[float] = None
+    poll_s: float = 0.05
+
+
+class ServeEngine:
+    """Continuous batcher over a :class:`~repro.serve.registry.ModelRegistry`.
+
+    Use as a context manager (``with ServeEngine(reg) as eng:``) or call
+    :meth:`start`/:meth:`stop`. ``submit`` returns a
+    :class:`~repro.serve.batching.ServeFuture`; ``__call__`` is the
+    blocking convenience. Construct with ``autostart=False`` to submit
+    before any dispatching happens (tests use this to force saturation
+    and timeouts deterministically).
+    """
+
+    def __init__(self, registry: ModelRegistry,
+                 config: EngineConfig = EngineConfig(), *,
+                 autostart: bool = True):
+        self.registry = registry
+        self.config = config
+        self.metrics = ServeMetrics()
+        self._queue = RequestQueue(config.max_queue)
+        self._inflight = 0
+        self._inflight_lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        if autostart:
+            self.start()
+
+    # ---------------------------------------------------------- lifecycle
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def start(self) -> "ServeEngine":
+        if self.running:
+            return self
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._batch_loop,
+                                        name="serve-batcher", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, timeout: float = 10.0) -> None:
+        """Stop the batcher and fail every still-pending request with
+        :class:`EngineStopped` (clean shutdown, never a hang)."""
+        self._stop.set()
+        self._queue.notify()
+        if self._thread is not None:
+            self._thread.join(timeout)
+            self._thread = None
+        for req in self._queue.drain():
+            self._finish(req, exc=EngineStopped("serve engine stopped"),
+                         counter="cancelled")
+
+    def __enter__(self) -> "ServeEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ---------------------------------------------------------- admission
+    def submit(self, X, *, model: Optional[str] = None,
+               timeout: object = _UNSET) -> ServeFuture:
+        """Admit one request (rows for one model); returns its future.
+
+        Raises :class:`QueueFull` when the waiting queue or in-flight cap
+        is at capacity — the caller's clean backpressure signal. ``timeout``
+        overrides ``EngineConfig.timeout_s`` for this request (None = no
+        deadline)."""
+        entry = self.registry.get(model)
+        X = np.asarray(X, dtype=np.float32)
+        if X.ndim != 2 or X.shape[1] != entry.d:
+            raise ValueError(f"model {entry.name!r} serves (rows, {entry.d}) "
+                             f"requests, got {X.shape}")
+        self.metrics.add(submitted=1)
+        future = ServeFuture()
+        if X.shape[0] == 0:              # nothing to dispatch: empty margins
+            shape = (0, entry.n_classes) if entry.n_classes else (0,)
+            future.set_result(np.zeros(shape, np.float32))
+            self.metrics.add(completed=1)
+            return future
+        timeout_s = self.config.timeout_s if timeout is _UNSET else timeout
+        now = time.monotonic()
+        req = Request(model=entry.name, X=X, future=future,
+                      deadline=None if timeout_s is None else now + timeout_s,
+                      submitted_at=now)
+        with self._inflight_lock:
+            if self._inflight >= self.config.max_inflight:
+                self.metrics.add(rejected_full=1)
+                raise QueueFull(
+                    f"engine at max_inflight={self.config.max_inflight}")
+            self._inflight += 1
+        try:
+            self._queue.push(req)
+        except QueueFull:
+            with self._inflight_lock:
+                self._inflight -= 1
+            self.metrics.add(rejected_full=1)
+            raise
+        return future
+
+    def __call__(self, X, *, model: Optional[str] = None,
+                 timeout: object = _UNSET) -> np.ndarray:
+        """Blocking convenience: submit and wait for this caller's margins."""
+        return self.submit(X, model=model, timeout=timeout).result()
+
+    @property
+    def inflight(self) -> int:
+        with self._inflight_lock:
+            return self._inflight
+
+    # ----------------------------------------------------------- batching
+    def _finish(self, req: Request, *, result: Optional[np.ndarray] = None,
+                exc: Optional[BaseException] = None,
+                counter: str = "completed") -> None:
+        with self._inflight_lock:
+            self._inflight -= 1
+        self.metrics.add(**{counter: 1})
+        if exc is not None:
+            req.future.set_exception(exc)
+        else:
+            req.future.set_result(result)
+
+    def _batch_loop(self) -> None:
+        cfg = self.config
+        while not self._stop.is_set():
+            batch = self._queue.next_batch(cfg.max_batch, cfg.poll_s)
+            if batch is None:
+                continue
+            model, live, expired = batch
+            for req in expired:
+                self._finish(req, exc=_timeout_error(req),
+                             counter="rejected_timeout")
+            if live:
+                self._dispatch(model, live)
+
+    def _dispatch(self, model: str, reqs: Sequence[Request]) -> None:
+        entry = self.registry.get(model)
+        sizes = [r.n for r in reqs]
+        rows = sum(sizes)
+        block = reqs[0].X if len(reqs) == 1 \
+            else np.concatenate([r.X for r in reqs], axis=0)
+        try:
+            margins = np.asarray(entry.decider(block))
+        except Exception as exc:         # fail the batch, keep serving
+            for req in reqs:
+                self._finish(req, exc=exc, counter="failed")
+            return
+        self.metrics.add(dispatches=1, dispatched_rows=rows,
+                         padded_rows=entry.decider.padded_rows(rows),
+                         coalesced_requests=len(reqs))
+        for req, part in zip(reqs, scatter_rows(margins, sizes)):
+            # copy: the caller's slice must not pin the whole block alive
+            self._finish(req, result=np.array(part, copy=True))
+
+
+def _timeout_error(req: Request) -> RequestTimeout:
+    waited = time.monotonic() - req.submitted_at
+    return RequestTimeout(
+        f"request for model {req.model!r} ({req.n} rows) expired after "
+        f"{waited * 1e3:.0f} ms in queue")

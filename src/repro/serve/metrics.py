@@ -1,0 +1,84 @@
+"""Serving metrics: thread-safe counters + the one percentile helper.
+
+Every latency summary in the repo — ``kernel_serve``'s single-client
+``serve_stream`` report, the :mod:`repro.serve.engine` selftest, and the
+``benchmarks/serve_slo.py`` load harness — computes tail percentiles
+through :func:`percentiles`, so the numbers can never disagree on
+interpolation or unit conventions. Counters live in one lock-guarded
+:class:`ServeMetrics` the engine mutates from its batcher thread and
+readers snapshot atomically.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Iterable, Sequence
+
+import numpy as np
+
+
+def percentiles(samples_s: Sequence[float],
+                pcts: Iterable[int] = (50, 95, 99)) -> Dict[str, float]:
+    """Latency percentiles in milliseconds from samples in seconds.
+
+    Returns ``{"p50_ms": ..., "p95_ms": ..., "p99_ms": ...}`` (keys follow
+    ``pcts``). Empty input yields zeros rather than NaN so a fully-rejected
+    load phase still produces a well-formed report row.
+    """
+    if not len(samples_s):
+        return {f"p{p}_ms": 0.0 for p in pcts}
+    lat_ms = np.asarray(samples_s, dtype=np.float64) * 1e3
+    return {f"p{p}_ms": float(np.percentile(lat_ms, p)) for p in pcts}
+
+
+class ServeMetrics:
+    """Monotonic serving counters (admission, batching, completion).
+
+    ``occupancy()`` is the continuous-batching figure of merit: real rows
+    dispatched / padded bucket rows dispatched — 1.0 means every bucket was
+    exactly full, low values mean padding dominated. ``coalesced_requests /
+    dispatches`` is how many callers each executable launch served.
+    """
+
+    _FIELDS = ("submitted", "completed", "rejected_full", "rejected_timeout",
+               "failed", "cancelled", "dispatches", "dispatched_rows",
+               "padded_rows", "coalesced_requests")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        for f in self._FIELDS:
+            setattr(self, f, 0)
+
+    def add(self, **deltas: int) -> None:
+        with self._lock:
+            for name, dv in deltas.items():
+                if name not in self._FIELDS:
+                    raise AttributeError(f"unknown metric {name!r}")
+                setattr(self, name, getattr(self, name) + dv)
+
+    def occupancy(self) -> float:
+        with self._lock:
+            return self.dispatched_rows / self.padded_rows \
+                if self.padded_rows else 0.0
+
+    def requests_per_dispatch(self) -> float:
+        with self._lock:
+            return self.coalesced_requests / self.dispatches \
+                if self.dispatches else 0.0
+
+    def rejection_rate(self) -> float:
+        with self._lock:
+            rej = self.rejected_full + self.rejected_timeout
+            return rej / self.submitted if self.submitted else 0.0
+
+    def snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            snap = {f: getattr(self, f) for f in self._FIELDS}
+        snap["occupancy"] = (snap["dispatched_rows"] / snap["padded_rows"]
+                            if snap["padded_rows"] else 0.0)
+        snap["requests_per_dispatch"] = (
+            snap["coalesced_requests"] / snap["dispatches"]
+            if snap["dispatches"] else 0.0)
+        rej = snap["rejected_full"] + snap["rejected_timeout"]
+        snap["rejection_rate"] = (rej / snap["submitted"]
+                                  if snap["submitted"] else 0.0)
+        return snap

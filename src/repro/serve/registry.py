@@ -1,0 +1,108 @@
+"""Model registry: several KernelMachine checkpoints served side by side.
+
+Each registered model owns its plan-resolved decide arm and its own
+:class:`~repro.api.infer.BucketedDecider` executable cache, so machines
+with different solvers, plans, feature dimensions, or class counts never
+share (or thrash) compiled buckets. The engine routes each request to its
+model's decider; ``warmup()`` precompiles every bucket of every model so
+first-request latency is compile-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.api.infer import BucketedDecider
+from repro.api.machine import KernelMachine
+
+
+def serving_plan(km: KernelMachine, plan: Optional[str]) -> str:
+    """Resolve which decide arm serves request batches for ``km``. The
+    stream arm is host-driven chunk I/O — wrong shape for latency serving —
+    so stream machines flip to the dense local arm unless overridden."""
+    plan = plan or km.config.plan
+    if plan == "stream":
+        plan = "local"
+    return plan
+
+
+def model_dim(km: KernelMachine) -> int:
+    """Feature dimension d a machine's requests must carry: basis rows are
+    (m, d) for Nyström solvers, omega is (d, D) for rff."""
+    if "basis" in km.state_:
+        return int(km.state_["basis"].shape[1])
+    return int(km.state_["omega"].shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class ServedModel:
+    """One registry entry: the machine, its resolved plan, expected request
+    feature dimension, margin class count (0 = binary (n,) margins), and
+    the bucketed executable cache all its traffic runs through."""
+    name: str
+    km: KernelMachine
+    plan: str
+    d: int
+    n_classes: int
+    decider: BucketedDecider
+
+
+class ModelRegistry:
+    """Name -> :class:`ServedModel` routing table for the serve engine."""
+
+    def __init__(self, max_batch: int = 256):
+        self.max_batch = int(max_batch)
+        self._models: Dict[str, ServedModel] = {}
+        self._default: Optional[str] = None
+
+    def add(self, name: str, km: KernelMachine, *,
+            plan: Optional[str] = None, max_batch: Optional[int] = None,
+            backend: Optional[str] = None) -> ServedModel:
+        """Register a fitted machine under ``name``. The first registration
+        becomes the default route for requests that name no model."""
+        if name in self._models:
+            raise ValueError(f"model {name!r} already registered")
+        if km.state_ is None:
+            raise ValueError(f"model {name!r}: machine is not fitted")
+        resolved = serving_plan(km, plan)
+        beta = km.state_["beta"]
+        entry = ServedModel(
+            name=name, km=km, plan=resolved, d=model_dim(km),
+            n_classes=int(beta.shape[1]) if beta.ndim == 2 else 0,
+            decider=BucketedDecider(
+                km.decider(plan=resolved, backend=backend),
+                max_batch=self.max_batch if max_batch is None else max_batch))
+        self._models[name] = entry
+        if self._default is None:
+            self._default = name
+        return entry
+
+    def load(self, name: str, path: str, **kwargs) -> ServedModel:
+        """Register a checkpoint written by :meth:`KernelMachine.save`."""
+        return self.add(name, KernelMachine.load(path), **kwargs)
+
+    def get(self, name: Optional[str] = None) -> ServedModel:
+        if name is None:
+            if self._default is None:
+                raise KeyError("registry is empty")
+            name = self._default
+        if name not in self._models:
+            raise KeyError(f"unknown model {name!r}; registered: "
+                           f"{self.names()}")
+        return self._models[name]
+
+    def names(self) -> List[str]:
+        return sorted(self._models)
+
+    def __len__(self) -> int:
+        return len(self._models)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._models
+
+    def warmup(self) -> Dict[str, int]:
+        """Precompile every bucket of every registered model; returns
+        model -> executable count. Called by ``kernel_serve`` before it
+        accepts traffic (``--no-warmup`` opts out)."""
+        return {name: entry.decider.warmup(entry.d)
+                for name, entry in sorted(self._models.items())}

@@ -1,0 +1,262 @@
+"""Concurrent serving correctness: the repro.serve engine under real
+thread interleaving.
+
+The engine's whole claim is that coalescing many callers' rows into one
+bucketed dispatch changes *when* margins are computed but never *what*
+they are. These tests prove it the hard way: client threads fire
+interleaved mixed-size, mixed-K requests and every response must be
+BITWISE the synchronous bucketed-decider result for that caller's rows
+(per-row margins are batch-composition independent — the bucket floor in
+``repro.api.infer.MIN_BUCKET`` exists exactly to keep that true), and
+within 1e-6 of the eager ``decision_function`` path. Liveness is proven
+too: queue saturation and expired deadlines reject cleanly and the
+batcher keeps serving afterwards — no deadlock, no wedged queue.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import KernelMachine, MachineConfig
+from repro.api.infer import BucketedDecider, bucket_rows, scatter_rows
+from repro.core import KernelSpec, TronConfig, random_basis
+from repro.data import make_classification, make_multiclass
+from repro.serve import (EngineConfig, EngineStopped, ModelRegistry,
+                         QueueFull, RequestTimeout, ServeEngine,
+                         ServeMetrics, baseline_target, engine_target,
+                         make_workload, percentiles, run_load)
+
+N, D, M = 256, 8, 16
+CFG = MachineConfig(kernel=KernelSpec("gaussian", sigma=2.0), lam=1.0,
+                    tron=TronConfig(max_iter=40))
+
+
+@pytest.fixture(scope="module")
+def km():
+    X, y = make_classification(jax.random.PRNGKey(0), N, D,
+                               clusters_per_class=4)
+    return KernelMachine(CFG).fit(X, y, random_basis(jax.random.PRNGKey(1),
+                                                     X, M))
+
+
+@pytest.fixture(scope="module")
+def km_mc():
+    X, y = make_multiclass(jax.random.PRNGKey(0), N, D, 3,
+                           clusters_per_class=2)
+    return KernelMachine(CFG).fit(X, y, random_basis(jax.random.PRNGKey(1),
+                                                     X, M))
+
+
+@pytest.fixture(scope="module")
+def registry(km, km_mc):
+    reg = ModelRegistry(max_batch=32)
+    reg.add("bin", km)
+    reg.add("mc3", km_mc)
+    reg.warmup()
+    return reg
+
+
+# ----------------------------------------------------------------- pieces
+def test_scatter_rows_inverts_concat():
+    rng = np.random.default_rng(0)
+    parts = [rng.standard_normal((n, 3)) for n in (1, 4, 2, 7)]
+    out = scatter_rows(np.concatenate(parts), [p.shape[0] for p in parts])
+    assert len(out) == len(parts)
+    for got, want in zip(out, parts):
+        np.testing.assert_array_equal(got, want)
+    assert scatter_rows(np.zeros((0, 2)), []) == []
+
+
+def test_bucket_floor_is_multirow():
+    # the determinism contract: no (1, d) dispatch shape ever exists
+    assert bucket_rows(1, 256) == 2
+    assert BucketedDecider(lambda x: x, max_batch=8).padded_rows(1) == 2
+
+
+def test_warmup_precompiles_every_bucket(km):
+    dec = BucketedDecider(km.decider(), max_batch=32)
+    assert dec.n_executables == 0
+    n = dec.warmup(D)
+    assert n == dec.n_executables == 5          # {2, 4, 8, 16, 32}
+    # traffic of every size adds no executables after warmup
+    for s in range(1, 33):
+        dec(np.zeros((s, D), np.float32))
+    assert dec.n_executables == 5
+
+
+def test_registry_warmup_and_routing(registry):
+    counts = registry.warmup()
+    assert set(counts) == {"bin", "mc3"}
+    assert registry.get("bin").n_classes == 0
+    assert registry.get("mc3").n_classes == 3
+    assert registry.get().name == "bin"          # first added is default
+    with pytest.raises(KeyError, match="unknown model"):
+        registry.get("nope")
+
+
+# ---------------------------------------------- concurrent correctness
+def test_concurrent_mixed_requests_bitwise(registry, km, km_mc):
+    """4 client threads, interleaved mixed-size and mixed-K requests:
+    every response bitwise-matches the synchronous bucketed result for
+    that caller's rows and is within 1e-6 of eager decision_function —
+    zero cross-request row leakage."""
+    machines = {"bin": km, "mc3": km_mc}
+    clients, per_client = 4, 40
+    streams = make_workload(registry, clients=clients,
+                            requests_per_client=per_client, max_rows=32,
+                            seed=7)
+    errors = []
+    with ServeEngine(registry, EngineConfig(max_batch=32,
+                                            timeout_s=60.0)) as engine:
+        def client(stream, ci):
+            try:
+                for ri, req in enumerate(stream):
+                    got = engine(req.X, model=req.model)
+                    assert got.shape == req.reference.shape
+                    np.testing.assert_array_equal(
+                        got, req.reference,
+                        err_msg=f"client {ci} request {ri} "
+                                f"({req.model}, {req.X.shape})")
+                    eager = np.asarray(
+                        machines[req.model].decision_function(req.X))
+                    np.testing.assert_allclose(got, eager, atol=1e-6)
+            except Exception as exc:            # surface in the main thread
+                errors.append(exc)
+
+        threads = [threading.Thread(target=client, args=(s, i))
+                   for i, s in enumerate(streams)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        snap = engine.metrics.snapshot()
+    if errors:
+        raise errors[0]
+    assert snap["completed"] == clients * per_client
+    assert snap["rejected_full"] == snap["rejected_timeout"] == 0
+    assert 0.0 < snap["occupancy"] <= 1.0
+
+
+def test_engine_vs_baseline_same_margins(registry):
+    """The load harness's two targets agree exactly on every response."""
+    streams = make_workload(registry, clients=2, requests_per_client=15,
+                            max_rows=32, seed=3)
+    base = run_load(baseline_target(registry), streams, label="baseline")
+    with ServeEngine(registry, EngineConfig(max_batch=32,
+                                            timeout_s=60.0)) as engine:
+        eng = run_load(engine_target(engine), streams, label="engine")
+    assert base.mismatches == 0 and eng.mismatches == 0
+    assert base.completed == eng.completed == 30
+    assert set(eng.latency_ms) == {"p50_ms", "p95_ms", "p99_ms"}
+
+
+def test_multiclass_never_coalesces_with_binary(registry):
+    """Per-model grouping: a (n,) and an (n, 3) machine served from one
+    engine return correct shapes even when submitted back to back."""
+    with ServeEngine(registry, EngineConfig(max_batch=32)) as engine:
+        futs = []
+        for i in range(10):
+            X = np.random.default_rng(i).standard_normal((3, D)) \
+                  .astype(np.float32)
+            futs.append((engine.submit(X, model="bin"),
+                         engine.submit(X, model="mc3")))
+        for fb, fm in futs:
+            assert fb.result(30).shape == (3,)
+            assert fm.result(30).shape == (3, 3)
+
+
+# ------------------------------------------------- admission / liveness
+def test_queue_saturation_rejects_cleanly(registry):
+    """Submissions beyond the bounded queue raise QueueFull without
+    wedging the batcher: once started, the admitted backlog completes and
+    the engine keeps serving fresh traffic."""
+    engine = ServeEngine(registry,
+                         EngineConfig(max_batch=32, max_queue=4),
+                         autostart=False)
+    X = np.zeros((2, D), np.float32)
+    admitted = [engine.submit(X) for _ in range(4)]
+    with pytest.raises(QueueFull):
+        engine.submit(X)
+    assert engine.metrics.snapshot()["rejected_full"] == 1
+    engine.start()
+    for fut in admitted:
+        assert fut.result(30).shape == (2,)
+    # the engine is not wedged: a post-saturation request still serves
+    assert engine(X).shape == (2,)
+    engine.stop()
+
+
+def test_inflight_cap_rejects(registry):
+    engine = ServeEngine(registry,
+                         EngineConfig(max_batch=32, max_queue=100,
+                                      max_inflight=2),
+                         autostart=False)
+    X = np.zeros((1, D), np.float32)
+    engine.submit(X), engine.submit(X)
+    with pytest.raises(QueueFull, match="max_inflight"):
+        engine.submit(X)
+    engine.start()
+    time.sleep(0.1)
+    assert engine.inflight == 0                  # drained after start
+    engine.stop()
+
+
+def test_timeout_rejects_cleanly_without_wedging(registry):
+    """Requests whose deadline lapses while queued fail with
+    RequestTimeout; the batcher survives and serves what follows."""
+    engine = ServeEngine(registry, EngineConfig(max_batch=32),
+                         autostart=False)
+    X = np.zeros((2, D), np.float32)
+    doomed = [engine.submit(X, timeout=0.02) for _ in range(3)]
+    alive = engine.submit(X, timeout=60.0)
+    time.sleep(0.1)                              # deadlines lapse unqueued
+    engine.start()
+    for fut in doomed:
+        with pytest.raises(RequestTimeout):
+            fut.result(30)
+    assert alive.result(30).shape == (2,)
+    snap = engine.metrics.snapshot()
+    assert snap["rejected_timeout"] == 3
+    assert snap["completed"] == 1
+    # liveness after the rejections
+    assert engine(X).shape == (2,)
+    engine.stop()
+
+
+def test_stop_fails_pending_requests(registry):
+    engine = ServeEngine(registry, EngineConfig(max_batch=32),
+                         autostart=False)
+    fut = engine.submit(np.zeros((2, D), np.float32))
+    engine.stop()
+    with pytest.raises(EngineStopped):
+        fut.result(5)
+    assert engine.metrics.snapshot()["cancelled"] == 1
+
+
+def test_submit_validates_shape(registry):
+    with ServeEngine(registry, EngineConfig(max_batch=32)) as engine:
+        with pytest.raises(ValueError, match="serves"):
+            engine.submit(np.zeros((2, D + 1), np.float32))
+        # zero-row requests complete immediately with empty margins
+        assert engine.submit(np.zeros((0, D), np.float32)).result(5) \
+            .shape == (0,)
+        assert engine.submit(np.zeros((0, D), np.float32),
+                             model="mc3").result(5).shape == (0, 3)
+
+
+# ------------------------------------------------------------- metrics
+def test_metrics_occupancy_and_percentiles():
+    m = ServeMetrics()
+    m.add(dispatches=2, dispatched_rows=48, padded_rows=64,
+          coalesced_requests=6, submitted=8, rejected_full=2)
+    assert m.occupancy() == 48 / 64
+    assert m.requests_per_dispatch() == 3.0
+    assert m.rejection_rate() == 0.25
+    with pytest.raises(AttributeError):
+        m.add(not_a_counter=1)
+    p = percentiles([0.001] * 99 + [0.1])
+    assert p["p50_ms"] == pytest.approx(1.0)
+    assert p["p99_ms"] > 1.0
+    assert percentiles([]) == {"p50_ms": 0.0, "p95_ms": 0.0, "p99_ms": 0.0}
