@@ -1,0 +1,229 @@
+"""In-training checkpoint overhead: step time with commits off / async / sync.
+
+A preemption-safe run is only worth having if the insurance is cheap.
+This measures the steady-state step time of the SAME tron solve three
+ways (``--repeat`` interleaved passes, median reported, so machine drift
+hits every mode equally):
+
+  off     plain driver, no snapshots (the baseline trajectory)
+  async   segmented driver + background writer (the ``--ckpt-interval``
+          default): commits overlap the next training segment, so the
+          training thread pays only the snapshot device->host pull
+  sync    segmented driver committing on the training thread
+          (``--ckpt-sync``): the upper bound, every fsync is on the
+          critical path
+
+Per-step time is STEADY-STATE, with compile excluded on both sides:
+
+  * off — the plain driver behind a stable ``jax.jit`` wrapper, compiled
+    once, then timed warm at two iteration caps; the time difference over
+    the iteration-count difference is the pure step cost for the window
+    ``[interval, N)``.
+  * async / sync — ONE fit through the segmented driver with the real
+    :class:`TrainingCheckpointer` committing every ``--interval`` outer
+    iterations. The snapshot callbacks themselves timestamp each segment
+    boundary; the slope of (iteration, time) across boundaries after the
+    first is the steady per-step cost — segment compile happens before
+    the first boundary and never enters the window, and every commit
+    (enqueue for async, write+fsync for sync) inside the window is
+    charged.
+
+Both windows cover the same iterations, so per-iteration CG-count drift
+cancels. Reported per mode: step seconds, overhead vs off in percent,
+and the writer's own accounting (bytes, write seconds, drops). The
+boundary cost is dominated by one canonicalizing f/g re-derivation per
+interval (the price of bitwise resume) and is independent of where the
+commit happens, so the overhead FRACTION falls as n grows while the
+step itself scales with n x m. The acceptance bar this benchmark exists
+to enforce: async overhead under 5% at the default interval at the
+largest default size (32768) — smaller problems amortize less and
+should lengthen ``--ckpt-interval`` to taste.
+
+Emits the repo-root ``BENCH_ckpt.json`` perf-trajectory record (append
+semantics: one entry per run, so regressions are visible across PRs).
+
+Run:  PYTHONPATH=src python -m benchmarks.ckpt_overhead [--smoke]
+"""
+import argparse
+import os
+
+parser = argparse.ArgumentParser()
+parser.add_argument("--ns", type=int, nargs="*",
+                    default=[4096, 16384, 32768])
+parser.add_argument("--d", type=int, default=32)
+parser.add_argument("--m", type=int, default=256)
+parser.add_argument("--max-iter", type=int, default=60,
+                    help="outer-iteration cap (stagnation may stop earlier; "
+                         "the measured window adapts)")
+parser.add_argument("--interval", type=int, default=10,
+                    help="outer iterations between commits")
+parser.add_argument("--repeat", type=int, default=5,
+                    help="timed passes per point, interleaved across modes "
+                         "so machine drift hits all of them equally; the "
+                         "median is reported")
+parser.add_argument("--smoke", action="store_true",
+                    help="single small size, short fit (CI-sized)")
+parser.add_argument("--out", default=None,
+                    help="output JSON path (default: <repo>/BENCH_ckpt.json)")
+args = parser.parse_args()
+if args.smoke:
+    args.ns, args.m, args.repeat = [2048], 64, 2
+    args.max_iter, args.interval = 16, 4
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+import numpy as np
+
+from repro.checkpoint import CheckpointConfig, TrainingCheckpointer
+from repro.core import KernelSpec, TronConfig, select_basis
+from repro.core.formulation import Formulation4
+from repro.core.losses import get_loss
+from repro.core.nystrom import build_C, build_W
+from repro.core.tron import tron
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+MODES = ("off", "async", "sync")
+
+
+KERNEL = KernelSpec("gaussian", sigma=4.0)
+LAM = 1e-3
+
+
+def _closures(X, y, basis):
+    """Materialized (C, W) closures — the plan 'local' evaluation shape."""
+    C = build_C(X, basis, KERNEL, None)
+    W = build_W(basis, KERNEL, None)
+    form = Formulation4(lam=LAM, loss=get_loss("squared_hinge"))
+    return (lambda b: form.fgrad(C, W, y, b),
+            lambda D, d: form.hessd(C, W, D, d), C.dtype)
+
+
+def _setup_off(fgrad, hessd, b0, lo, hi):
+    """Stable jitted wrappers for the plain driver at two caps (compiled
+    once, reused warm every repeat). Plain-driver trajectories share
+    their prefix across caps, so the hi-lo difference is exactly the
+    [lo, hi) iteration window."""
+    runs, iters = {}, {}
+    for cap in (lo, hi):
+        cfg = TronConfig(max_iter=cap, grad_rtol=0.0)
+        run = jax.jit(lambda cfg=cfg: tron(fgrad, hessd, b0, cfg))
+        iters[cap] = int(jax.block_until_ready(run().n_iter))   # compile
+        runs[cap] = run
+    span = iters[hi] - iters[lo]
+    if span <= 0:
+        raise SystemExit(
+            f"solve stagnated at {iters[hi]} iterations <= interval "
+            f"{lo}; lower --interval to leave a measurement window")
+    return runs, span, iters[hi]
+
+
+def _time_off(runs, span, lo, hi):
+    ts = {}
+    for cap, run in runs.items():
+        t0 = time.perf_counter()
+        jax.block_until_ready(run().beta)
+        ts[cap] = time.perf_counter() - t0
+    return (ts[hi] - ts[lo]) / span
+
+
+def _time_ckpt(fgrad, hessd, b0, mode, n_iter_cap):
+    """One segmented fit through the real commit path; returns the slope
+    of (iteration, wall time) across snapshot boundaries after the first
+    — compile lands before the first boundary, outside the window; every
+    commit inside the window (enqueue for async, write+fsync for sync)
+    is charged."""
+    with tempfile.TemporaryDirectory() as tmp:
+        ck = TrainingCheckpointer(
+            CheckpointConfig(dir=tmp, interval=args.interval, keep=2,
+                             background=mode == "async"),
+            meta={"solver": "tron", "plan": "local", "bench": True})
+        marks = []
+
+        def hook(snap, _ck=ck, _marks=marks):
+            _marks.append((int(np.asarray(snap.it)), time.perf_counter()))
+            _ck.on_snapshot(snap)
+
+        try:
+            tron(fgrad, hessd, b0, TronConfig(max_iter=n_iter_cap,
+                                              grad_rtol=0.0),
+                 snapshot_every=args.interval, on_snapshot=hook)
+        finally:
+            ck.close()
+        stats = ck.stats()
+    if len(marks) < 2:
+        raise SystemExit(
+            f"{mode}: only {len(marks)} snapshot boundaries inside "
+            f"{n_iter_cap} iterations; lower --interval")
+    (i0, t0), (i1, t1) = marks[0], marks[-1]
+    return (t1 - t0) / (i1 - i0), stats
+
+
+def bench_size(n):
+    key = jax.random.PRNGKey(0)
+    X = jax.random.normal(key, (n, args.d))
+    y = jnp.sign(jax.random.normal(jax.random.PRNGKey(1), (n,)))
+    basis = select_basis(jax.random.PRNGKey(2), X, args.m)
+    fgrad, hessd, dt = _closures(X, y, basis)
+    b0 = jnp.zeros((args.m,), dt)
+    # off window starts at the first boundary the ckpt modes measure from
+    runs, span, n_iter = _setup_off(fgrad, hessd, b0, args.interval,
+                                    args.max_iter)
+    samples = {m: [] for m in MODES}
+    stats = {}
+    for _ in range(args.repeat):          # round-robin: drift hits all modes
+        samples["off"].append(_time_off(runs, span, args.interval,
+                                        args.max_iter))
+        for mode in ("async", "sync"):
+            step, stats[mode] = _time_ckpt(fgrad, hessd, b0, mode, n_iter)
+            samples[mode].append(step)
+    med = {m: float(np.median(samples[m])) for m in MODES}
+    rows = {"off": dict(n=n, mode="off", n_iter=n_iter,
+                        step_s=round(med["off"], 6))}
+    for mode in ("async", "sync"):
+        s = stats[mode]
+        rows[mode] = dict(
+            n=n, mode=mode, n_iter=n_iter, step_s=round(med[mode], 6),
+            overhead_pct=round(
+                100.0 * (med[mode] - med["off"]) / med["off"], 2),
+            snapshots=s["snapshots_written"],
+            ckpt_bytes=s["bytes_written"],
+            write_s=round(s["write_seconds"], 5),
+            dropped=s["snapshots_dropped"])
+    return [rows[m] for m in MODES]
+
+
+def main():
+    print(f"d={args.d} m={args.m} max_iter={args.max_iter} "
+          f"interval={args.interval} backend={jax.default_backend()}")
+    print("| n | mode | step_s | overhead | snapshots | write_s |")
+    print("|---|------|--------|----------|-----------|---------|")
+    results = []
+    for n in args.ns:
+        for row in bench_size(n):
+            results.append(row)
+            ov = (f"{row['overhead_pct']:+.2f}%"
+                  if "overhead_pct" in row else "—")
+            print(f"| {n} | {row['mode']} | {row['step_s']:.5f} | {ov} "
+                  f"| {row.get('snapshots', 0)} "
+                  f"| {row.get('write_s', 0.0):.4f} |", flush=True)
+
+    from benchmarks.run import append_trajectory   # one trajectory format
+    out = Path(args.out) if args.out else REPO_ROOT / "BENCH_ckpt.json"
+    append_trajectory(out, {
+        "benchmark": "ckpt_overhead", "run_at": time.strftime(
+            "%Y-%m-%dT%H:%M:%S"), "config": {
+                "d": args.d, "m": args.m, "max_iter": args.max_iter,
+                "interval": args.interval, "repeat": args.repeat,
+                "smoke": args.smoke, "backend": jax.default_backend()},
+        "results": results})
+    print(f"appended {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,10 +11,18 @@
 #                              reduction), benchmarks/infer_scaling.py
 #                              (inference memory contracts; appends a
 #                              BENCH_infer.json trajectory point per PR),
-#                              and benchmarks/serve_slo.py (continuous
+#                              benchmarks/serve_slo.py (continuous
 #                              batching vs request-at-a-time with
 #                              occupancy/latency asserts; appends
-#                              BENCH_serve.json)
+#                              BENCH_serve.json), and
+#                              benchmarks/ckpt_overhead.py (in-training
+#                              checkpoint step overhead; appends
+#                              BENCH_ckpt.json)
+#
+# Every mode also runs the resume smoke: a real stream `kernel_train` run
+# is SIGKILLed after its first committed step file, `--resume`d to
+# completion, and the saved model is served — the preemption path the
+# checkpoint subsystem exists for, exercised through the actual CLIs.
 #
 # The fast gate is what you run in the inner loop (a couple of minutes);
 # the slow marker holds the 8-fake-device subprocess suites
@@ -83,6 +91,63 @@ grep -q "concurrent engine OK" "$serve_out" || {
     status=1
 }
 
+echo "== ckpt smoke: train -> SIGKILL -> --resume -> save -> serve =="
+ck="$tmp/ckpt_smoke"
+mkdir -p "$ck"
+python - "$ck/shards" <<'PY' || status=1
+import sys
+import numpy as np
+from repro.data.chunks import save_chunks
+rng = np.random.default_rng(7)
+X = rng.standard_normal((1024, 12)).astype(np.float32)
+w = rng.standard_normal(12)
+y = np.where(X @ w > 0, 1, -1).astype(np.int64)
+save_chunks(sys.argv[1], X, y, rows_per_shard=256)
+PY
+train_cmd=(python -m repro.launch.kernel_train --plan stream
+           --data-dir "$ck/shards" --m 32 --max-iter 40 --lam 1e-3
+           --sigma 2.0 --chunk-rows 256 --ckpt-interval 2
+           --ckpt-dir "$ck/steps" --save "$ck/model.npz")
+"${train_cmd[@]}" > "$ck/train.out" 2>&1 &
+train_pid=$!
+# kill -9 the moment the first step file commits (the atomic-rename
+# protocol means whatever is on disk at that instant must be loadable)
+for _ in $(seq 1 3000); do
+    compgen -G "$ck/steps/step-*.npz" > /dev/null && break
+    kill -0 "$train_pid" 2>/dev/null || break
+    sleep 0.1
+done
+if compgen -G "$ck/steps/step-*.npz" > /dev/null; then
+    kill -9 "$train_pid" 2>/dev/null
+    wait "$train_pid" 2>/dev/null
+else
+    wait "$train_pid" 2>/dev/null
+    echo "ckpt smoke: no step file ever committed" >&2
+    cat "$ck/train.out" >&2
+    status=1
+fi
+if [[ "$status" -eq 0 ]]; then
+    "${train_cmd[@]}" --resume "$ck/steps" 2>&1 | tee "$ck/resume.out" \
+        || status=1
+    grep -q "resuming from step" "$ck/resume.out" || {
+        echo "ckpt smoke: --resume did not restore a committed step" >&2
+        status=1
+    }
+    [[ -f "$ck/model.npz" ]] || {
+        echo "ckpt smoke: resumed run saved no model" >&2
+        status=1
+    }
+fi
+if [[ "$status" -eq 0 ]]; then
+    # the resumed model must be servable
+    python -m repro.launch.kernel_serve --ckpt "$ck/model.npz" \
+        --requests 16 --clients 2 > "$ck/serve.out" 2>&1 || {
+        echo "ckpt smoke: serving the resumed model failed" >&2
+        cat "$ck/serve.out" >&2
+        status=1
+    }
+fi
+
 if [[ "$bench_smoke" -eq 1 ]]; then
     echo "== bench smoke: multi-RHS kmvp amortization + stream chunk cache =="
     python -m benchmarks.kmvp_multirhs --smoke || status=1
@@ -90,6 +155,8 @@ if [[ "$bench_smoke" -eq 1 ]]; then
     python -m benchmarks.infer_scaling --smoke || status=1
     echo "== bench smoke: serve SLO (continuous batching vs baseline) =="
     python -m benchmarks.serve_slo --smoke || status=1
+    echo "== bench smoke: checkpoint step-time overhead =="
+    python -m benchmarks.ckpt_overhead --smoke || status=1
 fi
 
 echo "== docs smoke: README quickstart block =="

@@ -25,7 +25,8 @@ from repro.api.infer import (_is_chunked, as_inference_source,
                              iter_label_chunks, make_stream_decider)
 from repro.api.registry import get_plan, get_solver, validate
 from repro.api.result import FitResult
-from repro.checkpoint import load_arrays, save_checkpoint
+from repro.checkpoint import (check_resume_config, load_arrays, load_latest,
+                              save_checkpoint)
 from repro.core.basis import select_basis
 from repro.core.nystrom import build_C, build_W, gram
 
@@ -77,7 +78,7 @@ class KernelMachine:
     def result_(self) -> Optional[FitResult]:
         return self.history_[-1] if self.history_ else None
 
-    def fit(self, X, y, basis=None, *, beta0=None, key=None):
+    def fit(self, X, y, basis=None, *, beta0=None, key=None, checkpoint=None):
         """Train from scratch. ``basis`` defaults to ``config.basis_strategy``
         selection of ``config.m`` points (ignored by rff/ppacksvm solvers).
 
@@ -86,8 +87,30 @@ class KernelMachine:
         recomputation under the fused/stream plans. ``decision_function``
         then returns (n, K) margins and :meth:`predict` argmaxes back to
         the original labels.
+
+        ``checkpoint`` (a :class:`repro.checkpoint.CheckpointConfig`,
+        solver ``tron`` only) commits preemption-safe in-training step
+        files every ``interval`` outer iterations; with
+        ``checkpoint.resume=True`` the fit first restores the newest step
+        in ``checkpoint.dir`` — including its stored basis (and one-vs-rest
+        class order), so the restarted run optimizes the identical
+        objective — and continues from that iterate.
         """
         entry = validate(self.config.solver, self.config.plan)
+        resume = None
+        if checkpoint is not None:
+            if self.config.solver != "tron":
+                raise ValueError(
+                    f"in-training checkpoints snapshot TRON iterate state; "
+                    f"solver {self.config.solver!r} does not support "
+                    f"checkpoint= (use solver='tron')")
+            if checkpoint.resume:
+                resume = load_latest(checkpoint.dir)
+                check_resume_config(self.config, resume.meta)
+                if "basis" in resume.arrays:
+                    # the stored basis IS the objective's identity: never
+                    # re-select (a fresh random draw would change k(x, basis))
+                    basis = jnp.asarray(resume.arrays["basis"])
         if key is None:
             key = jax.random.PRNGKey(self.config.seed)
         if basis is None and entry.needs_basis:
@@ -105,8 +128,11 @@ class KernelMachine:
                                      strategy=self.config.basis_strategy,
                                      mesh=self.mesh,
                                      data_axes=self.config.data_axes)
+        hooks = {} if checkpoint is None else {"checkpoint": checkpoint,
+                                               "resume": resume}
         state, res = entry.fit(self.config, X, y, basis, beta0,
-                               mesh=self.mesh, plan=self.config.plan, key=key)
+                               mesh=self.mesh, plan=self.config.plan, key=key,
+                               **hooks)
         self.state_ = state
         self.history_ = [res]
         self._cw = self._cw_key = None

@@ -71,7 +71,7 @@ from repro.data.chunks import as_chunk_source
 @register_plan("local", decide=decide_local)
 def plan_local(config, mesh, X, y, basis, beta0,
                CW: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
-               classes=None) -> TronResult:
+               classes=None, checkpoint=None, state0=None) -> TronResult:
     del mesh, classes   # multiclass y arrives pre-expanded to (n, K) ±1
     if CW is None:
         C = build_C(X, basis, config.kernel, config.backend)
@@ -80,6 +80,16 @@ def plan_local(config, mesh, X, y, basis, beta0,
         C, W = CW
     form = Formulation4(lam=config.lam, loss=config.get_loss())
     cfg = config.tron
+
+    if checkpoint is not None or state0 is not None:
+        # tron jits its own while_loop segments and snapshots between them;
+        # an outer jit here would hide the state from the host
+        return tron(lambda b: form.fgrad(C, W, y, b),
+                    lambda D, d: form.hessd(C, W, D, d), beta0, cfg,
+                    state0=state0,
+                    snapshot_every=checkpoint.interval if checkpoint else 0,
+                    on_snapshot=checkpoint.on_snapshot if checkpoint
+                    else None)
 
     @jax.jit
     def _run(C, W, y, beta0):
@@ -114,8 +124,8 @@ def _check_divisible(config, mesh, n: int, m: int, plan: str):
 
 
 def _distributed(config, mesh, X, y, basis, beta0, *, mode: str,
-                 materialize: bool, plan: str,
-                 fused: bool = False) -> TronResult:
+                 materialize: bool, plan: str, fused: bool = False,
+                 checkpoint=None, state0=None) -> TronResult:
     mesh = _resolve_mesh(config, mesh)
     _check_divisible(config, mesh, X.shape[0], basis.shape[0], plan)
     dc = DistConfig(data_axes=config.data_axes, model_axis=config.model_axis,
@@ -124,37 +134,41 @@ def _distributed(config, mesh, X, y, basis, beta0, *, mode: str,
                     block_rows=config.otf_block_rows)
     solver = DistributedNystrom(mesh, config.lam, config.loss, config.kernel,
                                 dc)
-    return solver.solve(X, y, basis, beta0=beta0, cfg=config.tron)
+    return solver.solve(X, y, basis, beta0=beta0, cfg=config.tron,
+                        checkpoint=checkpoint, state0=state0)
 
 
 @register_plan("shard_map", decide=decide_fused)
 def plan_shard_map(config, mesh, X, y, basis, beta0, CW=None,
-                   classes=None) -> TronResult:
+                   classes=None, checkpoint=None, state0=None) -> TronResult:
     del CW, classes  # distributed plans build their own sharded (C, W);
     #                  multiclass y arrives pre-expanded to (n, K) ±1
     return _distributed(config, mesh, X, y, basis, beta0,
-                        mode="shard_map", materialize=True, plan="shard_map")
+                        mode="shard_map", materialize=True, plan="shard_map",
+                        checkpoint=checkpoint, state0=state0)
 
 
 @register_plan("auto", decide=decide_fused)
 def plan_auto(config, mesh, X, y, basis, beta0, CW=None,
-              classes=None) -> TronResult:
+              classes=None, checkpoint=None, state0=None) -> TronResult:
     del CW, classes
     return _distributed(config, mesh, X, y, basis, beta0,
-                        mode="auto", materialize=True, plan="auto")
+                        mode="auto", materialize=True, plan="auto",
+                        checkpoint=checkpoint, state0=state0)
 
 
 @register_plan("otf", decide=decide_fused)
 def plan_otf(config, mesh, X, y, basis, beta0, CW=None,
-             classes=None) -> TronResult:
+             classes=None, checkpoint=None, state0=None) -> TronResult:
     del CW, classes  # the whole point: C is never materialized
     return _distributed(config, mesh, X, y, basis, beta0,
-                        mode="shard_map", materialize=False, plan="otf")
+                        mode="shard_map", materialize=False, plan="otf",
+                        checkpoint=checkpoint, state0=state0)
 
 
 @register_plan("stream", decide=decide_stream)
 def plan_stream(config, mesh, X, y, basis, beta0, CW=None,
-                classes=None) -> TronResult:
+                classes=None, checkpoint=None, state0=None) -> TronResult:
     """Out-of-core accumulation: X may be an in-memory array (wrapped into
     an ArrayChunkSource), a ChunkSource, or a shard-directory path.
 
@@ -181,12 +195,13 @@ def plan_stream(config, mesh, X, y, basis, beta0, CW=None,
     return solver.solve_stream(source, basis, beta0=beta0, cfg=config.tron,
                                classes=classes,
                                cache_chunks=config.stream.cache_chunks,
-                               prefetch=config.stream.prefetch)
+                               prefetch=config.stream.prefetch,
+                               checkpoint=checkpoint, state0=state0)
 
 
 @register_plan("otf_shard", decide=decide_fused)
 def plan_otf_shard(config, mesh, X, y, basis, beta0, CW=None,
-                   classes=None) -> TronResult:
+                   classes=None, checkpoint=None, state0=None) -> TronResult:
     del CW, classes  # no (n/p, m) block exists to cache, let alone (C, W)
     if config.model_axis is not None:
         raise ValueError(
@@ -196,4 +211,5 @@ def plan_otf_shard(config, mesh, X, y, basis, beta0, CW=None,
             "plan 'otf' for the 2-D on-the-fly partition)")
     return _distributed(config, mesh, X, y, basis, beta0,
                         mode="shard_map", materialize=False,
-                        plan="otf_shard", fused=True)
+                        plan="otf_shard", fused=True,
+                        checkpoint=checkpoint, state0=state0)

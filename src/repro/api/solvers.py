@@ -128,7 +128,7 @@ def _spec_rff(config, state) -> DecisionSpec:
                         "stream"},
                  grows=True, needs_basis=True, decision_spec=_spec_nystrom)
 def fit_tron(config, X, y, basis, beta0=None, *, mesh=None, plan=None,
-             key=None, CW=None):
+             key=None, CW=None, checkpoint=None, resume=None):
     """Formulation (4) + trust-region Newton — the paper's solver.
 
     Integer multiclass y (see :func:`ovr_classes`) trains all K one-vs-rest
@@ -136,34 +136,75 @@ def fit_tron(config, X, y, basis, beta0=None, *, mesh=None, plan=None,
     fused/stream plans — every f/g/Hd evaluation recomputes the gram tiles
     once for all K classes instead of once per class. The fitted state
     carries ``classes`` so predict can argmax back to labels.
+
+    ``checkpoint`` (a :class:`repro.checkpoint.CheckpointConfig`) commits
+    in-training step files every ``interval`` outer iterations; ``resume``
+    (a :class:`repro.checkpoint.ResumeState`, loaded by ``KernelMachine
+    .fit``) restores the TRON iterate state so training continues exactly
+    where the checkpointed run stopped.
     """
     del key
     plan = plan or config.plan
     classes = ovr_classes(X, y)
-    if classes is None:
-        beta0 = _zeros_like_beta(X, basis.shape[0], beta0)
-        res = get_plan(plan).fit(config, mesh, X, y, basis, beta0,
-                                 CW=CW)
-        state = {"basis": basis, "beta": res.beta}
-    else:
-        from repro.data.chunks import ovr_targets
-        m, K = int(basis.shape[0]), int(classes.size)
-        if beta0 is None:
-            beta0 = jnp.zeros((m, K), X.dtype)
-        elif jnp.shape(beta0) != (m, K):
-            raise ValueError(
-                f"one-vs-rest fit over {K} classes needs beta0 of shape "
-                f"({m}, {K}); got {jnp.shape(beta0)}")
-        if plan == "stream":
-            y_fit = y    # source keeps integer labels; chunks expand on host
+    state0 = None
+    if resume is not None:
+        state0 = resume.snapshot
+        beta0 = jnp.asarray(np.asarray(state0.beta))
+        if classes is not None and "classes" in resume.arrays:
+            stored = np.asarray(resume.arrays["classes"])
+            if stored.shape != np.shape(classes) or \
+                    np.any(stored != np.asarray(classes)):
+                raise ValueError(
+                    f"checkpoint was written for one-vs-rest classes "
+                    f"{stored.tolist()} but the data poses "
+                    f"{np.asarray(classes).tolist()}; refusing to resume "
+                    f"onto mismatched beta columns")
+            classes = stored
+    ck = None
+    if checkpoint is not None:
+        from repro.checkpoint import TrainingCheckpointer
+        arrays = {"basis": np.asarray(basis)}
+        if classes is not None:
+            arrays["classes"] = np.asarray(classes)
+        ck = TrainingCheckpointer(
+            checkpoint,
+            meta={"config": config.to_dict(), "solver": "tron",
+                  "plan": plan},
+            arrays=arrays,
+            resume_meta=resume.meta if resume is not None else None)
+    hooks = {}
+    if ck is not None or state0 is not None:
+        hooks = {"checkpoint": ck, "state0": state0}
+    try:
+        if classes is None:
+            beta0 = _zeros_like_beta(X, basis.shape[0], beta0)
+            res = get_plan(plan).fit(config, mesh, X, y, basis, beta0,
+                                     CW=CW, **hooks)
+            state = {"basis": basis, "beta": res.beta}
         else:
-            y_fit = jnp.asarray(ovr_targets(y, classes, dtype=X.dtype))
-        res = get_plan(plan).fit(config, mesh, X, y_fit, basis, beta0,
-                                 CW=CW, classes=classes)
-        state = {"basis": basis, "beta": res.beta,
-                 "classes": jnp.asarray(classes)}
+            from repro.data.chunks import ovr_targets
+            m, K = int(basis.shape[0]), int(classes.size)
+            if beta0 is None:
+                beta0 = jnp.zeros((m, K), X.dtype)
+            elif jnp.shape(beta0) != (m, K):
+                raise ValueError(
+                    f"one-vs-rest fit over {K} classes needs beta0 of shape "
+                    f"({m}, {K}); got {jnp.shape(beta0)}")
+            if plan == "stream":
+                y_fit = y  # source keeps integer labels; chunks expand on
+                #            the host right before transfer
+            else:
+                y_fit = jnp.asarray(ovr_targets(y, classes, dtype=X.dtype))
+            res = get_plan(plan).fit(config, mesh, X, y_fit, basis, beta0,
+                                     CW=CW, classes=classes, **hooks)
+            state = {"basis": basis, "beta": res.beta,
+                     "classes": jnp.asarray(classes)}
+    finally:
+        if ck is not None:
+            ck.close()
+    extras = {"ckpt": ck.stats()} if ck is not None else None
     return state, FitResult.from_tron(res, solver="tron", plan=plan,
-                                      m=int(basis.shape[0]))
+                                      m=int(basis.shape[0]), extras=extras)
 
 
 @register_solver("linearized", plans={"local"}, needs_basis=True,

@@ -1,0 +1,147 @@
+"""Background checkpoint writer: snapshots off the training thread.
+
+The training loop's only job at a checkpoint interval is to hand a
+host-materialized snapshot to :meth:`AsyncCheckpointWriter.submit` — a
+dict copy plus one notify, microseconds — while a daemon thread runs the
+actual (atomic, fsync'd) file commit concurrently with the next training
+iterations. The design is double-buffered with a drop-oldest policy: at
+most one snapshot is being written and one is pending. If training
+produces snapshots faster than the disk commits them, submitting a new
+one *replaces* the pending one (the stale intermediate state nobody would
+resume from is dropped, counted in ``snapshots_dropped``) instead of
+blocking the training thread or growing an unbounded queue. The newest
+submitted snapshot is therefore always either committed or about to be.
+
+Accounting mirrors the stream feeder's ``h2d_bytes`` idiom: the writer
+totals ``bytes_written`` and ``write_seconds`` (wall time inside the
+commit calls) so callers can surface checkpoint I/O cost next to the
+transfer counters in ``FitResult`` — and benchmarks can prove the writes
+overlapped compute instead of extending the step time.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Optional
+
+
+class AsyncCheckpointWriter:
+    """Daemon-thread checkpoint writer (double-buffered, drop-oldest).
+
+    ``write_fn(step, tree, metadata) -> bytes_written`` performs one
+    commit — typically :func:`repro.checkpoint.training.write_step` — and
+    must be self-contained (atomic rename, fsync); the writer adds no
+    durability of its own. Snapshot trees must already be host numpy
+    arrays owned by the caller (device arrays would drag a d2h transfer
+    onto this thread, which is fine, but mutation by the trainer would
+    race — :class:`~repro.core.tron.TronSnapshot` arrays are fresh copies).
+
+    Errors from ``write_fn`` are recorded (``errors``, ``last_error``) and
+    the writer keeps accepting snapshots: a transient disk failure must
+    not kill an hours-long training run. ``close()`` drains the pending
+    slot (unless ``flush=False``) and joins the thread.
+    """
+
+    def __init__(self, write_fn: Callable[[int, dict, dict], int], *,
+                 name: str = "ckpt-writer"):
+        self._write_fn = write_fn
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._idle = threading.Condition(self._lock)
+        self._pending: Optional[tuple] = None   # newest (step, tree, meta)
+        self._writing = False
+        self._closed = False
+        self.snapshots_submitted = 0
+        self.snapshots_written = 0
+        self.snapshots_dropped = 0
+        self.bytes_written = 0
+        self.write_seconds = 0.0
+        self.last_step: Optional[int] = None
+        self.errors = 0
+        self.last_error: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._run, name=name,
+                                        daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------------ producer
+    def submit(self, step: int, tree: dict, metadata: dict) -> None:
+        """Hand one snapshot to the writer; never blocks on I/O.
+
+        If a snapshot is already waiting (the writer is busy with an older
+        one), the waiting snapshot is dropped — newest wins."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("AsyncCheckpointWriter is closed")
+            self.snapshots_submitted += 1
+            if self._pending is not None:
+                self.snapshots_dropped += 1
+            self._pending = (int(step), tree, metadata)
+            self._work.notify()
+
+    def flush(self, timeout: Optional[float] = None) -> bool:
+        """Block until the pending slot is empty and no write is running."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            while self._pending is not None or self._writing:
+                left = None if deadline is None \
+                    else max(0.0, deadline - time.monotonic())
+                if deadline is not None and left == 0.0:
+                    return False
+                self._idle.wait(left)
+        return True
+
+    def close(self, *, flush: bool = True,
+              timeout: Optional[float] = None) -> None:
+        if flush:
+            self.flush(timeout)
+        with self._lock:
+            if not flush:
+                if self._pending is not None:
+                    self.snapshots_dropped += 1
+                self._pending = None
+            self._closed = True
+            self._work.notify()
+        self._thread.join(timeout)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "snapshots_submitted": self.snapshots_submitted,
+                "snapshots_written": self.snapshots_written,
+                "snapshots_dropped": self.snapshots_dropped,
+                "bytes_written": self.bytes_written,
+                "write_seconds": self.write_seconds,
+                "last_step": self.last_step,
+                "errors": self.errors,
+            }
+
+    # ------------------------------------------------------------ consumer
+    def _run(self) -> None:
+        while True:
+            with self._lock:
+                while self._pending is None and not self._closed:
+                    self._work.wait()
+                if self._pending is None:       # closed and drained
+                    self._idle.notify_all()
+                    return
+                step, tree, metadata = self._pending
+                self._pending = None
+                self._writing = True
+            nbytes, err = 0, None
+            t0 = time.perf_counter()
+            try:
+                nbytes = int(self._write_fn(step, tree, metadata) or 0)
+            except BaseException as e:          # keep the run alive
+                err = e
+            dt = time.perf_counter() - t0
+            with self._lock:
+                self._writing = False
+                self.write_seconds += dt
+                if err is None:
+                    self.snapshots_written += 1
+                    self.bytes_written += nbytes
+                    self.last_step = step
+                else:
+                    self.errors += 1
+                    self.last_error = err
+                self._idle.notify_all()

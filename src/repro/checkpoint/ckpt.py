@@ -1,9 +1,12 @@
 """Minimal numpy-based pytree checkpointing (no orbax in this container).
 
 Flattens the pytree with jax.tree_util key paths, stores leaves in a single
-.npz plus a treedef manifest. Atomic via tmp-file rename. Good enough for
-the example drivers; a real deployment would swap in orbax behind the same
-two calls.
+.npz plus a treedef manifest. Commits follow the classic crash-safe
+protocol: write to a same-directory temp file, fsync the file, atomically
+``os.replace`` it over the destination, then fsync the directory so the
+rename itself is durable — a kill at any instant leaves either the
+previous complete checkpoint or the next one, never a torn file. A real
+deployment would swap in orbax behind the same two calls.
 """
 from __future__ import annotations
 
@@ -20,15 +23,49 @@ def _key_str(path) -> str:
     return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
 
 
-def save_checkpoint(path: str, tree: Any, metadata: dict | None = None):
+def _fsync_dir(dirname: str) -> None:
+    fd = os.open(dirname or ".", os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def save_checkpoint(path: str, tree: Any, metadata: dict | None = None,
+                    *, fsync: bool = True) -> int:
+    """Atomically write ``tree`` (+ JSON-able ``metadata``) to ``path``.
+
+    Returns the committed file size in bytes. ``fsync=False`` skips the
+    durability syncs (still atomic against concurrent readers via the
+    rename, but a machine crash may lose the write) — useful in tests.
+    """
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
     arrays = {_key_str(p): np.asarray(v) for p, v in leaves_with_paths}
     manifest = {"keys": list(arrays.keys()), "metadata": metadata or {}}
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
-    os.close(fd)
-    np.savez(tmp, __manifest__=json.dumps(manifest), **arrays)
-    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+    dirname = os.path.dirname(path) or "."
+    os.makedirs(dirname, exist_ok=True)
+    # suffix keeps np.savez from appending ".npz" to a second file (which
+    # used to leak the empty mkstemp file next to every checkpoint); the
+    # prefix lets step scanners ignore in-flight temp files by name
+    fd, tmp = tempfile.mkstemp(dir=dirname, prefix=".tmp-ckpt-",
+                               suffix=".npz")
+    try:
+        with os.fdopen(fd, "wb") as fh:
+            np.savez(fh, __manifest__=json.dumps(manifest), **arrays)
+            fh.flush()
+            if fsync:
+                os.fsync(fh.fileno())
+        nbytes = os.path.getsize(tmp)
+        os.replace(tmp, path)              # atomic commit
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    if fsync:
+        _fsync_dir(dirname)
+    return nbytes
 
 
 def load_arrays(path: str) -> tuple[dict, dict]:

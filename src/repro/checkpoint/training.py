@@ -1,0 +1,277 @@
+"""In-training checkpoints: versioned step files, atomic commit, resume.
+
+Layout — a ``ckpt-steps`` directory next to the final machine ``.npz``
+(:func:`steps_dir_for`), holding one file per snapshot interval::
+
+    model.npz                      # the final machine (KernelMachine.save)
+    model.npz.ckpt-steps/
+        step-00000003.npz          # TronSnapshot + basis [+ classes]
+        step-00000006.npz
+        ...
+
+Each step file is written by :func:`write_step` through the
+write-temp -> fsync -> rename commit protocol of
+:func:`repro.checkpoint.ckpt.save_checkpoint`, so a SIGKILL at any
+instant leaves the directory holding only complete checkpoints (stray
+``.tmp-ckpt-*`` files are ignored by name). This is the paper's
+fault-tolerant Map-Reduce premise made local: worker loss is the normal
+case, and what makes recovery cheap is that the entire iterate state of
+the distributed TRON solve is the O(m·K) replicated vector block every
+node already holds — beta, trust radii, convergence masks — never the
+O(n) partitioned data, which is re-read from its (immutable) shards.
+
+Elastic restore falls out of the same fact: nothing in a step file is
+sharded, so loading it under a different local device count just
+re-slices the replicated state (the stream plan re-rounds its chunk size
+to the new data-axis extent; in-memory plans re-shard C/W from X + the
+stored basis).
+
+:class:`TrainingCheckpointer` is the runtime object the fit path threads
+down to the TRON drivers: it turns each
+:class:`~repro.core.tron.TronSnapshot` callback into a step-file commit —
+through an :class:`~repro.checkpoint.async_writer.AsyncCheckpointWriter`
+by default, so commits overlap training compute — and carries the
+identity arrays (basis, classes) and metadata every step file embeds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+import time
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+
+from repro.checkpoint.async_writer import AsyncCheckpointWriter
+from repro.checkpoint.ckpt import load_arrays, save_checkpoint
+from repro.core.tron import TronSnapshot
+
+TRAIN_CKPT_FORMAT = "train-ckpt-1"
+_STEP_RE = re.compile(r"^step-(\d{8})\.npz$")
+_SNAP_KEYS = ("beta", "delta", "gnorm0", "active", "it", "n_fg", "n_hd")
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointConfig:
+    """Per-fit checkpointing knobs for ``KernelMachine.fit(checkpoint=...)``.
+
+    ``dir`` holds the versioned step files (use :func:`steps_dir_for` to
+    derive it from a final ``.npz`` path). ``interval`` is outer TRON
+    iterations between snapshots. ``keep`` bounds retained step files
+    (oldest pruned after each commit; 0 keeps all). ``background`` routes
+    commits through the async writer (drop-oldest, overlapping compute);
+    False commits synchronously on the training thread. ``resume`` makes
+    ``fit`` restore from the latest valid step in ``dir`` before training
+    (raising ``FileNotFoundError`` if there is none). ``fsync`` controls
+    the durability syncs of each commit (atomicity is kept either way).
+    """
+    dir: str
+    interval: int = 10
+    keep: int = 3
+    background: bool = True
+    resume: bool = False
+    fsync: bool = True
+
+    def __post_init__(self):
+        if self.interval < 1:
+            raise ValueError(f"checkpoint interval must be >= 1, "
+                             f"got {self.interval}")
+
+
+class ResumeState:
+    """A loaded step checkpoint: snapshot + identity arrays + metadata."""
+
+    def __init__(self, step: int, snapshot: TronSnapshot, arrays: dict,
+                 meta: dict, path: str):
+        self.step = step
+        self.snapshot = snapshot
+        self.arrays = arrays       # non-snapshot arrays: basis [, classes]
+        self.meta = meta
+        self.path = path
+
+
+def steps_dir_for(save_path: str) -> str:
+    """The ``ckpt-steps`` directory next to a final ``.npz`` path."""
+    return str(save_path) + ".ckpt-steps"
+
+
+def step_path(dir: str, step: int) -> str:
+    return os.path.join(dir, f"step-{int(step):08d}.npz")
+
+
+def list_steps(dir: str) -> List[Tuple[int, str]]:
+    """Committed (step, path) pairs, ascending. Temp files are ignored by
+    name — only fully renamed ``step-*.npz`` files count as committed."""
+    try:
+        names = os.listdir(dir)
+    except FileNotFoundError:
+        return []
+    out = []
+    for name in names:
+        mm = _STEP_RE.match(name)
+        if mm:
+            out.append((int(mm.group(1)), os.path.join(dir, name)))
+    return sorted(out)
+
+
+def write_step(dir: str, step: int, tree: dict, metadata: dict, *,
+               fsync: bool = True, keep: int = 0) -> int:
+    """Commit one step file atomically; prune to the newest ``keep``.
+
+    Returns bytes written. ``metadata`` gains ``format``/``step``/
+    ``wall_time`` stamps."""
+    os.makedirs(dir, exist_ok=True)
+    md = dict(metadata)
+    md.setdefault("format", TRAIN_CKPT_FORMAT)
+    md["step"] = int(step)
+    md["wall_time"] = time.time()
+    nbytes = save_checkpoint(step_path(dir, step), tree, metadata=md,
+                             fsync=fsync)
+    if keep > 0:
+        prune_steps(dir, keep)
+    return nbytes
+
+
+def prune_steps(dir: str, keep: int) -> int:
+    """Unlink all but the newest ``keep`` committed step files."""
+    steps = list_steps(dir)
+    removed = 0
+    for _, path in steps[:max(0, len(steps) - keep)]:
+        try:
+            os.unlink(path)
+            removed += 1
+        except OSError:
+            pass
+    return removed
+
+
+def load_step(path: str) -> ResumeState:
+    """Load one step file into a :class:`ResumeState`."""
+    arrays, meta = load_arrays(path)
+    if meta.get("format") != TRAIN_CKPT_FORMAT:
+        raise ValueError(f"{path}: not an in-training checkpoint "
+                         f"(format={meta.get('format')!r})")
+    snap = TronSnapshot.from_arrays(arrays)
+    extra = {k: v for k, v in arrays.items() if k not in _SNAP_KEYS}
+    return ResumeState(step=int(meta.get("step", snap.it)), snapshot=snap,
+                       arrays=extra, meta=meta, path=path)
+
+
+def load_latest(dir: str) -> ResumeState:
+    """The newest loadable step in ``dir``.
+
+    The commit protocol guarantees committed files are complete, so the
+    newest one loads; walking backwards over older steps is pure
+    belt-and-braces against external corruption. Raises
+    ``FileNotFoundError`` when no usable step exists."""
+    steps = list_steps(dir)
+    last_err: Optional[BaseException] = None
+    for step, path in reversed(steps):
+        try:
+            return load_step(path)
+        except Exception as e:  # torn/foreign files fail in many shapes:
+            last_err = e        # BadZipFile, OSError, ValueError, KeyError...
+    raise FileNotFoundError(
+        f"no resumable checkpoint under {dir!r}"
+        + (f" (newest failed to load: {last_err})" if last_err else ""))
+
+
+def check_resume_config(config, meta: dict) -> None:
+    """Refuse to resume under a different objective/solver.
+
+    Device count, mesh shape and chunk size may change freely (elastic
+    restore); the fields pinned here change the optimization problem or
+    its trajectory, so silently continuing would produce a model that is
+    neither the old run's nor a fresh run's."""
+    stored = meta.get("config", {})
+    pins = ("solver", "plan", "loss", "lam", "kernel", "m")
+    current = config.to_dict()
+    diffs = [f"{k}: checkpoint={stored.get(k)!r} != current={current.get(k)!r}"
+             for k in pins if k in stored and stored.get(k) != current.get(k)]
+    if diffs:
+        raise ValueError(
+            "checkpoint was written by an incompatible config; refusing to "
+            "resume (" + "; ".join(diffs) + ")")
+
+
+class TrainingCheckpointer:
+    """Runtime bridge from TRON snapshot callbacks to step-file commits.
+
+    Built per fit by the solver layer with the run's identity ``arrays``
+    (basis [, classes]) and ``meta`` (config dict, solver, plan); the plan
+    layer may :meth:`attach_feeder` the stream chunk feeder so every step
+    file also records the feeder cursor/accounting state — and so a
+    resumed fit restores the feeder's counters for continuity.
+    """
+
+    def __init__(self, cfg: CheckpointConfig, *, meta: dict,
+                 arrays: Optional[dict] = None,
+                 resume_meta: Optional[dict] = None):
+        self.cfg = cfg
+        self.meta = dict(meta)
+        self.arrays = {k: np.asarray(v) for k, v in (arrays or {}).items()}
+        self.resume_meta = resume_meta
+        self.feeder: Any = None
+        self._sync_written = 0
+        self._sync_bytes = 0
+        self._sync_seconds = 0.0
+        self._last_step: Optional[int] = None
+        self._writer: Optional[AsyncCheckpointWriter] = None
+        if cfg.background:
+            self._writer = AsyncCheckpointWriter(self._commit)
+
+    @property
+    def interval(self) -> int:
+        return self.cfg.interval
+
+    # ------------------------------------------------------------- plumbing
+    def attach_feeder(self, feeder) -> None:
+        """Record the stream feeder for per-step cursor export; on resume,
+        restore its cursor/accounting state from the checkpoint."""
+        self.feeder = feeder
+        if self.resume_meta is not None and feeder is not None:
+            state = self.resume_meta.get("feeder")
+            if state:
+                feeder.restore_state(state)
+
+    def _commit(self, step: int, tree: dict, metadata: dict) -> int:
+        return write_step(self.cfg.dir, step, tree, metadata,
+                          fsync=self.cfg.fsync, keep=self.cfg.keep)
+
+    def on_snapshot(self, snap: TronSnapshot) -> None:
+        """The TRON drivers' callback: package and commit one snapshot."""
+        tree = {**snap.to_arrays(), **self.arrays}
+        md = dict(self.meta)
+        if self.feeder is not None:
+            md["feeder"] = self.feeder.state()
+        if self._writer is not None:
+            self._writer.submit(snap.it, tree, md)
+        else:
+            t0 = time.perf_counter()
+            nbytes = self._commit(snap.it, tree, md)
+            self._sync_seconds += time.perf_counter() - t0
+            self._sync_written += 1
+            self._sync_bytes += nbytes
+        self._last_step = snap.it
+
+    def close(self) -> None:
+        if self._writer is not None:
+            self._writer.close(flush=True)
+
+    def stats(self) -> dict:
+        """Checkpoint I/O accounting for ``FitResult.extras['ckpt']``."""
+        base = {"dir": self.cfg.dir, "interval": self.cfg.interval,
+                "background": self.cfg.background,
+                "resumed_step": None if self.resume_meta is None
+                else int(self.resume_meta.get("step", -1))}
+        if self._writer is not None:
+            base.update(self._writer.stats())
+        else:
+            base.update(snapshots_submitted=self._sync_written,
+                        snapshots_written=self._sync_written,
+                        snapshots_dropped=0,
+                        bytes_written=self._sync_bytes,
+                        write_seconds=self._sync_seconds,
+                        last_step=self._last_step, errors=0)
+        return base

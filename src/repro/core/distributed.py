@@ -161,6 +161,36 @@ class _ChunkFeeder:
         self._dev: dict = {}    # i -> (Xd, yd, wd) resident device arrays
         self.h2d_bytes = 0
 
+    # ------------------------------------------------------------ checkpoint
+    def state(self) -> dict:
+        """Cursor/identity state for an in-training checkpoint.
+
+        Snapshots land *between* TRON iterations — between complete passes
+        over the source — so the cursor proper is always at chunk 0; what
+        must survive is the chunk layout identity (to validate the resumed
+        source and allow elastic re-rounding) and the transfer accounting.
+        """
+        return {"n": int(self.source.n), "d": int(self.source.d),
+                "chunk_rows": int(self.cr),
+                "n_chunks": int(self.source.n_chunks),
+                "h2d_bytes": int(self.h2d_bytes),
+                "classes": None if self.classes is None
+                else np.asarray(self.classes).tolist()}
+
+    def restore_state(self, state: dict) -> None:
+        """Adopt a checkpointed cursor state (resume).
+
+        The dataset identity (n, d) must match; ``chunk_rows`` may differ —
+        elastic restore re-rounds the chunk size to the new mesh's data
+        extent, which only re-slices the rows-only partition."""
+        n, d = int(state.get("n", -1)), int(state.get("d", -1))
+        if (n, d) != (int(self.source.n), int(self.source.d)):
+            raise ValueError(
+                f"checkpointed stream source was n={n} d={d}; the resumed "
+                f"source is n={self.source.n} d={self.source.d} — resume "
+                f"must re-read the same dataset")
+        self.h2d_bytes = int(state.get("h2d_bytes", 0))
+
     def _targets(self, yc):
         if self.classes is None:
             return np.asarray(yc, self.dtype)
@@ -642,19 +672,33 @@ class DistributedNystrom:
     def solve_stream(self, source, basis, beta0=None,
                      cfg: TronConfig = TronConfig(), classes=None,
                      cache_chunks: Optional[int] = None,
-                     prefetch: int = 2) -> TronResult:
+                     prefetch: int = 2, checkpoint=None,
+                     state0=None) -> TronResult:
         """Out-of-core solve: TRON on the host, f/g/Hd streamed from
         ``source`` (see :meth:`make_stream_closures`). ``classes`` runs a
         one-vs-rest multi-RHS solve: beta is (m, K) and every streamed
-        pass over the dataset serves all K classes."""
+        pass over the dataset serves all K classes.
+
+        ``checkpoint`` (a ``repro.checkpoint.TrainingCheckpointer``) gets
+        the feeder attached (cursor export into every step file, counter
+        restore on resume) and receives a snapshot every ``interval``
+        outer iterations; ``state0`` (a ``TronSnapshot``) resumes the
+        host loop — valid under ANY data-axis extent, since the snapshot
+        holds only replicated m-space state and the chunk size was
+        re-rounded to this mesh above."""
         sc = self.make_stream_closures(source, basis, classes=classes,
                                        cache_chunks=cache_chunks,
                                        prefetch=prefetch)
+        if checkpoint is not None:
+            checkpoint.attach_feeder(sc.feeder)
         if beta0 is None:
             shape = (basis.shape[0],) if classes is None \
                 else (basis.shape[0], len(classes))
             beta0 = np.zeros(shape, source.dtype)
-        return tron_host(sc.fgrad, sc.hessd, beta0, cfg)
+        return tron_host(
+            sc.fgrad, sc.hessd, beta0, cfg, state0=state0,
+            snapshot_every=checkpoint.interval if checkpoint else 0,
+            on_snapshot=checkpoint.on_snapshot if checkpoint else None)
 
     def make_closures(self, C, W, y):
         """(fgrad, hessd) closures over sharded C, W, y for TRON.
@@ -693,7 +737,8 @@ class DistributedNystrom:
 
     # ------------------------------------------------------------------ solve
     def solve(self, X, y, basis, beta0=None,
-              cfg: TronConfig = TronConfig()) -> TronResult:
+              cfg: TronConfig = TronConfig(), checkpoint=None,
+              state0=None) -> TronResult:
         if self.dist.materialize:
             C, W = self.precompute(X, basis)
             fgrad, hessd = self.make_closures(C, W, y)
@@ -704,9 +749,17 @@ class DistributedNystrom:
         if beta0 is None:
             beta0 = jnp.zeros((basis.shape[0],), X.dtype)
 
-        @jax.jit
-        def _run(beta0):
-            return tron(fgrad, hessd, beta0, cfg)
+        if checkpoint is None and state0 is None:
+            @jax.jit
+            def _run(beta0):
+                return tron(fgrad, hessd, beta0, cfg)
 
+            with self.mesh:
+                return _run(beta0)
+        # checkpointed/resumed: tron segments its own jitted while_loop so
+        # the host can snapshot between segments (no outer jit here)
         with self.mesh:
-            return _run(beta0)
+            return tron(
+                fgrad, hessd, beta0, cfg, state0=state0,
+                snapshot_every=checkpoint.interval if checkpoint else 0,
+                on_snapshot=checkpoint.on_snapshot if checkpoint else None)

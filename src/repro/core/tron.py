@@ -35,6 +35,23 @@ Two drivers share the update rules:
     *accumulation over data chunks streamed from disk* (the ``stream``
     execution plan). The m-vector CG algebra runs in numpy on the host;
     all O(n) work stays inside the chunk closures.
+
+Both drivers are resumable: the complete iterate state of either loop is
+the O(m·K) :class:`TronSnapshot` — beta, the per-column trust radii,
+``gnorm0`` (the convergence reference), the per-column live masks, and
+the three counters. Everything else the loops carry (f, g, aux) is a pure
+deterministic function of beta: after a *rejected* step the retained
+f/g/aux still correspond to the retained beta, so one ``fgrad(beta)``
+call on restore rebuilds them and a resumed solve walks the exact
+trajectory of the uninterrupted *checkpointed* run — bit-identically,
+because the traced driver re-derives f/g/aux from beta inside the same
+jitted segment program at every snapshot boundary (see :func:`tron`) and
+the host driver's eager ``fgrad`` is deterministic call-for-call.
+``snapshot_every`` / ``on_snapshot`` emit snapshots periodically (the
+traced driver runs the ``lax.while_loop`` in jitted segments of that
+many iterations so the host can observe the state between them; with
+both unset the original single-while_loop program is unchanged), and
+``state0`` restores one.
 """
 from __future__ import annotations
 
@@ -68,6 +85,47 @@ class TronResult(NamedTuple):
     n_fg: jnp.ndarray     # function/gradient evaluations (paper step 4a/4b calls)
     n_hd: jnp.ndarray     # Hessian-vector products     (paper step 4c calls)
     converged: jnp.ndarray  # scalar bool — or (K,) per column
+
+
+class TronSnapshot(NamedTuple):
+    """Resumable iterate state of a TRON solve, as host numpy arrays.
+
+    Deliberately minimal — O(m·K) floats plus four scalars. f, g and aux
+    are NOT stored: they are pure deterministic functions of ``beta``
+    (even after a rejected step the retained f/g/aux correspond to the
+    retained beta), so restore re-evaluates ``fgrad(beta)`` once and gets
+    them back bit-identically. That re-evaluation is NOT counted in
+    ``n_fg``, so a resumed run's counters match the uninterrupted run's.
+    """
+    beta: np.ndarray      # (m[, K]) iterate
+    delta: np.ndarray     # trust radius — scalar or (K,)
+    gnorm0: np.ndarray    # ||g(beta_0)|| convergence reference
+    active: np.ndarray    # per-column live mask (stagnation-guard state)
+    it: int               # outer iterations completed
+    n_fg: int
+    n_hd: int
+
+    def to_arrays(self) -> dict:
+        """Flat name->array dict, ready for an .npz checkpoint."""
+        return {
+            "beta": np.asarray(self.beta),
+            "delta": np.asarray(self.delta),
+            "gnorm0": np.asarray(self.gnorm0),
+            "active": np.asarray(self.active),
+            "it": np.asarray(int(self.it), np.int64),
+            "n_fg": np.asarray(int(self.n_fg), np.int64),
+            "n_hd": np.asarray(int(self.n_hd), np.int64),
+        }
+
+    @classmethod
+    def from_arrays(cls, arrays: dict) -> "TronSnapshot":
+        return cls(beta=np.asarray(arrays["beta"]),
+                   delta=np.asarray(arrays["delta"]),
+                   gnorm0=np.asarray(arrays["gnorm0"]),
+                   active=np.asarray(arrays["active"], bool),
+                   it=int(arrays["it"]),
+                   n_fg=int(arrays["n_fg"]),
+                   n_hd=int(arrays["n_hd"]))
 
 
 def _cdot(a, b):
@@ -176,28 +234,36 @@ class _TronState(NamedTuple):
     active: jnp.ndarray
 
 
+def snapshot_of(st) -> TronSnapshot:
+    """Host :class:`TronSnapshot` of a live loop state (traced or host)."""
+    return TronSnapshot(beta=np.asarray(st.beta), delta=np.asarray(st.delta),
+                        gnorm0=np.asarray(st.gnorm0),
+                        active=np.asarray(st.active, bool),
+                        it=int(st.it), n_fg=int(st.n_fg), n_hd=int(st.n_hd))
+
+
 def tron(fgrad: Callable, hessd: Callable, beta0: jnp.ndarray,
-         cfg: TronConfig = TronConfig()) -> TronResult:
+         cfg: TronConfig = TronConfig(), *,
+         state0: TronSnapshot | None = None,
+         snapshot_every: int = 0,
+         on_snapshot: Callable[[TronSnapshot], None] | None = None
+         ) -> TronResult:
     """Minimize f via trust-region Newton-CG. See module docstring.
 
     ``beta0`` (m,) runs the classic solver; (m, K) runs K independent
     problems in lockstep — one fgrad/hessd call per iteration serves every
     column, each column keeping its own f, trust radius, and convergence.
+
+    ``state0`` resumes from a :class:`TronSnapshot` (beta0 then only fixes
+    dtype/shape). ``snapshot_every`` > 0 runs the loop in jitted segments
+    of that many outer iterations, calling ``on_snapshot`` with the live
+    state between segments — the update rules are identical, only the
+    while_loop trip grouping changes. With all three unset the original
+    single-``lax.while_loop`` program is emitted unchanged.
     """
     multi = jnp.ndim(beta0) > 1
     sel = (lambda run, new, old: jnp.where(run, new, old)) if multi \
         else (lambda run, new, old: new)
-    f0, g0, aux0 = fgrad(beta0)
-    gnorm0 = _cnorm(g0)
-    init = _TronState(
-        beta=beta0, f=f0, g=g0, aux=aux0,
-        delta=gnorm0,
-        it=jnp.array(0, jnp.int32),
-        n_fg=jnp.array(1, jnp.int32),
-        n_hd=jnp.array(0, jnp.int32),
-        gnorm0=gnorm0,
-        active=gnorm0 > 0,
-    )
 
     def cond(st: _TronState):
         live = st.active & (_cnorm(st.g) > cfg.grad_rtol * st.gnorm0)
@@ -262,7 +328,93 @@ def tron(fgrad: Callable, hessd: Callable, beta0: jnp.ndarray,
             else st.active & ~stagnated,
         )
 
-    st = jax.lax.while_loop(cond, body, init)
+    if state0 is None and snapshot_every <= 0 and on_snapshot is None:
+        f0, g0, aux0 = fgrad(beta0)
+        gnorm0 = _cnorm(g0)
+        init = _TronState(
+            beta=beta0, f=f0, g=g0, aux=aux0,
+            delta=gnorm0,
+            it=jnp.array(0, jnp.int32),
+            n_fg=jnp.array(1, jnp.int32),
+            n_hd=jnp.array(0, jnp.int32),
+            gnorm0=gnorm0,
+            active=gnorm0 > 0,
+        )
+        st = jax.lax.while_loop(cond, body, init)     # the original program
+    else:
+        # Segmented driver: jit one while_loop whose cond adds a traced
+        # iteration cap, run it `snapshot_every` iterations at a time, and
+        # hand the host the live state between segments. Crucially the
+        # canonical cross-segment state is exactly the TronSnapshot tuple:
+        # f/g/aux are re-derived from beta INSIDE the jitted segment (not
+        # carried over), so a run resumed from a stored snapshot replays
+        # the identical compiled computation the uninterrupted
+        # checkpointed run performs at that same boundary — bit-identical
+        # trajectories. (A checkpointed run may therefore differ from an
+        # un-checkpointed one at float-rounding level: the boundary
+        # re-derivation re-rounds f/g/aux every `snapshot_every`
+        # iterations. The re-derivations are not counted in n_fg.)
+        @jax.jit
+        def _segment(beta, delta, gnorm0, active, it, n_fg, n_hd, cap):
+            f, g, aux = fgrad(beta)
+            st = _TronState(beta=beta, f=f, g=g, aux=aux, delta=delta,
+                            it=it, n_fg=n_fg, n_hd=n_hd, gnorm0=gnorm0,
+                            active=active)
+
+            def seg_cond(s):
+                return cond(s) & (s.it < cap)
+            return jax.lax.while_loop(seg_cond, body, st)
+
+        def _run_segment(st, cap: int):
+            return _segment(st.beta, st.delta, st.gnorm0, st.active, st.it,
+                            st.n_fg, st.n_hd, jnp.asarray(cap, jnp.int32))
+
+        def _host_live(st):
+            g = np.asarray(st.g, np.float64)
+            gnorm_h = np.sqrt(np.sum(g * g, axis=0)) if multi \
+                else np.linalg.norm(g)
+            live = np.asarray(st.active) \
+                & (gnorm_h > cfg.grad_rtol * np.asarray(st.gnorm0))
+            return bool(np.any(live)) and int(st.it) < cfg.max_iter
+
+        if state0 is None:
+            f0, g0, aux0 = fgrad(beta0)        # counted: the fresh init eval
+            gnorm0 = _cnorm(g0)
+            st = _TronState(
+                beta=beta0, f=f0, g=g0, aux=aux0,
+                delta=gnorm0,
+                it=jnp.array(0, jnp.int32),
+                n_fg=jnp.array(1, jnp.int32),
+                n_hd=jnp.array(0, jnp.int32),
+                gnorm0=gnorm0,
+                active=gnorm0 > 0,
+            )
+        else:
+            beta_r = jnp.asarray(np.asarray(state0.beta),
+                                 jnp.asarray(beta0).dtype)
+            rt = beta_r.dtype
+            st0 = _TronState(
+                beta=beta_r, f=None, g=None, aux=None,  # rebuilt in-segment
+                delta=jnp.asarray(np.asarray(state0.delta), rt),
+                it=jnp.array(int(state0.it), jnp.int32),
+                n_fg=jnp.array(int(state0.n_fg), jnp.int32),
+                n_hd=jnp.array(int(state0.n_hd), jnp.int32),
+                gnorm0=jnp.asarray(np.asarray(state0.gnorm0), rt),
+                active=jnp.asarray(np.asarray(state0.active, bool)) if multi
+                else jnp.asarray(bool(state0.active)),
+            )
+            # Zero-trip segment: rebuild f/g/aux from beta through the SAME
+            # jitted program the loop uses, so even the between-segment
+            # convergence decision sees the exact bits the uninterrupted
+            # run saw at this boundary. Not counted in n_fg.
+            st = _run_segment(st0, int(st0.it))
+
+        every = snapshot_every if snapshot_every > 0 else cfg.max_iter
+        while _host_live(st):
+            cap = min(cfg.max_iter, int(st.it) + every)
+            st = _run_segment(st, cap)
+            if on_snapshot is not None and snapshot_every > 0:
+                on_snapshot(snapshot_of(st))
     gnorm = _cnorm(st.g)
     return TronResult(
         beta=st.beta, f=st.f, gnorm=gnorm,
@@ -329,7 +481,11 @@ def _steihaug_cg_host(g, hvp: Callable, delta, tol, max_iter: int,
 
 
 def tron_host(fgrad: Callable, hessd: Callable, beta0,
-              cfg: TronConfig = TronConfig()) -> TronResult:
+              cfg: TronConfig = TronConfig(), *,
+              state0: TronSnapshot | None = None,
+              snapshot_every: int = 0,
+              on_snapshot: Callable[[TronSnapshot], None] | None = None
+              ) -> TronResult:
     """Eager trust-region Newton-CG with the exact update rules of
     :func:`tron`, for accumulator-style closures.
 
@@ -341,17 +497,30 @@ def tron_host(fgrad: Callable, hessd: Callable, beta0,
 
     Column-batched like :func:`tron` when ``beta0`` is (m, K): every
     streamed fgrad/hessd pass over the dataset then serves all K columns.
+
+    ``state0`` resumes from a :class:`TronSnapshot`; f/g/aux are rebuilt
+    by one (uncounted) ``fgrad`` call, so a resumed solve walks the exact
+    trajectory of the uninterrupted one. ``snapshot_every`` > 0 calls
+    ``on_snapshot`` with the live state every that many outer iterations.
     """
     beta = np.asarray(beta0)
     dtype = beta.dtype
     cols = beta.shape[1:]
+    if state0 is not None:
+        beta = np.asarray(state0.beta, dtype)
     f, g, aux = fgrad(beta)
     f = np.asarray(f, np.float64)
     g = np.asarray(g, dtype)
-    gnorm0 = _cnorm_np(g.astype(np.float64))
-    delta = np.asarray(gnorm0).copy()
-    it, n_fg, n_hd = 0, 1, 0
-    active = np.asarray(gnorm0 > 0) & np.ones(cols, bool)
+    if state0 is None:
+        gnorm0 = _cnorm_np(g.astype(np.float64))
+        delta = np.asarray(gnorm0).copy()
+        it, n_fg, n_hd = 0, 1, 0
+        active = np.asarray(gnorm0 > 0) & np.ones(cols, bool)
+    else:
+        gnorm0 = np.asarray(state0.gnorm0, np.float64)
+        delta = np.asarray(state0.delta, np.float64).copy()
+        it, n_fg, n_hd = int(state0.it), int(state0.n_fg), int(state0.n_hd)
+        active = np.asarray(state0.active, bool) & np.ones(cols, bool)
     while np.any(active & (_cnorm_np(g) > cfg.grad_rtol * gnorm0)) \
             and it < cfg.max_iter:
         gnorm = _cnorm_np(g.astype(np.float64))
@@ -411,6 +580,14 @@ def tron_host(fgrad: Callable, hessd: Callable, beta0,
         stagnated = (prered <= 0) | (
             (np.abs(actred) <= feps) & (np.abs(prered) <= feps))
         active = active & ~(run & stagnated)
+
+        if on_snapshot is not None and snapshot_every > 0 \
+                and it % snapshot_every == 0:
+            on_snapshot(TronSnapshot(
+                beta=beta.copy(), delta=np.asarray(delta).copy(),
+                gnorm0=np.asarray(gnorm0).copy(),
+                active=np.asarray(active, bool).copy(),
+                it=it, n_fg=n_fg, n_hd=n_hd))
 
     gnorm = _cnorm_np(g.astype(np.float64))
     return TronResult(

@@ -74,6 +74,24 @@ def main():
                          "(bounds every intermediate at chunk_rows x m)")
     ap.add_argument("--save", default=None,
                     help="checkpoint path for repro.launch.kernel_serve")
+    ap.add_argument("--ckpt-interval", type=int, default=0,
+                    help="commit a preemption-safe in-training checkpoint "
+                         "every N outer TRON iterations (0 = off; solver "
+                         "'tron' only)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="step-file directory (default: <--save>.ckpt-steps)")
+    ap.add_argument("--ckpt-keep", type=int, default=3,
+                    help="retain only the newest N step files (0 = all)")
+    ap.add_argument("--ckpt-sync", action="store_true",
+                    help="commit checkpoints synchronously on the training "
+                         "thread instead of the background writer")
+    ap.add_argument("--resume", nargs="?", const="", default=None,
+                    metavar="DIR",
+                    help="restore the newest in-training checkpoint from DIR "
+                         "(default: the --ckpt-dir / <--save>.ckpt-steps "
+                         "directory) and continue training from it — "
+                         "elastically: the device count may differ from the "
+                         "run that wrote it")
     args = ap.parse_args()
 
     if args.mesh:
@@ -89,6 +107,34 @@ def main():
     if args.classes > 2 and args.solver != "tron":
         ap.error(f"--classes {args.classes} trains one-vs-rest via the "
                  f"multi-RHS kmvp path, which only solver 'tron' supports")
+
+    ckpt = None
+    if args.ckpt_interval > 0 or args.resume is not None:
+        from repro.checkpoint import (CheckpointConfig, load_latest,
+                                      steps_dir_for)
+        if args.solver != "tron":
+            ap.error("--ckpt-interval/--resume snapshot TRON iterate state "
+                     "and require --solver tron")
+        ckpt_dir = args.resume or args.ckpt_dir \
+            or (steps_dir_for(args.save) if args.save else None)
+        if not ckpt_dir:
+            ap.error("checkpointing needs a directory: pass --ckpt-dir, "
+                     "--save (steps go next to it), or --resume DIR")
+        ckpt = CheckpointConfig(
+            dir=ckpt_dir,
+            interval=args.ckpt_interval if args.ckpt_interval > 0 else 10,
+            keep=args.ckpt_keep, background=not args.ckpt_sync,
+            resume=args.resume is not None)
+        if ckpt.resume:
+            rs = load_latest(ckpt.dir)   # fail fast, and announce the step
+            print(f"[ckpt ] resuming from step {rs.step} ({rs.path})")
+        else:
+            import os
+            os.makedirs(ckpt.dir, exist_ok=True)
+            print(f"[ckpt ] step files -> {ckpt.dir} "
+                  f"every {ckpt.interval} iters "
+                  f"({'sync' if args.ckpt_sync else 'async'}, "
+                  f"keep={ckpt.keep})")
 
     def load_data(key):
         """(X, y, Xt, yt, spec): the paper's binary simulation, or K-class
@@ -170,12 +216,20 @@ def main():
     km = KernelMachine(build_config(lam, sigma, m), mesh=mesh)
 
     t0 = time.time()
-    km.fit(Xs, ys, basis)          # streaming fit samples a random basis
+    km.fit(Xs, ys, basis,          # streaming fit samples a random basis
+           checkpoint=ckpt)
     jax.block_until_ready(km.state_["beta"])
     r = km.result_
     print(f"[step3+4] {r.solver}/{r.plan}: f={r.f:.4f} iters={r.n_iter} "
           f"fg={r.n_fg} hd={r.n_hd} converged={r.converged} "
           f"({time.time() - t0:.2f}s)")
+    if ckpt is not None:
+        cs = r.extras["ckpt"]
+        print(f"[ckpt ] wrote {cs['snapshots_written']} step files "
+              f"({cs['bytes_written']} bytes, {cs['write_seconds']:.3f}s "
+              f"{'sync' if args.ckpt_sync else 'async'}, "
+              f"dropped={cs['snapshots_dropped']}, last_step={cs['last_step']}"
+              f", errors={cs['errors']})")
 
     if args.data_dir:
         Xh, yh = X.chunk(0)        # held-in sample; no synthetic test split

@@ -105,13 +105,32 @@ class RequestQueue:
         self._pending: Dict[str, Deque[Request]] = {}
         self._order: Deque[str] = collections.deque()   # round-robin cursor
         self._total = 0
+        self._closed = False
 
     def __len__(self) -> int:
         with self._lock:
             return self._total
 
+    def close(self) -> None:
+        """Refuse pushes from now on (:class:`EngineStopped`).
+
+        Called FIRST in engine shutdown, so a ``submit`` racing ``stop()``
+        either lands before the close (and is failed by the drain) or is
+        rejected here — it can never strand a request in a queue nobody
+        will ever pop again."""
+        with self._lock:
+            self._closed = True
+            self._nonempty.notify_all()
+
+    def open(self) -> None:
+        """Accept pushes again (engine restart after ``stop()``)."""
+        with self._lock:
+            self._closed = False
+
     def push(self, req: Request) -> None:
         with self._lock:
+            if self._closed:
+                raise EngineStopped("serve engine stopped")
             if self._total >= self.max_queue:
                 raise QueueFull(
                     f"serving queue at capacity ({self.max_queue} waiting "

@@ -97,6 +97,7 @@ class ServeEngine:
     def start(self) -> "ServeEngine":
         if self.running:
             return self
+        self._queue.open()           # accept submits again after a stop()
         self._stop.clear()
         self._thread = threading.Thread(target=self._batch_loop,
                                         name="serve-batcher", daemon=True)
@@ -105,7 +106,14 @@ class ServeEngine:
 
     def stop(self, timeout: float = 10.0) -> None:
         """Stop the batcher and fail every still-pending request with
-        :class:`EngineStopped` (clean shutdown, never a hang)."""
+        :class:`EngineStopped` (clean shutdown, never a hang).
+
+        The queue is closed *before* the drain, so a ``submit`` racing this
+        call either lands in the queue (and is failed here) or raises
+        :class:`EngineStopped` at push — it cannot be stranded after the
+        drain with its in-flight slot leaked. ``start()`` afterwards
+        restores a fully serviceable engine."""
+        self._queue.close()
         self._stop.set()
         self._queue.notify()
         if self._thread is not None:
@@ -155,10 +163,15 @@ class ServeEngine:
             self._inflight += 1
         try:
             self._queue.push(req)
-        except QueueFull:
+        except BaseException as exc:
+            # EVERY push failure (QueueFull, EngineStopped from a racing
+            # stop(), anything else) must release the in-flight slot, or
+            # restarts inherit phantom occupancy and eventually reject
+            # all traffic with a spurious QueueFull
             with self._inflight_lock:
                 self._inflight -= 1
-            self.metrics.add(rejected_full=1)
+            if isinstance(exc, QueueFull):
+                self.metrics.add(rejected_full=1)
             raise
         return future
 
@@ -198,12 +211,16 @@ class ServeEngine:
                 self._dispatch(model, live)
 
     def _dispatch(self, model: str, reqs: Sequence[Request]) -> None:
-        entry = self.registry.get(model)
         sizes = [r.n for r in reqs]
         rows = sum(sizes)
-        block = reqs[0].X if len(reqs) == 1 \
-            else np.concatenate([r.X for r in reqs], axis=0)
         try:
+            # registry lookup and block assembly are inside the guard too: a
+            # model unregistered mid-flight (or a bad request that slipped
+            # admission) must fail ITS batch, not kill the batcher thread
+            # with every in-flight slot still held
+            entry = self.registry.get(model)
+            block = reqs[0].X if len(reqs) == 1 \
+                else np.concatenate([r.X for r in reqs], axis=0)
             margins = np.asarray(entry.decider(block))
         except Exception as exc:         # fail the batch, keep serving
             for req in reqs:

@@ -23,11 +23,26 @@ def percentiles(samples_s: Sequence[float],
     Returns ``{"p50_ms": ..., "p95_ms": ..., "p99_ms": ...}`` (keys follow
     ``pcts``). Empty input yields zeros rather than NaN so a fully-rejected
     load phase still produces a well-formed report row.
+
+    Tail percentiles use the "higher" order statistic — the smallest
+    sample at or above the requested rank, index
+    ``min(n-1, ceil(p/100 * (n-1)))`` into the sorted samples — never
+    linear interpolation. On small samples (a smoke run with n < 100)
+    interpolation would manufacture a p99 *below* the worst observation
+    (with n=2 it reports ~the fast sample, silently collapsing the tail
+    into the median); an SLO tail must be a latency some request actually
+    paid. The index clamps at both ends, so n=1 reports that sample for
+    every percentile instead of indexing out of range.
     """
     if not len(samples_s):
         return {f"p{p}_ms": 0.0 for p in pcts}
-    lat_ms = np.asarray(samples_s, dtype=np.float64) * 1e3
-    return {f"p{p}_ms": float(np.percentile(lat_ms, p)) for p in pcts}
+    lat_ms = np.sort(np.asarray(samples_s, dtype=np.float64)) * 1e3
+    n = lat_ms.shape[0]
+    out = {}
+    for p in pcts:
+        idx = min(n - 1, max(0, int(np.ceil(p / 100.0 * (n - 1)))))
+        out[f"p{p}_ms"] = float(lat_ms[idx])
+    return out
 
 
 class ServeMetrics:

@@ -91,6 +91,14 @@ class ModelRegistry:
                            f"{self.names()}")
         return self._models[name]
 
+    def remove(self, name: str) -> None:
+        """Unregister a model. In-flight requests for it fail cleanly at
+        dispatch (the engine guards its registry lookup); new submits are
+        rejected at admission."""
+        del self._models[name]
+        if self._default == name:
+            self._default = min(self._models) if self._models else None
+
     def names(self) -> List[str]:
         return sorted(self._models)
 

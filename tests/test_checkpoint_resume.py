@@ -1,0 +1,288 @@
+"""Preemption-safe in-training checkpoints: atomic commits, the async
+writer, and bit-exact resume of both TRON drivers.
+
+The resume contract under test (see ``repro.core.tron``): the canonical
+cross-segment state is the O(m·K) TronSnapshot, f/g/aux are re-derived
+from beta inside the same program on restore, so a run resumed from ANY
+committed step walks the bit-identical trajectory of the uninterrupted
+checkpointed run — on the traced driver (in-memory plans) and the host
+driver (stream plan), binary and one-vs-rest multiclass alike.
+Kill-at-any-instant durability (SIGKILL mid-write) is exercised by the
+subprocess suite in ``tests/test_kill_resume.py``; here the commit
+protocol is tested at the file level (temp files invisible, corrupt
+newest step skipped, pruning).
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import KernelMachine, MachineConfig
+from repro.checkpoint import (AsyncCheckpointWriter, CheckpointConfig,
+                              TrainingCheckpointer, check_resume_config,
+                              list_steps, load_latest, load_step,
+                              save_checkpoint, steps_dir_for, write_step)
+from repro.core import KernelSpec, TronConfig
+from repro.data import make_classification, make_multiclass
+
+CFG_KW = dict(kernel=KernelSpec("gaussian", sigma=2.0), lam=0.1, m=32,
+              seed=3, tron=TronConfig(max_iter=25))
+
+
+def _data(multiclass=False):
+    key = jax.random.PRNGKey(0)
+    if multiclass:
+        X, y = make_multiclass(key, 256, 6, 3, clusters_per_class=2)
+        return np.asarray(X), np.asarray(y)
+    X, y = make_classification(key, 256, 6, clusters_per_class=4)
+    return np.asarray(X), np.asarray(y)
+
+
+# ------------------------------------------------------- commit protocol
+def test_save_checkpoint_leaves_no_temp_files(tmp_path):
+    path = tmp_path / "a.npz"
+    nbytes = save_checkpoint(str(path), {"x": np.arange(4)})
+    assert path.exists() and nbytes == path.stat().st_size > 0
+    assert os.listdir(tmp_path) == ["a.npz"]    # no mkstemp leftovers
+
+
+def test_write_step_stamps_and_prunes(tmp_path):
+    d = str(tmp_path / "steps")
+    for s in (2, 4, 6, 8):
+        write_step(d, s, {"beta": np.zeros(3), "delta": np.float32(1),
+                          "gnorm0": np.float32(1), "active": np.bool_(True),
+                          "it": np.int64(s), "n_fg": np.int64(s),
+                          "n_hd": np.int64(0)}, {"config": {}}, keep=3)
+    assert [s for s, _ in list_steps(d)] == [4, 6, 8]
+    rs = load_step(list_steps(d)[-1][1])
+    assert rs.step == 8 and rs.snapshot.it == 8
+    assert rs.meta["format"] == "train-ckpt-1" and "wall_time" in rs.meta
+
+
+def test_list_steps_ignores_temp_and_foreign_files(tmp_path):
+    d = tmp_path / "steps"
+    d.mkdir()
+    (d / ".tmp-ckpt-abc.npz").write_bytes(b"torn half-write")
+    (d / "notes.txt").write_text("hi")
+    (d / "step-bogus.npz").write_bytes(b"")
+    assert list_steps(str(d)) == []
+    assert list_steps(str(d / "missing")) == []
+
+
+def test_load_latest_skips_corrupt_newest(tmp_path):
+    d = str(tmp_path / "steps")
+    tree = {"beta": np.ones(3, np.float32), "delta": np.float32(1),
+            "gnorm0": np.float32(2), "active": np.bool_(True),
+            "it": np.int64(5), "n_fg": np.int64(6), "n_hd": np.int64(7)}
+    write_step(d, 5, tree, {})
+    # a corrupt later file (external damage) must not break resume
+    with open(os.path.join(d, "step-00000009.npz"), "wb") as f:
+        f.write(b"\x00" * 16)
+    rs = load_latest(d)
+    assert rs.step == 5 and rs.snapshot.n_hd == 7
+    with pytest.raises(FileNotFoundError):
+        load_latest(str(tmp_path / "empty"))
+
+
+def test_check_resume_config_pins_objective():
+    cfg = MachineConfig(**CFG_KW)
+    check_resume_config(cfg, {"config": cfg.to_dict()})
+    bad = dict(cfg.to_dict(), lam=9.0)
+    with pytest.raises(ValueError, match="lam"):
+        check_resume_config(cfg, {"config": bad})
+    check_resume_config(cfg, {})          # legacy/absent meta: permissive
+
+
+# ----------------------------------------------------------- async writer
+def test_async_writer_writes_and_accounts(tmp_path):
+    d = str(tmp_path)
+    w = AsyncCheckpointWriter(
+        lambda step, tree, md: write_step(d, step, tree, md))
+    tree = {"beta": np.zeros(4, np.float32), "delta": np.float32(1),
+            "gnorm0": np.float32(1), "active": np.bool_(True),
+            "it": np.int64(1), "n_fg": np.int64(1), "n_hd": np.int64(0)}
+    w.submit(1, tree, {})
+    w.submit(2, dict(tree, it=np.int64(2)), {})
+    w.close(flush=True)
+    st = w.stats()
+    assert st["snapshots_written"] >= 1 and st["errors"] == 0
+    assert st["bytes_written"] > 0 and st["last_step"] == 2
+    assert [s for s, _ in list_steps(d)][-1] == 2
+    with pytest.raises(RuntimeError):
+        w.submit(3, tree, {})
+
+
+def test_async_writer_drop_oldest_never_blocks():
+    gate = threading.Event()
+    done = []
+
+    def slow_write(step, tree, md):
+        gate.wait(10)
+        done.append(step)
+        return 1
+
+    w = AsyncCheckpointWriter(slow_write)
+    w.submit(1, {}, {})               # taken by the writer, blocks on gate
+    time.sleep(0.05)
+    t0 = time.perf_counter()
+    w.submit(2, {}, {})               # pending
+    w.submit(3, {}, {})               # replaces 2 (drop-oldest)
+    assert time.perf_counter() - t0 < 1.0   # producer never blocked on I/O
+    gate.set()
+    w.close(flush=True)
+    assert done == [1, 3]
+    st = w.stats()
+    assert st["snapshots_submitted"] == 3
+    assert st["snapshots_dropped"] == 1 and st["snapshots_written"] == 2
+
+
+def test_async_writer_survives_write_errors(tmp_path):
+    calls = []
+
+    def flaky(step, tree, md):
+        calls.append(step)
+        if step == 1:
+            raise OSError("disk on fire")
+        return 7
+
+    w = AsyncCheckpointWriter(flaky)
+    w.submit(1, {}, {})
+    w.flush(5)
+    w.submit(2, {}, {})               # writer must still be alive
+    w.close(flush=True)
+    st = w.stats()
+    assert calls == [1, 2]
+    assert st["errors"] == 1 and st["snapshots_written"] == 1
+    assert st["last_step"] == 2
+
+
+# ------------------------------------------------- resume: traced driver
+@pytest.mark.parametrize("multiclass", [False, True],
+                         ids=["binary", "ovr3"])
+def test_local_plan_resume_bitwise_from_every_step(tmp_path, multiclass):
+    X, y = _data(multiclass)
+    cfg = MachineConfig(solver="tron", plan="local", **CFG_KW)
+    d = steps_dir_for(str(tmp_path / "model.npz"))
+    ck = CheckpointConfig(dir=d, interval=2, keep=0, background=False)
+    km = KernelMachine(cfg).fit(X, y, checkpoint=ck)
+    ref = np.asarray(km.state_["beta"])
+    r = km.result_
+    steps = list_steps(d)
+    assert len(steps) >= 2
+    assert r.extras["ckpt"]["snapshots_written"] == len(steps)
+    for cut in range(len(steps) - 1):
+        d2 = str(tmp_path / f"cut{cut}")
+        os.makedirs(d2)
+        src = steps[cut][1]
+        dst = os.path.join(d2, os.path.basename(src))
+        with open(src, "rb") as fi, open(dst, "wb") as fo:
+            fo.write(fi.read())
+        km2 = KernelMachine(cfg).fit(
+            X, y, checkpoint=CheckpointConfig(dir=d2, interval=2,
+                                              resume=True))
+        got = np.asarray(km2.state_["beta"])
+        assert np.array_equal(ref, got), \
+            f"resume from step {steps[cut][0]} diverged"
+        # counter comparability: the restore re-eval is not counted
+        assert km2.result_.n_iter == r.n_iter
+        assert km2.result_.n_fg == r.n_fg
+        assert km2.result_.extras["ckpt"]["resumed_step"] == steps[cut][0]
+
+
+# --------------------------------------------------- resume: host driver
+@pytest.mark.parametrize("multiclass", [False, True],
+                         ids=["binary", "ovr3"])
+def test_stream_plan_resume_bitwise(tmp_path, multiclass):
+    X, y = _data(multiclass)
+    cfg = MachineConfig(solver="tron", plan="stream", **CFG_KW)
+    d = str(tmp_path / "steps")
+    ck = CheckpointConfig(dir=d, interval=3, keep=0, background=True)
+    km = KernelMachine(cfg).fit(X, y, checkpoint=ck)
+    ref = np.asarray(km.state_["beta"])
+    steps = list_steps(d)
+    assert steps, "no steps committed"
+    # keep only the earliest step and resume from it
+    for _, p in steps[1:]:
+        os.unlink(p)
+    km2 = KernelMachine(cfg).fit(
+        X, y, checkpoint=CheckpointConfig(dir=d, interval=3, resume=True))
+    assert np.array_equal(ref, np.asarray(km2.state_["beta"]))
+    if multiclass:
+        np.testing.assert_array_equal(np.asarray(km.state_["classes"]),
+                                      np.asarray(km2.state_["classes"]))
+    st = km2.result_.extras["ckpt"]
+    assert st["resumed_step"] == steps[0][0]
+    # the stream feeder identity travels with every step file
+    rs = load_latest(d)
+    feeder = rs.meta.get("feeder")
+    assert feeder is not None and feeder["n"] == X.shape[0] \
+        and feeder["d"] == X.shape[1] and feeder["h2d_bytes"] > 0
+
+
+def test_resume_refuses_other_objective(tmp_path):
+    X, y = _data()
+    d = str(tmp_path / "steps")
+    cfg = MachineConfig(solver="tron", plan="local", **CFG_KW)
+    KernelMachine(cfg).fit(X, y, checkpoint=CheckpointConfig(
+        dir=d, interval=2, background=False))
+    other = MachineConfig(solver="tron", plan="local",
+                          **dict(CFG_KW, lam=5.0))
+    with pytest.raises(ValueError, match="incompatible config"):
+        KernelMachine(other).fit(X, y, checkpoint=CheckpointConfig(
+            dir=d, interval=2, resume=True))
+
+
+def test_checkpoint_rejected_for_non_tron_solver(tmp_path):
+    X, y = _data()
+    cfg = MachineConfig(solver="rff", plan="local", **CFG_KW)
+    with pytest.raises(ValueError, match="tron"):
+        KernelMachine(cfg).fit(X, y, checkpoint=CheckpointConfig(
+            dir=str(tmp_path), interval=2))
+
+
+def test_checkpoint_config_validation(tmp_path):
+    with pytest.raises(ValueError, match="interval"):
+        CheckpointConfig(dir=str(tmp_path), interval=0)
+
+
+def test_checkpointer_async_overlap_accounting(tmp_path):
+    """The FitResult surfaces writer accounting — the h2d-bytes idiom for
+    checkpoint I/O — and async commits do not run on the calling thread."""
+    X, y = _data()
+    cfg = MachineConfig(solver="tron", plan="local", **CFG_KW)
+    d = str(tmp_path / "steps")
+    km = KernelMachine(cfg).fit(X, y, checkpoint=CheckpointConfig(
+        dir=d, interval=2, keep=2, background=True))
+    st = km.result_.extras["ckpt"]
+    assert st["background"] is True and st["errors"] == 0
+    assert st["snapshots_written"] + st["snapshots_dropped"] \
+        == st["snapshots_submitted"] >= 1
+    assert st["bytes_written"] > 0 and st["write_seconds"] >= 0
+    assert len(list_steps(d)) <= 2            # keep pruning applied
+
+
+def test_training_checkpointer_restores_feeder_state():
+    class FakeFeeder:
+        def __init__(self):
+            self.restored = None
+            self.h2d_bytes = 0
+
+        def state(self):
+            return {"n": 10, "d": 2, "h2d_bytes": self.h2d_bytes}
+
+        def restore_state(self, st):
+            self.restored = st
+
+    ck = TrainingCheckpointer(
+        CheckpointConfig(dir="/nonexistent", interval=1, background=False),
+        meta={}, resume_meta={"feeder": {"n": 10, "d": 2, "h2d_bytes": 99},
+                              "step": 4})
+    f = FakeFeeder()
+    ck.attach_feeder(f)
+    assert f.restored == {"n": 10, "d": 2, "h2d_bytes": 99}
+    assert ck.stats()["resumed_step"] == 4

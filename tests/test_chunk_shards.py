@@ -1,0 +1,111 @@
+"""Shard-boundary property tests for :class:`MmapChunkSource`.
+
+The stream plan's correctness rests on ``_rows(lo, hi)`` returning
+exactly rows ``[lo, hi)`` of the logical concatenation of the shards —
+for ANY alignment of chunk boundaries against shard boundaries. The
+risky geometries are chunk sizes coprime with the shard size (every
+chunk straddles differently), chunks spanning MORE than two shards, and
+a ragged final shard shorter than the rest. Each case is checked
+row-for-row against the in-memory array the shards were written from,
+for both ``.npy`` (mmap'd) and ``.npz`` (lazily inflated) layouts, with
+and without ``meta.json`` fast-path layout probing.
+"""
+import numpy as np
+import pytest
+
+from repro.data.chunks import MmapChunkSource, save_chunks
+
+
+def _make(tmp_path, n, d=5, rows_per_shard=16, compress=False, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, d)).astype(np.float32)
+    y = rng.integers(0, 3, size=n).astype(np.int64)
+    dd = tmp_path / f"shards_n{n}_r{rows_per_shard}_{int(compress)}_s{seed}"
+    save_chunks(dd, X, y, rows_per_shard=rows_per_shard, compress=compress)
+    return X, y, dd
+
+
+def _check_all_chunks(src, X, y):
+    at = 0
+    for i in range(src.n_chunks):
+        Xc, yc = src.chunk(i)
+        rows = Xc.shape[0]
+        np.testing.assert_array_equal(Xc, X[at:at + rows])
+        np.testing.assert_array_equal(yc, y[at:at + rows])
+        at += rows
+    assert at == X.shape[0], "chunks did not cover every row exactly once"
+
+
+@pytest.mark.parametrize("compress", [False, True], ids=["npy", "npz"])
+@pytest.mark.parametrize("n,rows_per_shard,chunk_rows", [
+    (100, 16, 7),     # 7 coprime 16: every boundary lands differently
+    (100, 16, 37),    # chunk spans 3+ shards
+    (100, 16, 100),   # one chunk spans ALL shards (incl. ragged last: 4)
+    (64, 16, 16),     # exact alignment (degenerate control)
+    (65, 16, 64),     # ragged final shard of 1 row
+    (30, 7, 11),      # ragged shards AND coprime chunks
+])
+def test_chunks_reassemble_exactly(tmp_path, compress, n, rows_per_shard,
+                                   chunk_rows):
+    X, y, dd = _make(tmp_path, n, rows_per_shard=rows_per_shard,
+                     compress=compress)
+    src = MmapChunkSource(dd, chunk_rows=chunk_rows)
+    assert (src.n, src.d) == X.shape
+    _check_all_chunks(src, X, y)
+    # rechunking reuses the probed layout; must stay exact
+    _check_all_chunks(src.with_chunk_rows(max(1, chunk_rows // 2)), X, y)
+
+
+def test_rows_every_span(tmp_path):
+    """Exhaustive (lo, hi) sweep at small n: every window, every length —
+    including windows spanning 3, 4 and all 5 shards."""
+    X, y, dd = _make(tmp_path, 37, rows_per_shard=8)
+    src = MmapChunkSource(dd, chunk_rows=8)
+    for lo in range(37):
+        for hi in range(lo + 1, 38):
+            Xr, yr = src._rows(lo, hi)
+            assert Xr.shape[0] == hi - lo, f"short read on [{lo}, {hi})"
+            np.testing.assert_array_equal(Xr, X[lo:hi])
+            np.testing.assert_array_equal(yr, y[lo:hi])
+
+
+def test_probe_without_meta_json(tmp_path):
+    """Layout probing must agree with meta.json fast path (header reads)."""
+    X, y, dd = _make(tmp_path, 50, rows_per_shard=8)
+    (dd / "meta.json").unlink()
+    src = MmapChunkSource(dd, chunk_rows=13)
+    assert (src.n, src.d) == X.shape
+    _check_all_chunks(src, X, y)
+
+
+def test_take_rows_across_shards(tmp_path):
+    X, y, dd = _make(tmp_path, 60, rows_per_shard=8)
+    src = MmapChunkSource(dd, chunk_rows=16)
+    # unsorted, duplicated, boundary-adjacent indices spanning many shards
+    idx = np.array([59, 0, 8, 7, 8, 23, 24, 55, 16, 0, 39, 40, 15])
+    np.testing.assert_array_equal(src.take_rows(idx), X[idx])
+    # boundary-exact block reads
+    np.testing.assert_array_equal(src.take_rows(np.arange(8, 24)), X[8:24])
+
+
+def test_labels_only_reads(tmp_path):
+    X, y, dd = _make(tmp_path, 45, rows_per_shard=8)
+    src = MmapChunkSource(dd, chunk_rows=10)
+    np.testing.assert_array_equal(np.concatenate(list(src.iter_y())), y)
+    np.testing.assert_array_equal(src.unique_labels(), np.unique(y))
+
+
+def test_randomized_geometry_hammer(tmp_path):
+    """Seeded sweep over (n, rows_per_shard, chunk_rows) geometries."""
+    rng = np.random.default_rng(42)
+    for trial in range(12):
+        n = int(rng.integers(10, 200))
+        rps = int(rng.integers(3, 40))
+        cr = int(rng.integers(1, n + 1))
+        X, y, dd = _make(tmp_path, n, rows_per_shard=rps, seed=trial + 1)
+        src = MmapChunkSource(dd, chunk_rows=cr)
+        _check_all_chunks(src, X, y)
+        lo = int(rng.integers(0, n))
+        hi = int(rng.integers(lo + 1, n + 1))
+        Xr, _ = src._rows(lo, hi)
+        np.testing.assert_array_equal(Xr, X[lo:hi])

@@ -1,0 +1,165 @@
+"""Preemption end-to-end: SIGKILL a streaming ``kernel_train`` run mid-fit,
+``--resume`` it, and require the finished model to match the uninterrupted
+run — plus an elastic restore onto a different local device count.
+
+Everything runs through the real CLI in subprocesses (the same idiom as
+``test_distributed.py``): the kill arrives from outside the process at an
+arbitrary instant, so this exercises the atomic commit protocol exactly
+the way a cluster preemption would. A deliberately torn step file is
+planted before the resume to prove ``load_latest`` skips it end-to-end.
+
+Same-topology resume is asserted BITWISE: the segmented drivers make the
+checkpointed trajectory canonical, so restoring from any committed step
+replays the identical float sequence. The elastic restore (1 -> 4 fake
+devices) changes psum/reduction grouping, so it gets a tolerance instead.
+"""
+import os
+import shutil
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+pytestmark = [pytest.mark.slow]  # four subprocess training runs
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _env(extra=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    env.pop("XLA_FLAGS", None)
+    if extra:
+        env.update(extra)
+    return env
+
+
+def _cli(data_dir, save, ckpt_dir, *, resume=False):
+    cmd = [sys.executable, "-m", "repro.launch.kernel_train",
+           "--plan", "stream", "--data-dir", str(data_dir),
+           "--m", "32", "--max-iter", "40", "--lam", "1e-3",
+           "--sigma", "2.0", "--chunk-rows", "256",
+           "--ckpt-interval", "2", "--ckpt-keep", "0",
+           "--ckpt-dir", str(ckpt_dir), "--save", str(save)]
+    if resume:
+        cmd += ["--resume", str(ckpt_dir)]
+    return cmd
+
+
+def _beta(path):
+    with np.load(path, allow_pickle=True) as z:
+        return np.asarray(z["beta"], dtype=np.float64)
+
+
+@pytest.fixture(scope="module")
+def runs(tmp_path_factory):
+    """Shards + four training runs, produced once for every test below:
+
+    ref      uninterrupted WITH checkpointing (the canonical trajectory)
+    killed   SIGKILLed right after its first step file committed
+    resumed  --resume of the killed run, same topology, to completion
+    elastic  --resume of the killed run's steps on 4 fake devices
+    """
+    root = tmp_path_factory.mktemp("kill_resume")
+    data = root / "shards"
+    # deterministic separable-ish binary data, written once as mmap shards
+    from repro.data.chunks import save_chunks
+    rng = np.random.default_rng(7)
+    X = rng.standard_normal((2048, 16)).astype(np.float32)
+    w = rng.standard_normal(16)
+    y = np.where(X @ w + 0.3 * rng.standard_normal(2048) > 0, 1, -1)
+    save_chunks(data, X, y.astype(np.int64), rows_per_shard=512)
+
+    out = {}
+
+    # --- reference: uninterrupted, checkpointing on -----------------------
+    ref_steps = root / "ref-steps"
+    proc = subprocess.run(
+        _cli(data, root / "ref.npz", ref_steps), env=_env(),
+        capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out["ref_stdout"] = proc.stdout
+
+    # --- kill: SIGKILL as soon as the first step file commits -------------
+    kill_steps = root / "kill-steps"
+    proc = subprocess.Popen(
+        _cli(data, root / "kill.npz", kill_steps), env=_env(),
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+    deadline = time.time() + 300
+    committed = []
+    while time.time() < deadline:
+        committed = sorted(kill_steps.glob("step-*.npz"))
+        if committed:
+            break
+        if proc.poll() is not None:
+            _, err = proc.communicate()
+            pytest.fail("training exited before its first checkpoint: "
+                        + err[-3000:])
+        time.sleep(0.02)
+    assert committed, "no step file committed within the deadline"
+    proc.kill()                      # SIGKILL: no cleanup handlers run
+    proc.communicate()
+    out["kill_returncode"] = proc.returncode
+    out["first_step"] = committed[0].name
+
+    # elastic restore resumes from a frozen copy of the post-kill state
+    elastic_steps = root / "elastic-steps"
+    shutil.copytree(kill_steps, elastic_steps)
+
+    # plant a torn "newest" step: load_latest must skip it, not crash
+    (kill_steps / "step-99999999.npz").write_bytes(b"PK\x03\x04 torn")
+
+    # --- resume: same topology, to completion -----------------------------
+    proc = subprocess.run(
+        _cli(data, root / "kill.npz", kill_steps, resume=True), env=_env(),
+        capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out["resume_stdout"] = proc.stdout
+
+    # --- elastic: same steps, 4 simulated local devices -------------------
+    proc = subprocess.run(
+        _cli(data, root / "elastic.npz", elastic_steps, resume=True),
+        env=_env({"XLA_FLAGS": "--xla_force_host_platform_device_count=4"}),
+        capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out["elastic_stdout"] = proc.stdout
+
+    out["ref_beta"] = _beta(root / "ref.npz")
+    out["resumed_beta"] = _beta(root / "kill.npz")
+    out["elastic_beta"] = _beta(root / "elastic.npz")
+    return out
+
+
+def test_killed_mid_fit(runs):
+    assert runs["kill_returncode"] == -signal.SIGKILL
+    assert runs["first_step"].startswith("step-")
+
+
+def test_resume_announces_committed_step_and_skips_torn_file(runs):
+    line = [l for l in runs["resume_stdout"].splitlines()
+            if "resuming from step" in l]
+    assert line, runs["resume_stdout"]
+    step = int(line[0].split("resuming from step")[1].split()[0])
+    assert 0 < step < 99999999, "resume picked the torn step file"
+
+
+def test_resumed_beta_bitwise_matches_uninterrupted(runs):
+    ref, res = runs["ref_beta"], runs["resumed_beta"]
+    assert ref.shape == res.shape
+    assert np.array_equal(ref, res), \
+        f"resume diverged: maxdiff={np.max(np.abs(ref - res))}"
+
+
+def test_elastic_restore_matches_reference(runs):
+    assert "resuming from step" in runs["elastic_stdout"]
+    ref, ela = runs["ref_beta"], runs["elastic_beta"]
+    assert ref.shape == ela.shape
+    # 4-way device sharding regroups reductions; trajectories re-round but
+    # must land on the same optimum
+    denom = max(float(np.max(np.abs(ref))), 1e-12)
+    rel = float(np.max(np.abs(ref - ela))) / denom
+    assert rel < 1e-3, f"elastic restore drifted: rel maxdiff={rel}"

@@ -235,6 +235,91 @@ def test_stop_fails_pending_requests(registry):
     assert engine.metrics.snapshot()["cancelled"] == 1
 
 
+def test_stop_releases_inflight_and_rejects_new_submits(registry):
+    """Every terminal path — completed, timeout, cancelled-at-stop,
+    rejected-at-push — must release its in-flight slot, and a stopped
+    engine must reject submits instead of stranding them in a queue
+    nobody pops."""
+    engine = ServeEngine(registry,
+                         EngineConfig(max_batch=32, max_queue=100,
+                                      max_inflight=100),
+                         autostart=False)
+    X = np.zeros((2, D), np.float32)
+    served = engine.submit(X)                    # completes after start
+    doomed = engine.submit(X, timeout=0.01)      # expires in queue
+    time.sleep(0.05)
+    engine.start()
+    assert served.result(30).shape == (2,)
+    with pytest.raises(RequestTimeout):
+        doomed.result(30)
+    stranded = engine.submit(X)          # races stop: served OR cancelled,
+    engine.stop()                        # but NEVER left hanging
+    try:
+        assert stranded.result(5).shape == (2,)
+    except EngineStopped:
+        pass
+    with pytest.raises(EngineStopped):           # post-stop submit: rejected
+        engine.submit(X)
+    assert engine.inflight == 0, \
+        "a terminal path leaked its in-flight slot"
+
+
+def test_stop_start_cycle_serves_again_without_spurious_queuefull(registry):
+    """Saturate to the in-flight cap, stop (cancelling everything), then
+    restart: the engine must serve a full load again. Before the lifecycle
+    fixes, slots leaked by stop()/failed dispatches survived the restart
+    as phantom occupancy and fresh traffic died with QueueFull."""
+    cap = 8
+    engine = ServeEngine(registry,
+                         EngineConfig(max_batch=32, max_queue=100,
+                                      max_inflight=cap),
+                         autostart=False)
+    X = np.zeros((2, D), np.float32)
+    # Saturate while the batcher is NOT running, so admission is
+    # deterministic: exactly cap slots fill, the next submit must be
+    # rejected, and stop() cancels every queued request.
+    futs = [engine.submit(X) for _ in range(cap)]
+    with pytest.raises(QueueFull):
+        engine.submit(X)
+    engine.stop()
+    for fut in futs:
+        with pytest.raises(EngineStopped):
+            fut.result(5)
+    assert engine.inflight == 0, "stop() leaked in-flight slots"
+    for cycle in range(3):
+        engine.start()
+        # a full complement of NEW requests must be admitted and served:
+        # phantom occupancy surviving the restart would reject these
+        # with QueueFull at admission.
+        again = [engine.submit(X) for _ in range(cap)]
+        for fut in again:
+            assert fut.result(30).shape == (2,)
+        engine.stop()
+        assert engine.inflight == 0, f"slots leaked in cycle {cycle}"
+    with pytest.raises(EngineStopped):
+        engine.submit(X)
+
+
+def test_dispatch_failure_releases_slots_and_keeps_batcher_alive(registry):
+    """A model unregistered between admission and dispatch fails ITS
+    requests (never the batcher thread) and releases their slots."""
+    reg = ModelRegistry(max_batch=32)
+    reg.add("bin", registry.get("bin").km)
+    engine = ServeEngine(reg, EngineConfig(max_batch=32, max_inflight=8),
+                         autostart=False)
+    X = np.zeros((2, D), np.float32)
+    doomed = engine.submit(X, model="bin")
+    reg.remove("bin")                    # lookup now fails inside _dispatch
+    engine.start()
+    with pytest.raises(KeyError):
+        doomed.result(30)
+    assert engine.metrics.snapshot()["failed"] == 1
+    reg.add("bin", registry.get("bin").km)
+    assert engine(X, model="bin").shape == (2,)   # batcher still alive
+    assert engine.inflight == 0
+    engine.stop()
+
+
 def test_submit_validates_shape(registry):
     with ServeEngine(registry, EngineConfig(max_batch=32)) as engine:
         with pytest.raises(ValueError, match="serves"):
@@ -260,3 +345,33 @@ def test_metrics_occupancy_and_percentiles():
     assert p["p50_ms"] == pytest.approx(1.0)
     assert p["p99_ms"] > 1.0
     assert percentiles([]) == {"p50_ms": 0.0, "p95_ms": 0.0, "p99_ms": 0.0}
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 99])
+def test_percentiles_tiny_samples_clamp_to_observations(n):
+    """On n < 100 samples the tail percentiles must be actual observations
+    (the "higher" order statistic), clamped in range — never interpolated
+    below the worst sample, never an out-of-range index. The failure this
+    pins down: with one slow outlier among fast requests, interpolation
+    reported a p99 ~equal to the median, silently erasing the tail a
+    smoke-scale SLO run exists to measure."""
+    slow, fast = 0.100, 0.001
+    samples = [fast] * (n - 1) + [slow]
+    p = percentiles(samples)
+    assert p["p99_ms"] == pytest.approx(slow * 1e3)   # the worst REAL sample
+    assert p["p95_ms"] in (pytest.approx(fast * 1e3), pytest.approx(slow * 1e3))
+    if n == 1:
+        # single sample: every percentile is that sample (no IndexError)
+        assert p["p50_ms"] == p["p95_ms"] == p["p99_ms"] \
+            == pytest.approx(slow * 1e3)
+    if n >= 3:
+        assert p["p50_ms"] == pytest.approx(fast * 1e3)
+    # percentile ordering invariant
+    assert p["p50_ms"] <= p["p95_ms"] <= p["p99_ms"]
+
+
+def test_percentiles_n2_tail_is_not_the_median():
+    # the regression shape: n=2 once reported p99 ≈ p50 via interpolation
+    p = percentiles([0.001, 0.100])
+    assert p["p99_ms"] == pytest.approx(100.0)
+    assert p["p95_ms"] == pytest.approx(100.0)
