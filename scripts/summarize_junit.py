@@ -6,6 +6,12 @@ and any single test exceeded it. The duration gate is how the fast gate
 stays fast: a test that belongs in the slow suite but forgot its
 ``@pytest.mark.slow`` fails verification instead of silently dragging the
 inner loop past the budget.
+
+For each failed test a detail block of the failure text is printed after
+the table. The multihost fleet tests embed per-process worker log tails
+in their FleetError messages (tests/multihost/rig.py), so a dead or hung
+subprocess worker's last words reach the verify.sh transcript instead of
+dying with the tmpdir.
 """
 from __future__ import annotations
 
@@ -33,12 +39,17 @@ def main() -> int:
     ap.add_argument("--max-seconds", type=float, default=60.0,
                     help="fail any single test over this; 0 disables "
                          "(the slow suite)")
+    ap.add_argument("--detail-lines", type=int, default=40,
+                    help="max failure-text lines printed per failed test "
+                         "(keeps subprocess log tails, drops traceback "
+                         "noise above them); 0 disables detail blocks")
     args = ap.parse_args()
 
     tree = ET.parse(args.junit_xml)
     per_file = defaultdict(lambda: {"pass": 0, "fail": 0, "skip": 0,
                                     "time": 0.0, "worst": ("", 0.0)})
     over_budget = []
+    details = []
     for case in tree.iter("testcase"):
         row = per_file[file_key(case)]
         t = float(case.get("time") or 0.0)
@@ -46,8 +57,13 @@ def main() -> int:
         name = case.get("name", "?")
         if t > row["worst"][1]:
             row["worst"] = (name, t)
-        if case.find("failure") is not None or case.find("error") is not None:
+        bad = case.find("failure")
+        if bad is None:
+            bad = case.find("error")
+        if bad is not None:
             row["fail"] += 1
+            text = (bad.text or bad.get("message") or "").rstrip()
+            details.append((file_key(case), name, text))
         elif case.find("skipped") is not None:
             row["skip"] += 1
         else:
@@ -69,6 +85,17 @@ def main() -> int:
 
     rc = 0
     if failed:
+        if args.detail_lines > 0:
+            for f, name, text in details:
+                print(f"---- failure detail: {f}::{name} ----",
+                      file=sys.stderr)
+                lines = text.splitlines()
+                if len(lines) > args.detail_lines:
+                    print(f"[... {len(lines) - args.detail_lines} lines "
+                          f"elided ...]", file=sys.stderr)
+                    lines = lines[-args.detail_lines:]
+                for ln in lines:
+                    print(ln, file=sys.stderr)
         print(f"SUMMARY: {failed} test(s) failed", file=sys.stderr)
         rc = 1
     for f, name, t in over_budget:

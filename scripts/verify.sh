@@ -14,10 +14,22 @@
 #                              benchmarks/serve_slo.py (continuous
 #                              batching vs request-at-a-time with
 #                              occupancy/latency asserts; appends
-#                              BENCH_serve.json), and
+#                              BENCH_serve.json),
 #                              benchmarks/ckpt_overhead.py (in-training
 #                              checkpoint step overhead; appends
-#                              BENCH_ckpt.json)
+#                              BENCH_ckpt.json), and
+#                              benchmarks/multihost_scaling.py (step time
+#                              + counted cross-host bytes/eval at 1/2/4
+#                              controller processes; appends
+#                              BENCH_multihost.json)
+#   scripts/verify.sh --multihost-smoke
+#                              fast gate + a real 2-process
+#                              jax.distributed round-trip through the
+#                              CLIs: scripts/launch_multihost.sh trains
+#                              over an exported shard directory, saves on
+#                              the primary, then a 2-process spanning
+#                              engine serves the checkpoint and verifies
+#                              every response against a local reference
 #
 # Every mode also runs the resume smoke: a real stream `kernel_train` run
 # is SIGKILLed after its first committed step file, `--resume`d to
@@ -25,8 +37,9 @@
 # checkpoint subsystem exists for, exercised through the actual CLIs.
 #
 # The fast gate is what you run in the inner loop (a couple of minutes);
-# the slow marker holds the 8-fake-device subprocess suites
-# (test_distributed, test_dryrun_path, test_decode_consistency).
+# the slow marker holds the fake-device subprocess suites
+# (test_distributed, test_dryrun_path, test_multihost, the decode
+# sections of test_models_smoke).
 #
 # The docs smoke extracts the first ```python block from README.md and
 # executes it, so the quickstart the repo advertises cannot silently rot.
@@ -60,6 +73,10 @@ run_suite() {   # run_suite <label> <marker-expr> <per-test-budget-seconds>
 bench_smoke=0
 if [[ "${1:-}" == "--bench-smoke" ]]; then
     bench_smoke=1
+fi
+multihost_smoke=0
+if [[ "${1:-}" == "--multihost-smoke" ]]; then
+    multihost_smoke=1
 fi
 
 if [[ "${1:-}" == "--full" ]]; then
@@ -157,6 +174,48 @@ if [[ "$bench_smoke" -eq 1 ]]; then
     python -m benchmarks.serve_slo --smoke || status=1
     echo "== bench smoke: checkpoint step-time overhead =="
     python -m benchmarks.ckpt_overhead --smoke || status=1
+    echo "== bench smoke: multi-controller scaling (1/2/4 processes) =="
+    python -m benchmarks.multihost_scaling --smoke || status=1
+fi
+
+if [[ "$multihost_smoke" -eq 1 ]]; then
+    echo "== multihost smoke: 2-process train -> save -> spanning serve =="
+    mh="$tmp/mh_smoke"
+    mkdir -p "$mh"
+    scripts/launch_multihost.sh -n 2 -d 2 -l "$mh/train_logs" -- \
+        --dataset covtype --scale 0.005 --plan stream --m 32 --max-iter 30 \
+        --data-dir "$mh/shards" --export-chunks --chunk-rows 512 \
+        --save "$mh/model.npz" > "$mh/train.out" 2>&1 || {
+        echo "multihost smoke: 2-process training failed" >&2
+        cat "$mh/train.out" >&2
+        status=1
+    }
+    if [[ "$status" -eq 0 ]]; then
+        grep -q "spanning server" "$mh/train.out" || {
+            echo "multihost smoke: training never ran the spanning eval" >&2
+            status=1
+        }
+        [[ -f "$mh/model.npz" ]] || {
+            echo "multihost smoke: primary saved no model" >&2
+            status=1
+        }
+    fi
+    if [[ "$status" -eq 0 ]]; then
+        scripts/launch_multihost.sh -n 2 -d 2 -m repro.launch.kernel_serve \
+            -l "$mh/serve_logs" -- --ckpt "$mh/model.npz" --requests 16 \
+            > "$mh/serve.out" 2>&1 || {
+            echo "multihost smoke: 2-process serving failed" >&2
+            cat "$mh/serve.out" >&2
+            status=1
+        }
+    fi
+    if [[ "$status" -eq 0 ]]; then
+        grep -q "spanning engine OK" "$mh/serve.out" || {
+            echo "multihost smoke: spanning engine verified no responses" >&2
+            cat "$mh/serve.out" >&2
+            status=1
+        }
+    fi
 fi
 
 echo "== docs smoke: README quickstart block =="

@@ -109,6 +109,10 @@ def validate(solver: str, plan: str) -> SolverEntry:
         raise ValueError(
             f"solver {solver!r} does not support execution plan {plan!r}; "
             f"valid plans for it: {sorted(entry.plans)}")
+    # under a live multi-controller topology only the rows-only streaming
+    # plans can span processes — fail at machine construction, not mid-fit
+    from repro.sharding import multihost
+    multihost.check_plan(plan)
     return entry
 
 

@@ -65,6 +65,12 @@ class CheckpointConfig:
     ``fit`` restore from the latest valid step in ``dir`` before training
     (raising ``FileNotFoundError`` if there is none). ``fsync`` controls
     the durability syncs of each commit (atomicity is kept either way).
+
+    ``write`` gates the commits themselves: multi-controller runs set it
+    on process 0 only — every process holds the identical replicated
+    snapshot, so P writers would race on the same step files for no
+    information gain — while ``resume`` stays usable on every process
+    (all hosts restore the same state from the shared directory).
     """
     dir: str
     interval: int = 10
@@ -72,6 +78,7 @@ class CheckpointConfig:
     background: bool = True
     resume: bool = False
     fsync: bool = True
+    write: bool = True
 
     def __post_init__(self):
         if self.interval < 1:
@@ -218,7 +225,7 @@ class TrainingCheckpointer:
         self._sync_seconds = 0.0
         self._last_step: Optional[int] = None
         self._writer: Optional[AsyncCheckpointWriter] = None
-        if cfg.background:
+        if cfg.background and cfg.write:
             self._writer = AsyncCheckpointWriter(self._commit)
 
     @property
@@ -241,6 +248,9 @@ class TrainingCheckpointer:
 
     def on_snapshot(self, snap: TronSnapshot) -> None:
         """The TRON drivers' callback: package and commit one snapshot."""
+        if not self.cfg.write:        # non-primary multi-controller process
+            self._last_step = snap.it
+            return
         tree = {**snap.to_arrays(), **self.arrays}
         md = dict(self.meta)
         if self.feeder is not None:

@@ -57,6 +57,7 @@ from repro.core.formulation import _colsum, _ct_v
 from repro.core.losses import Loss, get_loss
 from repro.core.nystrom import KernelSpec, gram
 from repro.core.tron import TronConfig, TronResult, tron, tron_host
+from repro.sharding import multihost
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,6 +139,14 @@ class _ChunkFeeder:
     (and the acceptance test) can observe the transfer reduction directly.
     When ``classes`` is given, integer label chunks are expanded on the
     host into (rows, K) one-vs-rest ±1 targets before transfer.
+
+    Multi-controller: when ``source.process_span`` is set, ``source.chunk``
+    yields only this host's block of each global chunk. The feeder then
+    pads to the per-host slot (``chunk_rows / num_processes`` rows) and
+    assembles the global device chunk from per-process blocks
+    (:func:`repro.sharding.multihost.put_row_sharded`) — per-host disk
+    reads, host RAM, and h2d transfer all drop to 1/P while the device
+    arrays (and thus the compiled closures) stay globally identical.
     """
 
     def __init__(self, source, chunk_rows: int, dtype, x_sh, y_sh, r_sh,
@@ -145,15 +154,19 @@ class _ChunkFeeder:
                  prefetch: int = 2):
         self.source = source
         self.cr = int(chunk_rows)
+        span = getattr(source, "process_span", None)
+        # per-host pad target: this host's slot of a global chunk
+        self.pad_rows = self.cr // (span[1] if span else 1)
         self.dtype = np.dtype(dtype)
         self.x_sh, self.y_sh, self.r_sh = x_sh, y_sh, r_sh
         self.classes = None if classes is None else np.asarray(classes)
         self.prefetch = int(prefetch)
-        # resident bytes per cached chunk: X (cr, d) + targets (cr[, K]) +
-        # mask (cr,) — the one-vs-rest expansion widens the target block,
-        # so the HBM budget must count K columns, not 1
+        # resident bytes per cached chunk (host-local): X (pad, d) +
+        # targets (pad[, K]) + mask (pad,) — the one-vs-rest expansion
+        # widens the target block, so the HBM budget must count K columns
         ncols = 1 if self.classes is None else len(self.classes)
-        chunk_bytes = self.cr * (source.d + ncols + 1) * self.dtype.itemsize
+        chunk_bytes = (self.pad_rows * (source.d + ncols + 1)
+                       * self.dtype.itemsize)
         if cache_chunks is None:
             cache_chunks = _DEV_CACHE_BYTES // max(chunk_bytes, 1)
         self.cache_chunks = max(0, min(int(cache_chunks), source.n_chunks))
@@ -206,20 +219,21 @@ class _ChunkFeeder:
             return Xc, yc, wc
         Xc, yc = self.source.chunk(i)
         rows = Xc.shape[0]
-        Xc = np.asarray(Xc, self.dtype)
-        if rows != self.cr:
+        pad = self.pad_rows
+        Xc = np.asarray(Xc, self.dtype).reshape(rows, self.source.d)
+        if rows != pad:
             Xc = np.concatenate(
-                [Xc, np.zeros((self.cr - rows, self.source.d), self.dtype)])
+                [Xc, np.zeros((pad - rows, self.source.d), self.dtype)])
             yc = np.concatenate(
-                [np.asarray(yc), np.zeros((self.cr - rows,),
+                [np.asarray(yc), np.zeros((pad - rows,),
                                           np.asarray(yc).dtype)])
         yc = self._targets(yc)
-        wc = np.zeros((self.cr,), self.dtype)
+        wc = np.zeros((pad,), self.dtype)
         wc[:rows] = 1.0
         # cache the mask/targets always (O(n) floats total, the same order
         # as y itself) and the padded X only for the ragged tail — caching
         # every X chunk would quietly pull the whole dataset into host RAM
-        self._host[i] = (Xc if rows != self.cr else None, yc, wc)
+        self._host[i] = (Xc if rows != pad else None, yc, wc)
         return Xc, yc, wc
 
     def _device_chunk(self, i, need_y: bool):
@@ -228,12 +242,16 @@ class _ChunkFeeder:
             Xd, yd, wd = hit
             return (Xd, yd, wd) if need_y else Xd
         Xc, yc, wc = self._host_chunk(i)
-        Xd = jax.device_put(Xc, self.x_sh)
+        # single-process this is a plain device_put; multi-process every
+        # host contributes its pad_rows block and receives the global
+        # (chunk_rows, ...) array — the compiled closures see identical
+        # shapes either way
+        Xd = multihost.put_row_sharded(self.x_sh, Xc)
         self.h2d_bytes += Xc.nbytes
         yd = wd = None
         if need_y or i < self.cache_chunks:
-            yd = jax.device_put(yc, self.y_sh)
-            wd = jax.device_put(wc, self.r_sh)
+            yd = multihost.put_row_sharded(self.y_sh, yc)
+            wd = multihost.put_row_sharded(self.r_sh, wc)
             self.h2d_bytes += yc.nbytes + wc.nbytes
         if i < self.cache_chunks:
             self._dev[i] = (Xd, yd, wd)
@@ -581,12 +599,27 @@ class DistributedNystrom:
                 "use model_axis=None")
         from repro.kernels.ops import otf_kmvp_fwd, otf_kmvp_t
         da = self.dist.data_axes
+        multihost.check_mesh_spans(self.mesh)
         dp = 1
         for ax in da:
             dp *= self.mesh.shape[ax]
         cr = -(-source.chunk_rows // dp) * dp
         if cr != source.chunk_rows:
             source = source.with_chunk_rows(cr)
+        # multi-controller: each process streams only its own partition.
+        # A pre-partitioned source (per-host shard dirs) must match the
+        # live topology; a shared source is split logically per host.
+        span = getattr(source, "process_span", None)
+        live = (multihost.process_index(), multihost.process_count())
+        if span is not None and span != live:
+            raise ValueError(
+                f"source is the partition for process {span[0]} of "
+                f"{span[1]} but this run is process {live[0]} of "
+                f"{live[1]} — open the partition dir matching this "
+                f"process (or re-export with save_partition_dirs)")
+        if span is None and live[1] > 1:
+            from repro.data.chunks import HostPartition
+            source = HostPartition(source, *live)
         kw = dict(kind=self.kernel.kind, sigma=self.kernel.sigma,
                   backend=self.dist.backend,
                   block_rows=self.dist.block_rows)
@@ -634,6 +667,18 @@ class DistributedNystrom:
             r_sh=NamedSharding(self.mesh, self.row_spec),
             classes=classes, cache_chunks=cache_chunks, prefetch=prefetch)
 
+        # Multi-controller: every process must hit the wire with the SAME
+        # collective sequence. XLA-CPU dispatches independent executions
+        # concurrently, so two chunks' psums can interleave differently on
+        # different hosts and corrupt the gloo streams (observed as
+        # preamble-length aborts). Blocking on each chunk's outputs before
+        # launching the next pins the order; single-process runs keep the
+        # fully-async pipeline.
+        if multihost.active():
+            _ordered = jax.block_until_ready
+        else:
+            _ordered = lambda out: out
+
         def fgrad(beta):
             beta_h = np.asarray(beta, dtype)
             beta_dev = jnp.asarray(beta_h)
@@ -641,7 +686,8 @@ class DistributedNystrom:
                 Wbeta = wv_eval(basis_dev, beta_dev)
                 parts, aux = [], []
                 for Xc, yc, wc in feeder.chunks(need_y=True):
-                    lsum, gc, Dc = fg_eval(Xc, yc, wc, basis_dev, beta_dev)
+                    lsum, gc, Dc = _ordered(
+                        fg_eval(Xc, yc, wc, basis_dev, beta_dev))
                     parts.append((lsum, gc))
                     aux.append(Dc)
                 Wbeta = np.asarray(Wbeta, np.float64)
@@ -657,7 +703,7 @@ class DistributedNystrom:
             d_dev = jnp.asarray(np.asarray(d, dtype))
             with self.mesh:
                 Wd = wv_eval(basis_dev, d_dev)
-                parts = [hd_eval(Xc, Dc, basis_dev, d_dev)
+                parts = [_ordered(hd_eval(Xc, Dc, basis_dev, d_dev))
                          for Xc, Dc in zip(feeder.chunks(need_y=False), aux)]
                 h = self.lam * np.asarray(Wd, np.float64)
                 for hc in parts:
@@ -736,9 +782,61 @@ class DistributedNystrom:
         return fgrad, hessd
 
     # ------------------------------------------------------------------ solve
+    def _as_global_rows(self, arr):
+        """Row-shard a host array over the spanning mesh (each process
+        contributes its contiguous block of rows it already holds in
+        full); pass through arrays that are already process-spanning."""
+        if isinstance(arr, jax.Array) and not arr.is_fully_addressable:
+            return arr
+        return multihost.shard_rows_from_replicated(
+            np.asarray(arr), self.mesh, self.dist.data_axes)
+
+    def _as_replicated(self, arr):
+        if isinstance(arr, jax.Array) and not arr.is_fully_addressable:
+            return arr
+        return multihost.replicate(np.asarray(arr), self.mesh)
+
     def solve(self, X, y, basis, beta0=None,
               cfg: TronConfig = TronConfig(), checkpoint=None,
               state0=None) -> TronResult:
+        if multihost.active():
+            # in-memory fit on a process-spanning mesh: X/y become global
+            # row-sharded arrays (this process supplies only its block),
+            # basis/beta replicas — after which the closures below compile
+            # to the exact single-process program, psums included
+            multihost.check_mesh_spans(self.mesh)
+            X = self._as_global_rows(X)
+            y = self._as_global_rows(y)
+            basis = self._as_replicated(basis)
+            if beta0 is not None:
+                beta0 = self._as_replicated(beta0)
+        if multihost.active():
+            if not self.dist.fused or self.dist.materialize:
+                raise ValueError(
+                    "multi-controller in-memory fits route through the "
+                    "fused rows-only closures (plan 'otf_shard'); other "
+                    "in-memory plans are rejected at machine construction")
+            if checkpoint is not None or state0 is not None:
+                raise ValueError(
+                    "checkpointed multi-controller fits use plan 'stream' "
+                    "(the paper's deployment shape — tron_host snapshots "
+                    "between passes); the in-memory 'otf_shard' traced "
+                    "driver cannot hand process-spanning state to the host "
+                    "mid-trace")
+            if beta0 is None:
+                beta0 = self._as_replicated(
+                    np.zeros((basis.shape[0],), np.dtype(X.dtype)))
+
+            # non-addressable arrays may not be *closed over* inside jit —
+            # build the closures on the traced arguments instead
+            @jax.jit
+            def _run_global(X, y, basis, beta0):
+                fgrad, hessd = self.make_fused_closures(X, y, basis)
+                return tron(fgrad, hessd, beta0, cfg)
+
+            with self.mesh:
+                return _run_global(X, y, basis, beta0)
+
         if self.dist.materialize:
             C, W = self.precompute(X, basis)
             fgrad, hessd = self.make_closures(C, W, y)

@@ -103,6 +103,48 @@ def max_intermediate_bytes(fn: Callable, *args, **kwargs) -> int:
     return max_intermediate_bytes_jaxpr(closed.jaxpr)
 
 
+# Primitives whose operands cross device (and, on a process-spanning
+# mesh, host) boundaries. Payload accounting uses the *outvar* avals:
+# inside a shard_map body those are per-shard, so on a 1-axis data mesh
+# the count is exactly the bytes each host contributes to the AllReduce.
+COLLECTIVE_PRIMITIVES = frozenset({
+    "psum", "psum2", "psum_invariant", "all_reduce",
+    "all_gather", "all_gather_invariant", "reduce_scatter",
+    "all_to_all", "ppermute", "pmax", "pmin",
+})
+
+
+def collective_payload_bytes_jaxpr(jaxpr) -> int:
+    """Total bytes of collective-op payloads in ``jaxpr`` (recursive).
+
+    Sums the outvar sizes of every :data:`COLLECTIVE_PRIMITIVES` equation,
+    walking pjit / scan / while / cond / shard_map sub-jaxprs the same way
+    as :func:`max_intermediate_elems_jaxpr`. For the training closures the
+    result is the measured cross-host traffic of one evaluation — the
+    quantity the O(m)-per-eval communication contract bounds. Equations
+    under ``scan``/``while`` count once; the caller multiplies by trip
+    count if a per-run total is wanted (the per-eval contract does not).
+    """
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in COLLECTIVE_PRIMITIVES:
+            for var in eqn.outvars:
+                total += _aval_bytes(var)
+        if "pallas" in eqn.primitive.name:
+            continue
+        for sub in _subjaxprs(eqn.params):
+            total += collective_payload_bytes_jaxpr(sub)
+    return total
+
+
+def collective_payload_bytes(fn: Callable, *args, **kwargs) -> int:
+    """Trace ``fn(*args, **kwargs)`` and return the summed payload bytes
+    of every collective primitive — measured from the program, so tests
+    assert communication volume instead of trusting a docstring."""
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return collective_payload_bytes_jaxpr(closed.jaxpr)
+
+
 def fused_contract_limit(rows: int, m: int, k: int = 1) -> int:
     """Element limit for the fused-kmvp memory contract with ``k`` RHS.
 

@@ -41,6 +41,11 @@ class ChunkSource:
     inspects metadata (``X.shape[0]``, ``X.dtype``).
     """
 
+    # (process_id, num_processes) when this source is one host's view of a
+    # multi-controller dataset partition; None for ordinary local sources.
+    # The stream feeder keys on this to pad/transfer per-host blocks.
+    process_span: Optional[Tuple[int, int]] = None
+
     def __init__(self, n: int, d: int, dtype, chunk_rows: Optional[int]):
         if n <= 0 or d <= 0:
             raise ValueError(f"empty dataset: n={n}, d={d}")
@@ -325,6 +330,229 @@ def as_chunk_source(X, y=None, chunk_rows: Optional[int] = None,
     if y is None:
         raise ValueError("as_chunk_source needs y when X is an array")
     return ArrayChunkSource(X, y, chunk_rows)
+
+
+# --------------------------------------------------------------- multihost
+def _span_block(gl: int, gh: int, chunk_rows: int,
+                process_id: int, num_processes: int) -> Tuple[int, int]:
+    """Global row range of one host's block of chunk ``[gl, gh)``.
+
+    The chunk is cut into ``num_processes`` equal slots of
+    ``chunk_rows / num_processes`` rows; host p owns slot p, clipped to the
+    chunk's real rows. Because real rows fill the chunk from the front,
+    every host's block is a *prefix* of its slot — so per-host blocks,
+    each zero-padded to the slot size and concatenated in process order,
+    reproduce the zero-padded global chunk exactly. That identity is what
+    makes multi-controller streaming bitwise-comparable to single-process
+    runs (same padded global array enters the same compiled psum body).
+    """
+    lcr = chunk_rows // num_processes
+    a = min(gl + process_id * lcr, gh)
+    return a, min(a + lcr, gh)
+
+
+class HostPartition(ChunkSource):
+    """One host's view of a *shared* chunked dataset (NFS-dir deployment).
+
+    Reports the global ``n``/``chunk_rows`` geometry — the solver's
+    iteration structure must be identical on every process — but
+    :meth:`chunk` reads only this host's block of each global chunk
+    (see :func:`_span_block`), so per-host disk traffic is 1/P of the
+    dataset per TRON pass. Row gathers (:meth:`take_rows`, basis
+    selection) and label scans stay global: the base source can read any
+    row of the shared directory. For physically separate per-host
+    directories use :func:`save_partition_dirs` / :func:`open_partition`
+    instead.
+    """
+
+    def __init__(self, base: ChunkSource, process_id: int,
+                 num_processes: int):
+        if base.chunk_rows % num_processes:
+            raise ValueError(
+                f"chunk_rows={base.chunk_rows} must be a multiple of "
+                f"num_processes={num_processes} so every host streams an "
+                f"equal block per chunk; round it up first "
+                f"(with_chunk_rows)")
+        if getattr(base, "process_span", None) is not None:
+            raise ValueError("base source is already a host partition")
+        super().__init__(base.n, base.d, base.dtype, base.chunk_rows)
+        self.base = base
+        self.process_span = (int(process_id), int(num_processes))
+
+    @property
+    def local_chunk_rows(self) -> int:
+        """Rows each host contributes per global chunk (the pad target)."""
+        return self.chunk_rows // self.process_span[1]
+
+    def chunk(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
+        """This host's block of global chunk ``i`` — possibly short (the
+        tail chunk) or empty (tail shorter than this host's slot)."""
+        if not 0 <= i < self.n_chunks:
+            raise IndexError(f"chunk {i} out of range [0, {self.n_chunks})")
+        gl = i * self.chunk_rows
+        a, b = _span_block(gl, min(self.n, gl + self.chunk_rows),
+                           self.chunk_rows, *self.process_span)
+        if a >= b:
+            return (np.empty((0, self.d), self.dtype),
+                    np.empty((0,), np.int64))
+        return self.base._rows(a, b)
+
+    def _rows(self, lo, hi):
+        raise NotImplementedError(
+            "HostPartition addresses data by chunk, not row range")
+
+    def take_rows(self, idx):
+        return self.base.take_rows(idx)       # shared dir: global reads OK
+
+    def iter_y(self):
+        return self.base.iter_y()             # label scans stay global
+
+    def with_chunk_rows(self, chunk_rows):
+        return HostPartition(self.base.with_chunk_rows(chunk_rows),
+                             *self.process_span)
+
+
+class PartitionChunkSource(ChunkSource):
+    """One host's *physically separate* partition directory.
+
+    Layout written by :func:`save_partition_dirs`: shard ``i`` of
+    ``part-p-of-P/`` holds exactly host p's block of global chunk ``i``
+    (the :func:`_span_block` rows — the paper's "each node owns its data
+    partition" deployment, with no shared filesystem assumed). The source
+    reports the *global* geometry recorded in ``partition.json`` so every
+    process runs the same iteration structure; only local bytes exist on
+    this host's disk.
+
+    Cross-host reads are impossible by construction, so the two global
+    operations delegate differently: ``unique_labels`` returns the class
+    inventory recorded at save time, and ``take_rows`` fills the rows this
+    host owns and sums the buffer across processes (every global row is
+    owned by exactly one host; all processes call with identical indices —
+    basis selection under a shared seed — making the collective lockstep).
+    """
+
+    def __init__(self, part_dir, mmap: bool = True):
+        part_dir = Path(part_dir)
+        meta_path = part_dir / "partition.json"
+        if not meta_path.exists():
+            raise FileNotFoundError(
+                f"{part_dir}: no partition.json — not a partition dir "
+                f"(write one with repro.data.chunks.save_partition_dirs)")
+        meta = json.loads(meta_path.read_text())
+        self.meta = meta
+        self.local = MmapChunkSource(part_dir, chunk_rows=None, mmap=mmap)
+        super().__init__(meta["n"], meta["d"], np.dtype(meta["dtype"]),
+                         meta["chunk_rows"])
+        self.process_span = (int(meta["process_id"]),
+                             int(meta["num_processes"]))
+        # shard i <-> global chunk i: the layout invariant everything here
+        # relies on (local shards may be ragged, offsets handle that)
+        if len(self.local._paths) != self.n_chunks:
+            raise ValueError(
+                f"{part_dir}: {len(self.local._paths)} shards but the "
+                f"global geometry implies {self.n_chunks} chunks — "
+                f"partition dir does not match its partition.json")
+
+    @property
+    def local_chunk_rows(self) -> int:
+        return self.chunk_rows // self.process_span[1]
+
+    def chunk(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
+        if not 0 <= i < self.n_chunks:
+            raise IndexError(f"chunk {i} out of range [0, {self.n_chunks})")
+        lo = int(self.local._offsets[i])
+        hi = int(self.local._offsets[i + 1])
+        if lo >= hi:
+            return (np.empty((0, self.d), self.dtype),
+                    np.empty((0,), np.int64))
+        return self.local._rows(lo, hi)
+
+    def _rows(self, lo, hi):
+        raise NotImplementedError(
+            "PartitionChunkSource addresses data by chunk, not row range")
+
+    def unique_labels(self):
+        return np.asarray(self.meta["classes"])
+
+    def iter_y(self):
+        return self.local.iter_y()            # local labels only
+
+    def take_rows(self, idx):
+        from repro.sharding import multihost
+        idx = np.asarray(idx, np.int64)
+        pid, nproc = self.process_span
+        out = np.zeros((idx.shape[0], self.d), self.dtype)
+        for j, g in enumerate(idx):
+            g = int(g)
+            c, off = divmod(g, self.chunk_rows)
+            a, b = _span_block(c * self.chunk_rows,
+                               min(self.n, (c + 1) * self.chunk_rows),
+                               self.chunk_rows, pid, nproc)
+            if a <= g < b:
+                lo = int(self.local._offsets[c])
+                out[j] = self.local._rows(lo + (g - a), lo + (g - a) + 1)[0]
+        return multihost.sum_across_processes(out)
+
+    def with_chunk_rows(self, chunk_rows):
+        if int(chunk_rows) == self.chunk_rows:
+            return self
+        raise ValueError(
+            f"a partition dir is physically laid out at "
+            f"chunk_rows={self.chunk_rows} (one shard per global chunk) "
+            f"and cannot be re-chunked to {chunk_rows}; re-export with "
+            f"save_partition_dirs(chunk_rows=...) — pick a multiple of "
+            f"the mesh's data extent so the solver needs no rounding")
+
+
+def save_partition_dirs(root, X, y, num_processes: int,
+                        chunk_rows: int) -> list:
+    """Split (X, y) into per-host partition directories.
+
+    Writes ``root/part-{p:05d}-of-{P:05d}/`` for each host: shard ``i``
+    is host p's :func:`_span_block` of global chunk ``i`` plus a
+    ``partition.json`` recording the global geometry (and the class
+    inventory, so one-vs-rest class discovery needs no cross-host label
+    scan). Returns the directory paths in process order.
+    """
+    X = np.asarray(X)
+    y = np.asarray(y)
+    if y.shape != (X.shape[0],):
+        raise ValueError(f"y shape {y.shape} does not match X rows")
+    n = X.shape[0]
+    chunk_rows = int(chunk_rows)
+    if chunk_rows % num_processes:
+        raise ValueError(
+            f"chunk_rows={chunk_rows} must be a multiple of "
+            f"num_processes={num_processes}")
+    root = Path(root)
+    n_chunks = -(-n // chunk_rows)
+    classes = np.unique(y)
+    dirs = []
+    for p in range(num_processes):
+        part = root / f"part-{p:05d}-of-{num_processes:05d}"
+        part.mkdir(parents=True, exist_ok=True)
+        for i in range(n_chunks):
+            gl = i * chunk_rows
+            a, b = _span_block(gl, min(n, gl + chunk_rows), chunk_rows,
+                               p, num_processes)
+            np.save(part / f"X_{i:05d}.npy", X[a:b])
+            np.save(part / f"y_{i:05d}.npy", y[a:b])
+        (part / "partition.json").write_text(json.dumps(
+            {"n": int(n), "d": int(X.shape[1]), "dtype": str(X.dtype),
+             "chunk_rows": chunk_rows, "num_processes": int(num_processes),
+             "process_id": p, "classes": classes.tolist()}, indent=2))
+        dirs.append(part)
+    return dirs
+
+
+def open_partition(part_dir, mmap: bool = True) -> PartitionChunkSource:
+    """Open one host's partition directory (see :func:`save_partition_dirs`)."""
+    return PartitionChunkSource(part_dir, mmap=mmap)
+
+
+def is_partition_dir(data_dir) -> bool:
+    """True when ``data_dir`` is a per-host partition directory."""
+    return (Path(data_dir) / "partition.json").exists()
 
 
 def ovr_targets(y, classes, dtype=np.float32) -> np.ndarray:

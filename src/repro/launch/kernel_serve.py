@@ -50,6 +50,7 @@ from repro.launch.cli import plan_choices, registry_epilog
 from repro.serve import (EngineConfig, ModelRegistry, ServeEngine,
                          baseline_target, engine_target, make_workload,
                          percentiles, run_load, serving_plan)
+from repro.sharding import multihost
 
 # back-compat aliases: tests and older scripts import these names from here
 _bucket = bucket_rows
@@ -235,6 +236,57 @@ def _selftest():
           f"occupancy {cstats['occupancy']:.2f})")
 
 
+def serve_multihost(path: str, *, requests: int, max_batch: int,
+                    seed: int = 0):
+    """One engine fronting the process-spanning mesh (multi-controller).
+
+    Every process loads the same checkpoint and holds its 1/P block of the
+    basis/beta rows; process 0 drives the request loop and verifies every
+    served batch against a dense single-device reference at 1e-4 rel,
+    followers run the lockstep :meth:`SpanningServer.follow` loop until
+    released. Returns (served rounds, worst relative diff) — followers
+    report (rounds, None).
+    """
+    from repro.kernels.ops import otf_kmvp_fwd
+    from repro.sharding.multihost import SpanningServer
+    km = KernelMachine.load(path)
+    st = km.state_
+    basis = np.asarray(st["basis"])
+    beta = np.asarray(st["beta"])
+    server = SpanningServer(basis, beta, km.config.kernel,
+                            multihost.spanning_mesh(),
+                            backend=km.config.backend, max_batch=max_batch)
+    nb = server.collective_payload_bytes()
+    if not multihost.is_primary():
+        return server.follow(), None
+    print(f"[load ] {path} solver={km.config.solver} "
+          f"plan={km.config.plan} m={basis.shape[0]} d={basis.shape[1]} "
+          f"K={beta.shape[1] if beta.ndim == 2 else 1} spanning "
+          f"{multihost.process_count()} processes")
+    rng = np.random.default_rng(seed)
+    worst, rows = 0.0, 0
+    for _ in range(requests):
+        b = int(rng.integers(1, max_batch + 1))
+        Xq = rng.standard_normal((b, server.d)).astype(server.dtype)
+        o = np.asarray(server.margins(Xq))
+        ref = np.asarray(otf_kmvp_fwd(
+            jnp.asarray(Xq), jnp.asarray(basis), jnp.asarray(beta),
+            kind=km.config.kernel.kind, sigma=km.config.kernel.sigma,
+            backend="jnp", block_rows=None))
+        scale = max(float(np.max(np.abs(ref))), 1e-12)
+        worst = max(worst, float(np.max(np.abs(o - ref))) / scale)
+        rows += b
+    server.stop()
+    if worst >= 1e-4:
+        raise AssertionError(
+            f"spanning engine served margins diverged from the dense "
+            f"reference: max rel diff {worst:.2e} >= 1e-4")
+    print(f"[serve] spanning engine OK: processes="
+          f"{multihost.process_count()} requests={requests} rows={rows} "
+          f"max_rel_diff={worst:.2e} xhost_bytes/eval={nb}")
+    return requests, worst
+
+
 def main():
     ap = argparse.ArgumentParser(
         description=__doc__.splitlines()[0],
@@ -267,7 +319,26 @@ def main():
     ap.add_argument("--selftest", action="store_true",
                     help="train->save->load->serve->verify (synchronous + "
                          "concurrent engine), tiny sizes")
+    ap.add_argument("--coordinator", default=None, metavar="HOST:PORT",
+                    help="process 0's coordination address: serve one "
+                         "machine from an engine spanning every process")
+    ap.add_argument("--num-processes", type=int, default=1,
+                    help="total controller processes (hosts) in this run")
+    ap.add_argument("--process-id", type=int, default=0,
+                    help="this host's index in [0, --num-processes)")
     args = ap.parse_args()
+
+    if args.num_processes > 1 and not args.coordinator:
+        ap.error("--num-processes > 1 needs --coordinator host:port")
+    multihost.init(args.coordinator, args.num_processes, args.process_id)
+    if multihost.active():
+        if args.selftest or args.serial:
+            ap.error("--selftest/--serial are single-process modes")
+        if not args.ckpt or len(args.ckpt) != 1:
+            ap.error("multi-controller serving fronts exactly one --ckpt")
+        serve_multihost(args.ckpt[0], requests=args.requests,
+                        max_batch=args.max_batch)
+        return
 
     if args.selftest:
         _selftest()

@@ -15,6 +15,13 @@ synthetic dataset there first, so this one line is a full demo):
   PYTHONPATH=src python -m repro.launch.kernel_train --plan stream \
       --data-dir /tmp/covtype_shards --export-chunks --chunk-rows 8192
 
+Multi-host (multi-controller): run the SAME command once per host with
+``--coordinator host:port --num-processes P --process-id i`` — the mesh
+then spans every process's devices, each host streams only its own
+partition of the data, and process 0 owns checkpoints/saves/eval output.
+``scripts/launch_multihost.sh`` wraps the local N-process simulation
+(fake devices per process via ``--xla_force_host_platform_device_count``).
+
 Any registered solver x plan combination is reachable from the CLI; the
 ``--solver``/``--plan`` choices below are read from the live registries in
 ``repro.api.registry``, so a newly registered entry shows up in ``--help``
@@ -28,6 +35,7 @@ import time
 from pathlib import Path
 
 import jax
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.api import (KernelMachine, MachineConfig, StreamConfig,
@@ -35,8 +43,10 @@ from repro.api import (KernelMachine, MachineConfig, StreamConfig,
 from repro.core import KernelSpec, TronConfig, select_basis
 from repro.core.compat import make_mesh
 from repro.data import PAPER_DATASETS, make_dataset, make_multiclass
-from repro.data.chunks import MmapChunkSource, save_chunks
+from repro.data.chunks import (MmapChunkSource, is_partition_dir,
+                               open_partition, save_chunks)
 from repro.launch.cli import plan_choices, registry_epilog, solver_choices
+from repro.sharding import multihost
 
 
 def main():
@@ -92,14 +102,36 @@ def main():
                          "directory) and continue training from it — "
                          "elastically: the device count may differ from the "
                          "run that wrote it")
+    ap.add_argument("--coordinator", default=None, metavar="HOST:PORT",
+                    help="process 0's coordination address for "
+                         "multi-controller runs (same value on every host)")
+    ap.add_argument("--num-processes", type=int, default=1,
+                    help="total controller processes (hosts) in this run")
+    ap.add_argument("--process-id", type=int, default=0,
+                    help="this host's index in [0, --num-processes)")
     args = ap.parse_args()
 
-    if args.mesh:
+    if args.num_processes > 1 and not args.coordinator:
+        ap.error("--num-processes > 1 needs --coordinator host:port")
+    multihost.init(args.coordinator, args.num_processes, args.process_id)
+    # every process runs the same program; process 0 owns the console
+    say = print if multihost.is_primary() else (lambda *a, **k: None)
+
+    if multihost.active():
+        if args.mesh:
+            ap.error("--mesh conflicts with multi-controller runs: the "
+                     "mesh always spans every process's devices")
+        if args.strategy == "kmeans":
+            ap.error("--basis kmeans is not routed multi-controller; use "
+                     "--basis random (identical on every host)")
+        mesh = multihost.spanning_mesh()
+    elif args.mesh:
         shape = tuple(int(v) for v in args.mesh.split(","))
         names = ("data", "model")[: len(shape)]
+        mesh = make_mesh(shape, names)
     else:
         shape, names = (len(jax.devices()),), ("data",)
-    mesh = make_mesh(shape, names)
+        mesh = make_mesh(shape, names)
     model_axis = "model" if "model" in mesh.shape else None
     needs_basis = get_solver(args.solver).needs_basis
     if args.data_dir and args.plan != "stream":
@@ -124,17 +156,19 @@ def main():
             dir=ckpt_dir,
             interval=args.ckpt_interval if args.ckpt_interval > 0 else 10,
             keep=args.ckpt_keep, background=not args.ckpt_sync,
-            resume=args.resume is not None)
+            resume=args.resume is not None,
+            write=multihost.is_primary())
         if ckpt.resume:
             rs = load_latest(ckpt.dir)   # fail fast, and announce the step
-            print(f"[ckpt ] resuming from step {rs.step} ({rs.path})")
+            say(f"[ckpt ] resuming from step {rs.step} ({rs.path})")
         else:
             import os
-            os.makedirs(ckpt.dir, exist_ok=True)
-            print(f"[ckpt ] step files -> {ckpt.dir} "
-                  f"every {ckpt.interval} iters "
-                  f"({'sync' if args.ckpt_sync else 'async'}, "
-                  f"keep={ckpt.keep})")
+            if multihost.is_primary():
+                os.makedirs(ckpt.dir, exist_ok=True)
+            say(f"[ckpt ] step files -> {ckpt.dir} "
+                f"every {ckpt.interval} iters "
+                f"({'sync' if args.ckpt_sync else 'async'}, "
+                f"keep={ckpt.keep})")
 
     def load_data(key):
         """(X, y, Xt, yt, spec): the paper's binary simulation, or K-class
@@ -170,29 +204,43 @@ def main():
         dd = Path(args.data_dir)
         if dd.is_dir() and (any(dd.glob("X_*.npy"))
                             or any(dd.glob("shard_*.npz"))):
-            print(f"[export] {args.data_dir} already holds shards — "
-                  f"training on THOSE, not a fresh --dataset {args.dataset} "
-                  f"--scale {args.scale} export (delete the directory to "
-                  f"re-export)")
-        else:
+            say(f"[export] {args.data_dir} already holds shards — "
+                f"training on THOSE, not a fresh --dataset {args.dataset} "
+                f"--scale {args.scale} export (delete the directory to "
+                f"re-export)")
+        elif multihost.is_primary():
             Xe, ye, _, _, _ = load_data(jax.random.PRNGKey(0))
             save_chunks(args.data_dir, Xe, ye)
-            print(f"[export] wrote {Xe.shape[0]} rows to {args.data_dir} "
-                  f"({time.time() - t0:.2f}s)")
+            say(f"[export] wrote {Xe.shape[0]} rows to {args.data_dir} "
+                f"({time.time() - t0:.2f}s)")
+        multihost.sync("export-chunks")   # shards visible before any reader
     if args.data_dir:
-        X = MmapChunkSource(args.data_dir, chunk_rows=args.chunk_rows)
-        print(f"[step1] streaming {args.data_dir}: n={X.n} d={X.d} "
-              f"chunks={X.n_chunks} ({time.time() - t0:.2f}s)")
+        if is_partition_dir(args.data_dir):
+            # this host's slice of a save_partition_dirs layout
+            X = open_partition(args.data_dir)
+            if args.chunk_rows:
+                X = X.with_chunk_rows(args.chunk_rows)
+            pid, nproc = X.process_span
+            say(f"[step1] partition {args.data_dir}: process {pid}/{nproc} "
+                f"of n={X.n} d={X.d} chunks={X.n_chunks} "
+                f"({time.time() - t0:.2f}s)")
+        else:
+            # shared directory: multi-controller runs partition each chunk
+            # row-wise per host inside make_stream_closures
+            X = MmapChunkSource(args.data_dir, chunk_rows=args.chunk_rows)
+            say(f"[step1] streaming {args.data_dir}: n={X.n} d={X.d} "
+                f"chunks={X.n_chunks} ({time.time() - t0:.2f}s)")
     else:
         X, y, Xt, yt, spec = load_data(jax.random.PRNGKey(0))
-        print(f"[step1] loaded {args.dataset}: n={X.shape[0]} d={X.shape[1]} "
-              f"classes={args.classes} ({time.time() - t0:.2f}s)")
+        say(f"[step1] loaded {args.dataset}: n={X.shape[0]} d={X.shape[1]} "
+            f"classes={args.classes} ({time.time() - t0:.2f}s)")
     lam = args.lam if args.lam is not None else max(spec.lam * args.scale, 1e-4)
     sigma = args.sigma if args.sigma is not None else max(spec.sigma, 1.0)
 
     if args.data_dir:
         Xs, ys = X, None           # plan 'stream' shards chunk by chunk
-        m = args.m
+        n_dp = mesh.shape["data"]
+        m = (args.m // n_dp) * n_dp if multihost.active() else args.m
     else:
         # keep shard sizes divisible for the in-memory distributed plans
         n_dp = mesh.shape["data"]
@@ -200,18 +248,26 @@ def main():
         per = max(n_dp * mesh.shape.get("model", 1), 1)
         m = (args.m // per) * per
         X, y = X[:n], y[:n]
-        Xs = jax.device_put(X, NamedSharding(mesh, P(("data",), None)))
-        ys = jax.device_put(y, NamedSharding(mesh, P(("data",))))
+        if multihost.active():
+            # leave X/y as host arrays: fit shards them globally, keeping
+            # only this process's row block on its devices
+            Xs, ys = np.asarray(X), np.asarray(y)
+        else:
+            Xs = jax.device_put(X, NamedSharding(mesh, P(("data",), None)))
+            ys = jax.device_put(y, NamedSharding(mesh, P(("data",))))
 
     basis = None
-    if needs_basis and not args.data_dir:
+    if needs_basis and not args.data_dir and not multihost.active():
         t0 = time.time()
         basis = select_basis(jax.random.PRNGKey(1), Xs, m,
                              strategy=args.strategy, mesh=mesh,
                              data_axes=("data",))
         basis.block_until_ready()
-        print(f"[step2] basis: m={m} strategy={args.strategy} "
-              f"({time.time() - t0:.2f}s)")
+        say(f"[step2] basis: m={m} strategy={args.strategy} "
+            f"({time.time() - t0:.2f}s)")
+    elif needs_basis and multihost.active() and not args.data_dir:
+        say(f"[step2] basis: m={m} sampled in-fit (deterministic on every "
+            f"host)")
 
     km = KernelMachine(build_config(lam, sigma, m), mesh=mesh)
 
@@ -220,25 +276,69 @@ def main():
            checkpoint=ckpt)
     jax.block_until_ready(km.state_["beta"])
     r = km.result_
-    print(f"[step3+4] {r.solver}/{r.plan}: f={r.f:.4f} iters={r.n_iter} "
-          f"fg={r.n_fg} hd={r.n_hd} converged={r.converged} "
-          f"({time.time() - t0:.2f}s)")
+    say(f"[step3+4] {r.solver}/{r.plan}: f={r.f:.4f} iters={r.n_iter} "
+        f"fg={r.n_fg} hd={r.n_hd} converged={r.converged} "
+        f"({time.time() - t0:.2f}s)")
     if ckpt is not None:
         cs = r.extras["ckpt"]
-        print(f"[ckpt ] wrote {cs['snapshots_written']} step files "
-              f"({cs['bytes_written']} bytes, {cs['write_seconds']:.3f}s "
-              f"{'sync' if args.ckpt_sync else 'async'}, "
-              f"dropped={cs['snapshots_dropped']}, last_step={cs['last_step']}"
-              f", errors={cs['errors']})")
+        say(f"[ckpt ] wrote {cs['snapshots_written']} step files "
+            f"({cs['bytes_written']} bytes, {cs['write_seconds']:.3f}s "
+            f"{'sync' if args.ckpt_sync else 'async'}, "
+            f"dropped={cs['snapshots_dropped']}, last_step={cs['last_step']}"
+            f", errors={cs['errors']})")
 
-    if args.data_dir:
+    if multihost.active():
+        _eval_multihost(km, X, y, mesh, args, say)
+    elif args.data_dir:
         Xh, yh = X.chunk(0)        # held-in sample; no synthetic test split
-        print(f"[eval ] train_acc(chunk0)={km.score(Xh, yh):.4f}")
+        say(f"[eval ] train_acc(chunk0)={km.score(Xh, yh):.4f}")
     else:
-        print(f"[eval ] train_acc={km.score(X, y):.4f} "
-              f"test_acc={km.score(Xt, yt):.4f}")
+        say(f"[eval ] train_acc={km.score(X, y):.4f} "
+            f"test_acc={km.score(Xt, yt):.4f}")
     if args.save:
-        print(f"[save ] {km.save(args.save)}")
+        if multihost.is_primary():
+            print(f"[save ] {km.save(args.save)}")
+        multihost.sync("save")     # checkpoint durable before anyone exits
+    multihost.sync("done")
+
+
+def _eval_multihost(km, X, y, mesh, args, say) -> None:
+    """Score a held-in sample through the process-spanning serving arm.
+
+    The decider plans row-shard their outputs over local devices and so do
+    not span processes; the :class:`SpanningServer` does — and doubles as
+    a smoke test of the serving arm right after training. Every process
+    enters the lockstep rounds with the identical (broadcast) batch, so no
+    follower loop is needed.
+    """
+    from repro.sharding.multihost import SpanningServer
+    st = km.state_
+    if args.data_dir:
+        Xh, yh = X.chunk(0)        # this host's block of global chunk 0
+    else:
+        Xh, yh = X, y
+    Xh = np.asarray(Xh)
+    yh = np.asarray(yh)
+    ne = int(multihost.broadcast_from_primary(
+        np.asarray([min(Xh.shape[0], 256)], np.int64))[0])
+    xb = np.zeros((ne, Xh.shape[1]), Xh.dtype)
+    xb[:min(ne, Xh.shape[0])] = Xh[:ne]
+    yb = np.zeros((ne,), np.int64)
+    yb[:min(ne, yh.shape[0])] = yh[:ne]
+    Xh = multihost.broadcast_from_primary(xb)       # process 0's rows win
+    yh = multihost.broadcast_from_primary(yb)
+    server = SpanningServer(np.asarray(st["basis"]), np.asarray(st["beta"]),
+                            km.config.kernel, mesh,
+                            backend=km.config.backend,
+                            max_batch=min(ne, 64))
+    o = np.asarray(server.margins(Xh))
+    if o.ndim == 2 and o.shape[1] > 1:
+        pred = np.asarray(st["classes"])[np.argmax(o, axis=1)]
+    else:
+        pred = np.where(o.ravel() > 0, 1, -1)
+    say(f"[eval ] train_acc({ne} rows via spanning server)="
+        f"{float((pred == yh).mean()):.4f} "
+        f"xhost_bytes/eval={server.collective_payload_bytes()}")
 
 
 if __name__ == "__main__":

@@ -184,7 +184,7 @@ def _nystrom_attention(q, k, v, q_pos, *, n_landmarks: int, causal: bool):
         # triangular solve — no pseudo-inverse at all (the strongest form
         # of the paper's "avoid W^+" insight) and strictly causal: the
         # inverse of a triangular matrix is triangular, so no future
-        # leakage (tests/test_attention.py::test_nystrom_no_future_leakage).
+        # leakage (tests/test_models_smoke.py::test_nystrom_no_future_leakage).
         # The 0.25 ridge bounds the solve against small early-landmark
         # diagonals (ablation in EXPERIMENTS.md: corr .435 -> .611).
         mI = 0.25 * jnp.eye(mdim, dtype=k2.dtype)

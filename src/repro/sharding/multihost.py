@@ -1,0 +1,393 @@
+"""Multi-controller (multi-host) execution: the paper's pod-scale shape.
+
+The paper deploys Algorithm 1 as an AllReduce tree over Hadoop nodes, each
+node streaming its own disk partition every TRON iteration. The modern
+equivalent implemented here is JAX's multi-controller model (one Python
+process per host, every process running the *same* program):
+
+* :func:`init` wires the process into the cluster —
+  ``jax.distributed.initialize`` plus the CPU collectives backend needed
+  for cross-process psums on CPU hosts (simulated pods included).
+* :func:`spanning_mesh` builds a mesh over the *global* device list, so
+  the existing fused/stream closures (``repro.core.distributed``) run
+  unchanged: every ``lax.psum`` inside their shard_map bodies becomes a
+  cross-host AllReduce of exactly the same O(m) payload the paper's tree
+  carries.
+* :func:`put_row_sharded` / :func:`global_rows` /
+  :func:`shard_rows_from_replicated` assemble global arrays from
+  process-local data (each host contributes only the rows its devices
+  own — the per-host shard-directory partition of
+  :class:`repro.data.chunks.HostPartition`).
+* :class:`SpanningServer` is the serving arm: process 0 fronts an engine
+  whose margin evaluation spans the mesh (basis rows partitioned over
+  hosts, one O(batch) psum per request); follower processes run
+  :meth:`SpanningServer.follow` in lockstep.
+
+Simulation recipe (what ``tests/multihost`` and
+``scripts/launch_multihost.sh`` do): run N copies of the same script with
+``XLA_FLAGS=--xla_force_host_platform_device_count=K`` exported *before*
+jax imports, each calling ``init("127.0.0.1:<port>", N, i)`` — N
+single-machine processes then behave exactly like N hosts of a pod.
+
+Process topology is tracked here (set once by :func:`init`) instead of
+probing ``jax.process_count()`` so that pure validation helpers
+(:func:`check_plan`) stay importable — and testable — without
+initializing a backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.compat import make_mesh, shard_map
+
+# Plans whose training closures are safe over a process-spanning mesh:
+# rows-only partitions whose every collective is an O(m) psum. The
+# materialized plans (local/shard_map/auto/otf) would need a global C in
+# HBM or a 2-D partition neither of which the multi-controller path routes.
+MULTIHOST_PLANS = frozenset({"stream", "otf_shard"})
+
+
+@dataclasses.dataclass(frozen=True)
+class HostSpan:
+    """This process's slot in the multi-controller topology."""
+    process_id: int
+    num_processes: int
+
+    def __post_init__(self):
+        if self.num_processes < 1:
+            raise ValueError(f"num_processes must be >= 1, "
+                             f"got {self.num_processes}")
+        if not 0 <= self.process_id < self.num_processes:
+            raise ValueError(
+                f"process_id {self.process_id} out of range "
+                f"[0, {self.num_processes})")
+
+
+_SPAN: Optional[HostSpan] = None
+
+
+def init(coordinator: Optional[str], num_processes: int,
+         process_id: int) -> HostSpan:
+    """Join the multi-controller cluster (idempotent for 1 process).
+
+    ``coordinator`` is ``host:port`` of process 0's coordination service
+    (every process passes the same address, including process 0 itself).
+    Must run before any jax computation touches a backend: the CPU
+    collectives implementation is chosen at backend-client creation.
+    """
+    global _SPAN
+    span = HostSpan(int(process_id), int(num_processes))
+    if _SPAN is not None:
+        if _SPAN != span:
+            raise RuntimeError(
+                f"multihost already initialized as {_SPAN}, refusing "
+                f"re-init as {span}")
+        return _SPAN
+    if span.num_processes > 1:
+        if not coordinator:
+            raise ValueError(
+                "multi-process init needs a coordinator address "
+                "(host:port of process 0)")
+        import jax
+        # gloo backs cross-process collectives on CPU hosts; it needs the
+        # distributed client, so this must NOT be set for single-process
+        # runs (the factory would fail at backend creation)
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+        jax.distributed.initialize(coordinator_address=coordinator,
+                                   num_processes=span.num_processes,
+                                   process_id=span.process_id)
+    _SPAN = span
+    return _SPAN
+
+
+def current_span() -> Optional[HostSpan]:
+    """The :func:`init`-declared topology, or None outside multihost runs."""
+    return _SPAN
+
+
+def active() -> bool:
+    return _SPAN is not None and _SPAN.num_processes > 1
+
+
+def process_index() -> int:
+    return _SPAN.process_id if _SPAN is not None else 0
+
+
+def process_count() -> int:
+    return _SPAN.num_processes if _SPAN is not None else 1
+
+
+def is_primary() -> bool:
+    """True on the process that fronts serving and owns persistence."""
+    return process_index() == 0
+
+
+def _reset_for_tests() -> None:
+    """Clear the module topology (unit tests of the validation helpers)."""
+    global _SPAN
+    _SPAN = None
+
+
+# --------------------------------------------------------------- validation
+def check_plan(plan: str, num_processes: Optional[int] = None) -> None:
+    """Reject plan compositions that cannot run multi-controller.
+
+    Called by ``repro.api.registry.validate`` at machine *construction*
+    (never deep inside a trace). ``num_processes`` defaults to the live
+    topology so single-process runs are never constrained.
+    """
+    nproc = process_count() if num_processes is None else int(num_processes)
+    if nproc > 1 and plan not in MULTIHOST_PLANS:
+        raise ValueError(
+            f"plan {plan!r} cannot run multi-controller ({nproc} "
+            f"processes): it materializes per-device state a "
+            f"process-spanning mesh cannot assemble from host-local rows; "
+            f"use one of {sorted(MULTIHOST_PLANS)} (rows-only partitions "
+            f"whose every collective is one O(m) psum)")
+
+
+def check_mesh_spans(mesh, num_processes: Optional[int] = None) -> None:
+    """Require ``mesh`` to cover every process's devices.
+
+    A local-devices mesh under an active multi-controller topology would
+    make each process solve a *different* subproblem while believing it
+    solved the global one — fail loudly instead.
+    """
+    nproc = process_count() if num_processes is None else int(num_processes)
+    if nproc <= 1:
+        return
+    import jax
+    if mesh.size != jax.device_count():
+        raise ValueError(
+            f"multi-controller run ({nproc} processes) needs a mesh over "
+            f"all {jax.device_count()} global devices, got one over "
+            f"{mesh.size}; build it with "
+            f"repro.sharding.multihost.spanning_mesh()")
+
+
+# ------------------------------------------------------------- mesh/arrays
+def spanning_mesh(axis_names: Tuple[str, ...] = ("data",)):
+    """A 1-axis (by default) mesh over the *global* device list.
+
+    ``jax.devices()`` orders devices process-major, so contiguous row
+    blocks of a ``P(("data",))``-sharded array land on contiguous
+    processes — the layout every helper below assumes.
+    """
+    import jax
+    n = jax.device_count()
+    shape = (n,) + (1,) * (len(axis_names) - 1)
+    return make_mesh(shape, axis_names)
+
+
+def put_row_sharded(sharding, local_rows: np.ndarray):
+    """Global row-sharded array from this process's row block.
+
+    Single-process: a plain ``device_put`` (identical to the historical
+    path). Multi-process: every process contributes ``local_rows`` (its
+    1/num_processes contiguous block, in process order) and receives the
+    non-fully-addressable global array.
+    """
+    import jax
+    if process_count() == 1:
+        return jax.device_put(local_rows, sharding)
+    return jax.make_array_from_process_local_data(
+        sharding, np.ascontiguousarray(local_rows))
+
+
+def global_rows(local_rows, mesh, data_axes: Tuple[str, ...] = ("data",)):
+    """Row-sharded global array over ``mesh`` from per-host row blocks —
+    how the in-memory fused plan (``otf_shard``) receives X/y whose rows
+    live on different hosts."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    local_rows = np.asarray(local_rows)
+    spec = P(tuple(data_axes), *([None] * (local_rows.ndim - 1)))
+    return put_row_sharded(NamedSharding(mesh, spec), local_rows)
+
+
+def shard_rows_from_replicated(arr, mesh,
+                               data_axes: Tuple[str, ...] = ("data",)):
+    """Row-shard an array every host already holds in full (basis, beta).
+
+    Each process keeps only its contiguous 1/num_processes row block on
+    device; the serving arm uses this to partition the basis over hosts.
+    """
+    arr = np.asarray(arr)
+    nproc = process_count()
+    if arr.shape[0] % nproc:
+        raise ValueError(
+            f"cannot row-shard {arr.shape[0]} rows over {nproc} processes "
+            f"evenly; pad to a multiple of {nproc}")
+    per = arr.shape[0] // nproc
+    lo = process_index() * per
+    return global_rows(arr[lo:lo + per], mesh, data_axes)
+
+
+def replicate(arr, mesh):
+    """Replicate a host array onto every device of ``mesh`` (valid even
+    when the mesh spans processes — all hosts must hold the same value)."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return jax.device_put(np.asarray(arr), NamedSharding(mesh, P()))
+
+
+def broadcast_from_primary(arr) -> np.ndarray:
+    """Process 0's value on every process (identity when single-process).
+
+    Every process must call this with a same-shaped, same-dtype array.
+    """
+    if process_count() == 1:
+        return np.asarray(arr)
+    from jax.experimental import multihost_utils
+    return np.asarray(multihost_utils.broadcast_one_to_all(np.asarray(arr)))
+
+
+def sum_across_processes(arr: np.ndarray) -> np.ndarray:
+    """Elementwise sum of every process's ``arr`` (identity single-process).
+
+    Used where each host holds a disjoint-support contribution to a small
+    global array — e.g. basis rows gathered from per-host partition dirs,
+    where every global row is owned by exactly one host. All processes
+    must call in lockstep with same-shaped arrays.
+    """
+    arr = np.asarray(arr)
+    if process_count() == 1:
+        return arr
+    from jax.experimental import multihost_utils
+    gathered = multihost_utils.process_allgather(arr)
+    return np.asarray(gathered).sum(axis=0).astype(arr.dtype)
+
+
+def sync(tag: str = "barrier") -> None:
+    """Cross-process barrier (no-op single-process)."""
+    if process_count() == 1:
+        return
+    from jax.experimental import multihost_utils
+    multihost_utils.sync_global_devices(tag)
+
+
+# ------------------------------------------------------------- serving arm
+class SpanningServer:
+    """One engine fronting a process-spanning mesh (the serving arm).
+
+    The prediction map o(x) = k(x, basis)·β is partitioned over *basis
+    rows*: host h holds basis/β rows [h·m/P, (h+1)·m/P) and contributes a
+    fused partial ``k(X, basis_h)·β_h``; one psum of the (batch[, K])
+    partial margins completes every request — O(batch·K) cross-host bytes
+    per evaluation, independent of m (the basis never moves after load).
+
+    Multi-controller serving is lockstep SPMD: the primary process calls
+    :meth:`margins` per request (broadcasting the batch), every follower
+    runs :meth:`follow`, which executes the identical broadcast + psum
+    sequence until :meth:`stop`. Degenerates gracefully to a plain local
+    decider when single-process (no broadcasts, same jitted psum body).
+    """
+
+    _OP_STOP, _OP_MARGINS = 0, 1
+
+    def __init__(self, basis, beta, kernel, mesh, *, backend: str = "jnp",
+                 block_rows: Optional[int] = None, max_batch: int = 64,
+                 data_axes: Tuple[str, ...] = ("data",)):
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.kernels.ops import otf_kmvp_fwd
+        basis = np.asarray(basis)
+        beta = np.asarray(beta)
+        m = basis.shape[0]
+        dp = 1
+        for ax in data_axes:
+            dp *= mesh.shape[ax]
+        if m % dp:
+            raise ValueError(
+                f"SpanningServer partitions basis rows over the mesh: "
+                f"m={m} must divide the data extent {dp}")
+        check_mesh_spans(mesh)
+        self.mesh = mesh
+        self.max_batch = int(max_batch)
+        self.d = int(basis.shape[1])
+        self.n_classes = int(beta.shape[1]) if beta.ndim == 2 else 0
+        self.dtype = np.dtype(basis.dtype)
+        da = tuple(data_axes)
+        kw = dict(kind=kernel.kind, sigma=kernel.sigma, backend=backend,
+                  block_rows=block_rows)
+
+        def part(Xq, basis_l, beta_l):
+            return jax.lax.psum(otf_kmvp_fwd(Xq, basis_l, beta_l, **kw), da)
+
+        beta_spec = P(da, None) if beta.ndim == 2 else P(da)
+        self._body = shard_map(part, mesh=mesh, check_vma=False,
+                               in_specs=(P(), P(da, None), beta_spec),
+                               out_specs=P())
+        self._eval = jax.jit(self._body)
+        self._basis = shard_rows_from_replicated(basis, mesh, da)
+        self._beta = shard_rows_from_replicated(beta, mesh, da)
+        self._stopped = False
+
+    # ------------------------------------------------------------ protocol
+    def _round(self, header: np.ndarray, payload: np.ndarray):
+        """One lockstep round: broadcast (header, payload), evaluate."""
+        header = broadcast_from_primary(header)
+        payload = broadcast_from_primary(payload)
+        op, rows = int(header[0]), int(header[1])
+        if op == self._OP_STOP:
+            return None, None
+        with self.mesh:
+            o = self._eval(payload, self._basis, self._beta)
+        return rows, np.asarray(o)
+
+    def _zeros(self):
+        return (np.zeros((2,), np.int32),
+                np.zeros((self.max_batch, self.d), self.dtype))
+
+    # ------------------------------------------------------------- primary
+    def margins(self, X) -> np.ndarray:
+        """Margins for a query batch (primary process only). Oversize
+        batches split into ``max_batch``-row lockstep rounds."""
+        X = np.asarray(X, self.dtype)
+        if X.shape[0] > self.max_batch:
+            return np.concatenate(
+                [self.margins(X[i:i + self.max_batch])
+                 for i in range(0, X.shape[0], self.max_batch)])
+        rows = X.shape[0]
+        pad = np.zeros((self.max_batch, self.d), self.dtype)
+        pad[:rows] = X
+        _, o = self._round(
+            np.asarray([self._OP_MARGINS, rows], np.int32), pad)
+        return o[:rows]
+
+    def stop(self) -> None:
+        """Release the followers (primary process only)."""
+        if self._stopped or process_count() == 1:
+            self._stopped = True
+            return
+        header, payload = self._zeros()
+        header[0] = self._OP_STOP
+        self._round(header, payload)
+        self._stopped = True
+
+    # ------------------------------------------------------------ follower
+    def follow(self) -> int:
+        """Serve lockstep rounds until the primary stops; returns the
+        number of evaluation rounds participated in."""
+        served = 0
+        while True:
+            rows, _ = self._round(*self._zeros())
+            if rows is None:
+                return served
+            served += 1
+
+    # -------------------------------------------------------- introspection
+    def collective_payload_bytes(self) -> int:
+        """Instrumentation-counted cross-host bytes of ONE margin
+        evaluation (the psum payload in the traced jaxpr — measured from
+        the program, not claimed)."""
+        import jax
+        from repro.core.introspect import collective_payload_bytes_jaxpr
+        shape = (self.max_batch, self.d)
+        closed = jax.make_jaxpr(self._body)(
+            jax.ShapeDtypeStruct(shape, self.dtype),
+            jax.ShapeDtypeStruct(self._basis.shape, self.dtype),
+            jax.ShapeDtypeStruct(self._beta.shape, self.dtype))
+        return collective_payload_bytes_jaxpr(closed.jaxpr)

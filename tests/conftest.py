@@ -1,4 +1,5 @@
 import os
+import signal
 import sys
 
 # NOTE: do NOT set --xla_force_host_platform_device_count here (brief:
@@ -29,6 +30,11 @@ def pytest_configure(config):
         "requires_devices(k): skip (not error) when fewer than k devices "
         "are available or simulatable (CPU hosts can fake any count in a "
         "subprocess via --xla_force_host_platform_device_count)")
+    config.addinivalue_line(
+        "markers",
+        "requires_multiprocess(timeout=900): spawns a jax.distributed "
+        "subprocess fleet; wall-clock guarded by SIGALRM so a hung "
+        "collective fails the test instead of the session")
 
 
 def pytest_runtest_setup(item):
@@ -39,6 +45,36 @@ def pytest_runtest_setup(item):
         if have < k:
             pytest.skip(f"needs {k} devices; this host has "
                         f"{jax.device_count()} and cannot simulate more")
+    if item.get_closest_marker("requires_multiprocess") is not None \
+            and not hasattr(signal, "SIGALRM"):
+        pytest.skip("requires_multiprocess needs SIGALRM for its hang "
+                    "guard (POSIX only)")
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    """Wall-clock guard for ``requires_multiprocess`` tests: a fleet whose
+    collective hangs (e.g. every worker blocked on a dead peer) raises in
+    THIS process instead of stalling the whole pytest session. The rig has
+    its own (tighter) watchdog; this alarm is the backstop above it."""
+    marker = item.get_closest_marker("requires_multiprocess")
+    if marker is None or not hasattr(signal, "SIGALRM"):
+        yield
+        return
+    budget = int(marker.kwargs.get("timeout", 900))
+
+    def _alarm(signum, frame):
+        raise TimeoutError(
+            f"requires_multiprocess test exceeded its {budget}s wall "
+            f"budget — subprocess fleet presumed hung")
+
+    old = signal.signal(signal.SIGALRM, _alarm)
+    signal.alarm(budget)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
 
 
 # ------------------------------------------------------- shared parity asserts

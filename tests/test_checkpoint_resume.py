@@ -286,3 +286,30 @@ def test_training_checkpointer_restores_feeder_state():
     ck.attach_feeder(f)
     assert f.restored == {"n": 10, "d": 2, "h2d_bytes": 99}
     assert ck.stats()["resumed_step"] == 4
+
+
+# -------------------------------------------- multi-controller elasticity
+@pytest.mark.slow
+@pytest.mark.requires_devices(4)
+@pytest.mark.requires_multiprocess(timeout=1500)
+def test_multihost_elastic_resume_bitwise_across_process_counts(tmp_path):
+    """A run checkpointed at P=2 processes (2 devices each) resumes
+    bitwise-identically at P'=4 processes (1 device each): the snapshot
+    is the replicated O(m) TRON state, the global mesh is the same 4
+    devices either way, so re-partitioning the hosts re-slices only WHERE
+    rows live — never a single bit of the trajectory. The ``write`` gate
+    means only process 0 commits step files; the resume arm restores the
+    same shared directory on every process."""
+    from multihost.rig import run_fleet
+    d_full = str(tmp_path / "full-steps")
+    d_head = str(tmp_path / "head-steps")
+    full = run_fleet("ckpt", 2, 2, extra=["full", d_full]).result
+    head = run_fleet("ckpt", 2, 2, extra=["head", d_head, "3"]).result
+    assert head["n_iter"] <= 3 < full["n_iter"]
+    assert list_steps(d_head), "head run committed no step files"
+    resumed = run_fleet("ckpt", 4, 1, extra=["resume", d_head]).result
+    assert resumed["num_processes"] == 4 and full["num_processes"] == 2
+    assert resumed["beta_sha"] == full["beta_sha"], (
+        "resume at P'=4 of a P=2 checkpoint diverged bitwise: "
+        f"rel l2 {np.linalg.norm(np.subtract(resumed['beta'], full['beta'])):.2e}")
+    assert resumed["f"] == full["f"]

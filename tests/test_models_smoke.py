@@ -1,10 +1,22 @@
-"""Per-architecture smoke tests (brief deliverable f): reduced variant of
-each family, one forward/train step on CPU, output shapes + no NaNs."""
+"""The model-family suite: per-architecture smoke (reduced variant of
+each family, one forward/train/decode step, shapes + no NaNs), the
+attention / MoE / SSD unit parity checks, and the teacher-forced-vs-
+stepwise decode consistency sweep for every cache implementation.
+
+(Absorbs the former test_attention.py, test_moe_ssm.py and
+test_decode_consistency.py — one suite per subsystem, not one file per
+historical PR.)"""
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.configs import ARCHS
+from repro.models import attention as attn
+from repro.models import encdec as encdec_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as lm_mod
 from repro.models.common import unzip
 from repro.models.registry import make_model
 from repro.models.transformer import D_VISION
@@ -12,6 +24,7 @@ from repro.optim.adamw import AdamWConfig, adamw_init
 from repro.train.steps import make_train_step
 
 B, S = 2, 32
+S_DEC = 24          # decode-consistency sweep length (3 SSD chunks of 8)
 
 
 def _batch(cfg, key):
@@ -86,3 +99,305 @@ def test_training_reduces_loss(name):
         params, opt, m = step(params, opt, batch)
         losses.append(float(m["loss"]))
     assert losses[-1] < losses[0] - 0.1, losses
+
+
+# ===================================================== attention unit parity
+def naive_attention(q, k, v, *, causal=True, window=0):
+    """Reference softmax attention. q: (B,S,Kv,G,hd), k/v: (B,S,Kv,hd)."""
+    B, S, Kv, G, hd = q.shape
+    s = jnp.einsum("bqcgd,bkcd->bqcgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= ki <= qi
+    if window > 0:
+        mask &= (qi - ki) < window
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqcgk,bkcd->bqcgd", w, v.astype(jnp.float32))
+
+
+def _qkv(B=2, S=64, Kv=2, G=3, hd=16, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (B, S, Kv, G, hd), jnp.float32)
+    k = jax.random.normal(k2, (B, S, Kv, hd), jnp.float32)
+    v = jax.random.normal(k3, (B, S, Kv, hd), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("blk", [8, 16, 64])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_naive(blk, causal):
+    q, k, v = _qkv()
+    pos = jnp.broadcast_to(jnp.arange(64)[None], (2, 64))
+    got = attn._flash(q, k, v, pos, 0, causal=causal, window=0, blk=blk)
+    want = naive_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("window", [4, 16])
+def test_flash_sliding_window(window):
+    q, k, v = _qkv()
+    pos = jnp.broadcast_to(jnp.arange(64)[None], (2, 64))
+    got = attn._flash(q, k, v, pos, 0, causal=True, window=window, blk=16)
+    want = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_newton_schulz_pinv_converges():
+    """Z -> A^-1 for well-conditioned PSD A (row-softmax matrices are)."""
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (8, 8))
+    A = jax.nn.softmax(logits, axis=-1) + 0.5 * jnp.eye(8)
+    Z = attn._newton_schulz_pinv(A[None], iters=12)[0]
+    np.testing.assert_allclose(np.asarray(Z @ A), np.eye(8), atol=5e-2)
+
+
+def test_nystrom_attention_exact_at_full_landmarks():
+    """With m == S (bidirectional), the Nystrom factorization with a
+    converged pseudo-inverse reproduces exact attention."""
+    q, k, v = _qkv(S=32)
+    pos = jnp.broadcast_to(jnp.arange(32)[None], (2, 32))
+    got = attn._nystrom_attention(q, k, v, pos, n_landmarks=32, causal=False)
+    want = naive_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0.15, atol=0.15)
+
+
+def test_nystrom_attention_approximates_causal():
+    """Causal nystrom should correlate strongly with exact causal attention
+    away from the earliest positions (segment-granular causality)."""
+    q, k, v = _qkv(S=64, seed=3)
+    pos = jnp.broadcast_to(jnp.arange(64)[None], (2, 64))
+    got = attn._nystrom_attention(q, k, v, pos, n_landmarks=16, causal=True)
+    want = naive_attention(q, k, v, causal=True)
+    g = np.asarray(got)[:, 16:].ravel()
+    w = np.asarray(want)[:, 16:].ravel()
+    corr = np.corrcoef(g, w)[0, 1]
+    # random (maximally diffuse) attention is the worst case for landmark
+    # approximation; structured attention correlates far higher
+    assert corr > 0.55, corr
+    assert np.isfinite(g).all()
+
+
+def test_nystrom_no_future_leakage():
+    """Changing FUTURE keys/values must not change past outputs beyond the
+    landmark-segment granularity boundary."""
+    q, k, v = _qkv(S=64, seed=4)
+    pos = jnp.broadcast_to(jnp.arange(64)[None], (2, 64))
+    out1 = attn._nystrom_attention(q, k, v, pos, n_landmarks=8, causal=True)
+    k2 = k.at[:, -8:].set(99.0)
+    v2 = v.at[:, -8:].set(-99.0)
+    out2 = attn._nystrom_attention(q, k2, v2, pos, n_landmarks=8, causal=True)
+    # The segment-granular masks make the landmark kernel lower-triangular,
+    # so the ONLY forward leak is through the Newton-Schulz initialization
+    # scalar (global |A|_1 |A|_inf) — it must stay small (documented
+    # approximate-causality, DESIGN.md). Exact attention would give 0 here.
+    leak = np.max(np.abs(np.asarray(out1[:, :48]) - np.asarray(out2[:, :48])))
+    signal = np.max(np.abs(np.asarray(out1[:, :48])))
+    assert leak < 0.05 * signal, (leak, signal)
+
+
+# ===================================================== MoE / SSD unit parity
+def _moe_setup(E=4, k=2, d=32, ff=64, cf=8.0):
+    cfg = ARCHS["grok-1-314b"].reduced(
+        n_experts=E, top_k=k, moe_d_ff=ff, d_model=d, capacity_factor=cf)
+    params, _ = unzip(moe_mod.init_moe(jax.random.PRNGKey(0), cfg))
+    return cfg, params
+
+
+def test_moe_output_shape_and_finite():
+    cfg, params = _moe_setup()
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32), jnp.float32)
+    y, aux = moe_mod.apply_moe(params, cfg, x)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(aux) >= 0
+
+
+def test_moe_matches_dense_expert_sum():
+    """With huge capacity (no dropping), grouped dispatch must equal the
+    direct per-token weighted sum over its top-k experts."""
+    cfg, params = _moe_setup(cf=100.0)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 8, 32), jnp.float32)
+    y, _ = moe_mod.apply_moe(params, cfg, x)
+
+    xt = x.reshape(8, 32)
+    logits = xt @ params["router"]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gv, gi = jax.lax.top_k(probs, cfg.top_k)
+    gv = gv / gv.sum(-1, keepdims=True)
+    want = jnp.zeros_like(xt)
+    for t in range(8):
+        acc = jnp.zeros((32,))
+        for j in range(cfg.top_k):
+            e = int(gi[t, j])
+            h = jax.nn.silu(xt[t] @ params["w1"][e]) * (xt[t] @ params["w3"][e])
+            acc = acc + gv[t, j] * (h @ params["w2"][e])
+        want = want.at[t].set(acc)
+    np.testing.assert_allclose(np.asarray(y[0]), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity_factor ~ 0 tokens get dropped -> output ~ 0 (no shared)."""
+    cfg, params = _moe_setup(cf=1e-6)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 64, 32), jnp.float32)
+    y, _ = moe_mod.apply_moe(params, cfg, x)
+    # capacity floor is 4 per expert -> most tokens dropped, tiny norm
+    full_cfg, _ = _moe_setup(cf=100.0)
+    y_full, _ = moe_mod.apply_moe(params, full_cfg, x)
+    assert float(jnp.linalg.norm(y)) < float(jnp.linalg.norm(y_full))
+
+
+def naive_ssd(xh, dt, Bm, Cm, A):
+    """Direct recurrence: h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t; y = C h."""
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    h = np.zeros((Bsz, H, N, P), np.float64)
+    ys = []
+    for t in range(S):
+        decay = np.exp(np.asarray(dt[:, t] * A[None, :], np.float64))
+        upd = np.einsum("bn,bh,bhp->bhnp", np.asarray(Bm[:, t], np.float64),
+                        np.asarray(dt[:, t], np.float64),
+                        np.asarray(xh[:, t], np.float64))
+        h = decay[:, :, None, None] * h + upd
+        ys.append(np.einsum("bn,bhnp->bhp", np.asarray(Cm[:, t], np.float64), h))
+    return np.stack(ys, axis=1)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_ssd_scan_matches_naive_recurrence(chunk):
+    key = jax.random.PRNGKey(0)
+    Bsz, S, H, P, N = 2, 16, 3, 4, 5
+    ks = jax.random.split(key, 5)
+    xh = jax.random.normal(ks[0], (Bsz, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bsz, S, H)))
+    Bm = jax.random.normal(ks[2], (Bsz, S, N))
+    Cm = jax.random.normal(ks[3], (Bsz, S, N))
+    A = -jnp.exp(jax.random.normal(ks[4], (H,)) * 0.3)
+    got = ssm_mod.ssd_scan(xh, dt, Bm, Cm, A, chunk)
+    want = naive_ssd(xh, dt, Bm, Cm, np.asarray(A))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-3, atol=1e-3)
+
+
+def test_ssm_decode_matches_train():
+    """ssm_train over a sequence == repeated ssm_decode state updates."""
+    cfg = ARCHS["mamba2-1.3b"].reduced(ssm_chunk=8)
+    params, _ = unzip(ssm_mod.init_ssm(jax.random.PRNGKey(0), cfg))
+    h = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32) * 0.5
+    y_train = ssm_mod.ssm_train(params, cfg, h)
+    cache = jax.tree.map(lambda x: x[0],
+                         ssm_mod.init_ssm_cache(cfg, 2, layers=1))
+    outs = []
+    for t in range(16):
+        y, cache = ssm_mod.ssm_decode(params, cfg, h[:, t: t + 1], cache, t)
+        outs.append(y[:, 0])
+    y_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_train),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ============================================== decode/forward consistency
+# Teacher-forced forward logits MUST match step-by-step decode logits —
+# the strongest end-to-end correctness check for every cache implementation
+# (GQA KV, sliding ring, MLA compressed/absorbed, SSM state, enc-dec
+# cross). ~3 min of per-arch decode loops on CPU, hence the slow marker.
+def _decode_all(model, params, tokens, cache):
+    outs = []
+    for t in range(tokens.shape[1]):
+        logits, cache = model.decode_step(params, tokens[:, t: t + 1], cache)
+        outs.append(logits[:, 0])
+    return jnp.stack(outs, axis=1), cache   # (B, S_DEC, V)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["tinyllama-1.1b", "llama3.2-1b", "qwen3-4b",
+                                  "granite-34b", "grok-1-314b"])
+def test_dense_moe_decode_matches_forward(name):
+    # capacity_factor high enough that no token is dropped: capacity-based
+    # MoE routing otherwise LEGITIMATELY differs between the 48-token
+    # teacher-forced groups and the 2-token decode groups (documented
+    # train/serve discrepancy of capacity routers).
+    cfg = ARCHS[name].reduced(capacity_factor=64.0)
+    model = make_model(cfg, max_dec_seq=S_DEC)
+    params, _ = unzip(model.init(jax.random.PRNGKey(0)))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S_DEC), 0,
+                                cfg.vocab)
+    fwd_logits, _, _ = lm_mod.forward_lm(params, cfg, {"tokens": tokens},
+                                         remat=False)
+    cache = lm_mod.init_cache(cfg, B, S_DEC)
+    dec_logits, _ = _decode_all(model, params, tokens, cache)
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(fwd_logits), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.slow
+def test_mla_absorbed_decode_matches_forward():
+    cfg = ARCHS["deepseek-v2-236b"].reduced(capacity_factor=64.0)
+    model = make_model(cfg, max_dec_seq=S_DEC)
+    params, _ = unzip(model.init(jax.random.PRNGKey(0)))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S_DEC), 0,
+                                cfg.vocab)
+    fwd_logits, _, _ = lm_mod.forward_lm(params, cfg, {"tokens": tokens},
+                                         remat=False)
+    cache = lm_mod.init_cache(cfg, B, S_DEC)
+    dec_logits, _ = _decode_all(model, params, tokens, cache)
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(fwd_logits), rtol=3e-3, atol=3e-3)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["mamba2-1.3b", "jamba-v0.1-52b"])
+def test_ssm_hybrid_decode_matches_forward(name):
+    # S_DEC=24 -> 3 SSD chunks of 8
+    cfg = ARCHS[name].reduced(ssm_chunk=8, capacity_factor=64.0)
+    model = make_model(cfg, max_dec_seq=S_DEC)
+    params, _ = unzip(model.init(jax.random.PRNGKey(0)))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S_DEC), 0,
+                                cfg.vocab)
+    fwd_logits, _, _ = lm_mod.forward_lm(params, cfg, {"tokens": tokens},
+                                         remat=False)
+    cache = lm_mod.init_cache(cfg, B, S_DEC)
+    dec_logits, _ = _decode_all(model, params, tokens, cache)
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(fwd_logits), rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.slow
+def test_encdec_decode_matches_forward():
+    cfg = ARCHS["whisper-small"].reduced()
+    model = make_model(cfg, max_dec_seq=S_DEC)
+    params, _ = unzip(model.init(jax.random.PRNGKey(0)))
+    frames = jax.random.normal(jax.random.PRNGKey(2),
+                               (B, cfg.encoder_seq, cfg.d_model),
+                               cfg.jnp_dtype)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S_DEC), 0,
+                                cfg.vocab)
+    enc_out = encdec_mod.encode(params, cfg, frames)
+    fwd_logits = encdec_mod.decoder_forward(params, cfg, tokens, enc_out)
+    cache = encdec_mod.init_encdec_cache(params, cfg, frames, S_DEC)
+    dec_logits, _ = _decode_all(model, params, tokens, cache)
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(fwd_logits), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.slow
+def test_sliding_window_decode_matches_windowed_forward():
+    """Ring-buffer decode == full forward with a sliding-window mask."""
+    cfg = ARCHS["tinyllama-1.1b"].reduced(window=8,
+                                          attention_variant="sliding")
+    model = make_model(cfg, max_dec_seq=S_DEC)
+    params, _ = unzip(model.init(jax.random.PRNGKey(0)))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S_DEC), 0,
+                                cfg.vocab)
+    fwd_logits, _, _ = lm_mod.forward_lm(params, cfg, {"tokens": tokens},
+                                         remat=False)
+    cache = lm_mod.init_cache(cfg, B, S_DEC)
+    assert cache.layers["kv_0"].k.shape[2] == 8   # ring buffer, not S_DEC
+    dec_logits, _ = _decode_all(model, params, tokens, cache)
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(fwd_logits), rtol=2e-3, atol=2e-3)

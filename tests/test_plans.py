@@ -457,3 +457,59 @@ def test_multiclass_rejected_by_binary_solvers(mc_problem, solver):
     with pytest.raises(ValueError, match="binary-only"):
         KernelMachine(cfg).fit(X, yi,
                                basis if solver == "linearized" else None)
+
+
+# ----------------------------------------- multi-controller plan validation
+def test_multihost_rejects_materializing_plans_at_construction():
+    """Every plan outside MULTIHOST_PLANS must fail a multi-process
+    topology check with a message that names the plan, says why, and
+    lists the plans that DO work — at construction, not deep in a trace."""
+    from repro.sharding import multihost
+    bad = sorted(set(available_plans()) - multihost.MULTIHOST_PLANS)
+    assert bad, "no materializing plans left to reject?"
+    for plan in bad:
+        with pytest.raises(ValueError) as ei:
+            multihost.check_plan(plan, num_processes=2)
+        msg = str(ei.value)
+        assert plan in msg                      # names the offender
+        assert "stream" in msg and "otf_shard" in msg   # names the fix
+        assert "multi-controller" in msg        # names the context
+
+
+def test_multihost_plans_accepted_and_single_process_unconstrained():
+    from repro.sharding import multihost
+    for plan in sorted(multihost.MULTIHOST_PLANS):
+        multihost.check_plan(plan, num_processes=4)     # no raise
+    for plan in available_plans():
+        multihost.check_plan(plan, num_processes=1)     # no raise
+
+
+def test_multihost_machine_construction_fails_under_live_topology():
+    """With an active 2-process topology, KernelMachine construction
+    itself (registry validate) rejects non-partitionable plans; the
+    multihost-safe plans still construct."""
+    from repro.sharding import multihost
+    assert multihost.current_span() is None, "test leaked a topology"
+    try:
+        multihost._SPAN = multihost.HostSpan(0, 2)
+        with pytest.raises(ValueError, match="multi-controller"):
+            KernelMachine(MachineConfig(plan="shard_map"))
+        KernelMachine(MachineConfig(plan="stream"))      # constructs fine
+        KernelMachine(MachineConfig(plan="otf_shard"))
+    finally:
+        multihost._reset_for_tests()
+
+
+def test_multihost_span_and_mesh_validation():
+    from types import SimpleNamespace
+    from repro.sharding import multihost
+    with pytest.raises(ValueError, match="out of range"):
+        multihost.HostSpan(process_id=2, num_processes=2)
+    with pytest.raises(ValueError, match="num_processes"):
+        multihost.HostSpan(process_id=0, num_processes=0)
+    # a mesh that does not cover the global device list is rejected with
+    # a pointer at spanning_mesh (stub: check_mesh_spans reads .size only)
+    with pytest.raises(ValueError, match="spanning_mesh"):
+        multihost.check_mesh_spans(
+            SimpleNamespace(size=jax.device_count() + 1), num_processes=2)
+    multihost.check_mesh_spans(SimpleNamespace(size=1), num_processes=1)
