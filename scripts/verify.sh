@@ -22,6 +22,16 @@
 #                              + counted cross-host bytes/eval at 1/2/4
 #                              controller processes; appends
 #                              BENCH_multihost.json)
+#   scripts/verify.sh --fault-smoke
+#                              fast gate + the chaos path: (a) a stream
+#                              fit under injected transient chunk-read
+#                              faults must match the clean fit BITWISE
+#                              (the retry layer absorbs the fault), and
+#                              (b) a supervised kernel_train run whose
+#                              worker SIGKILLs itself mid-commit must
+#                              auto-restart from the latest checkpoint
+#                              and save a beta bitwise identical to an
+#                              uninterrupted supervised run
 #   scripts/verify.sh --multihost-smoke
 #                              fast gate + a real 2-process
 #                              jax.distributed round-trip through the
@@ -77,6 +87,10 @@ fi
 multihost_smoke=0
 if [[ "${1:-}" == "--multihost-smoke" ]]; then
     multihost_smoke=1
+fi
+fault_smoke=0
+if [[ "${1:-}" == "--fault-smoke" ]]; then
+    fault_smoke=1
 fi
 
 if [[ "${1:-}" == "--full" ]]; then
@@ -215,6 +229,82 @@ if [[ "$multihost_smoke" -eq 1 ]]; then
             cat "$mh/serve.out" >&2
             status=1
         }
+    fi
+fi
+
+if [[ "$fault_smoke" -eq 1 ]]; then
+    echo "== fault smoke A: transient chunk-read faults, bitwise parity =="
+    python - <<'PY' || status=1
+import numpy as np, jax, jax.numpy as jnp, tempfile
+from repro.api import KernelMachine, MachineConfig, StreamConfig
+from repro.core import KernelSpec, TronConfig, random_basis
+from repro.data import make_classification
+from repro.data.chunks import MmapChunkSource, save_chunks
+from repro.faults import FaultPlan
+
+cfg = MachineConfig(kernel=KernelSpec("gaussian", sigma=2.0), lam=1e-2,
+                    plan="stream", tron=TronConfig(max_iter=20),
+                    stream=StreamConfig(chunk_rows=64))
+X, y = make_classification(jax.random.PRNGKey(0), 512, 8)
+d = tempfile.mkdtemp(prefix="fault-smoke-")
+save_chunks(d, np.asarray(X), np.asarray(y), rows_per_shard=100)
+basis = np.asarray(random_basis(jax.random.PRNGKey(1), jnp.asarray(X), 16))
+clean = KernelMachine(cfg).fit(MmapChunkSource(d, chunk_rows=64), None, basis)
+# times=2 is the most one read survives under the 3-attempt retry cap
+plan = FaultPlan().inject("chunk.read", times=2)
+with plan:
+    faulted = KernelMachine(cfg).fit(MmapChunkSource(d, chunk_rows=64),
+                                     None, basis)
+fired = plan.stats()["fired"].get("chunk.read", 0)
+assert fired >= 1, "fault plan never fired"
+assert np.array_equal(np.asarray(clean.state_["beta"]),
+                      np.asarray(faulted.state_["beta"])), \
+    "transient chunk-read faults changed result bits"
+print(f"fault smoke A OK: {fired} injected read fault(s), beta bitwise equal")
+PY
+
+    echo "== fault smoke B: SIGKILL under --supervise, auto-recovery =="
+    fs="$tmp/fault_smoke"
+    mkdir -p "$fs"
+    python - "$fs/shards" <<'PY' || status=1
+import sys
+import numpy as np
+from repro.data.chunks import save_chunks
+rng = np.random.default_rng(7)
+X = rng.standard_normal((1024, 12)).astype(np.float32)
+w = rng.standard_normal(12)
+y = np.where(X @ w > 0, 1, -1).astype(np.int64)
+save_chunks(sys.argv[1], X, y, rows_per_shard=256)
+PY
+    sup_cmd=(python -m repro.launch.kernel_train --supervise
+             --max-restarts 2 --plan stream --data-dir "$fs/shards"
+             --m 32 --max-iter 40 --lam 1e-3 --sigma 2.0 --chunk-rows 256
+             --ckpt-interval 2)
+    "${sup_cmd[@]}" --ckpt-dir "$fs/ref-steps" --save "$fs/ref.npz" \
+        > "$fs/ref.out" 2>&1 || { cat "$fs/ref.out" >&2; status=1; }
+    # the worker SIGKILLs itself inside its 2nd checkpoint commit; the
+    # flag file makes that happen exactly once across restarts
+    REPRO_FAULTS='{"rules":[{"site":"ckpt.commit","action":"kill","after":1,"times":1,"flag":"'"$fs"'/killed-once"}]}' \
+        "${sup_cmd[@]}" --ckpt-dir "$fs/got-steps" --save "$fs/got.npz" \
+        > "$fs/got.out" 2>&1 || { cat "$fs/got.out" >&2; status=1; }
+    if [[ "$status" -eq 0 ]]; then
+        [[ -f "$fs/killed-once" ]] || {
+            echo "fault smoke: the kill rule never fired" >&2
+            status=1
+        }
+        grep -q "restarting from step" "$fs/got.out" || {
+            echo "fault smoke: supervisor never restarted from a step" >&2
+            tail -30 "$fs/got.out" >&2
+            status=1
+        }
+        python - "$fs/ref.npz" "$fs/got.npz" <<'PY' || status=1
+import sys
+import numpy as np
+ref, got = (np.load(p, allow_pickle=True) for p in sys.argv[1:3])
+assert np.array_equal(ref["beta"], got["beta"]), \
+    "supervised recovery diverged from the uninterrupted run"
+print("fault smoke B OK: recovered beta bitwise equal after SIGKILL")
+PY
     fi
 fi
 

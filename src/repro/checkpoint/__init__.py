@@ -1,7 +1,8 @@
-from repro.checkpoint.ckpt import save_checkpoint, load_checkpoint, load_arrays
+from repro.checkpoint.ckpt import (IOWarningSink, load_arrays,
+                                   load_checkpoint, save_checkpoint)
 from repro.checkpoint.async_writer import AsyncCheckpointWriter
-from repro.checkpoint.training import (CheckpointConfig, ResumeState,
-                                       TrainingCheckpointer, check_resume_config,
-                                       list_steps, load_latest, load_step,
-                                       prune_steps, step_path, steps_dir_for,
-                                       write_step)
+from repro.checkpoint.training import (COMMIT_RETRY, CheckpointConfig,
+                                       ResumeState, TrainingCheckpointer,
+                                       check_resume_config, list_steps,
+                                       load_latest, load_step, prune_steps,
+                                       step_path, steps_dir_for, write_step)

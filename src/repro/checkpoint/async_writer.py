@@ -24,6 +24,8 @@ import threading
 import time
 from typing import Callable, Optional
 
+from repro.util.retry import RetryPolicy, call_with_retry
+
 
 class AsyncCheckpointWriter:
     """Daemon-thread checkpoint writer (double-buffered, drop-oldest).
@@ -36,15 +38,22 @@ class AsyncCheckpointWriter:
     onto this thread, which is fine, but mutation by the trainer would
     race — :class:`~repro.core.tron.TronSnapshot` arrays are fresh copies).
 
-    Errors from ``write_fn`` are recorded (``errors``, ``last_error``) and
-    the writer keeps accepting snapshots: a transient disk failure must
-    not kill an hours-long training run. ``close()`` drains the pending
-    slot (unless ``flush=False``) and joins the thread.
+    Transient I/O failures are retried per ``retry`` (an
+    :class:`~repro.util.retry.RetryPolicy`; pass
+    ``RetryPolicy(max_attempts=1)`` to disable) with each extra attempt
+    counted in ``write_retries``. Errors that survive the retry cap are
+    recorded (``errors``, ``last_error``) and the writer keeps accepting
+    snapshots: a flaky disk must not kill an hours-long training run.
+    ``close()`` drains the pending slot (unless ``flush=False``) and joins
+    the thread.
     """
 
     def __init__(self, write_fn: Callable[[int, dict, dict], int], *,
-                 name: str = "ckpt-writer"):
+                 name: str = "ckpt-writer",
+                 retry: Optional[RetryPolicy] = None):
         self._write_fn = write_fn
+        self._retry = retry if retry is not None else RetryPolicy(
+            max_attempts=3, backoff_s=0.05, max_backoff_s=1.0)
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
         self._idle = threading.Condition(self._lock)
@@ -58,6 +67,7 @@ class AsyncCheckpointWriter:
         self.write_seconds = 0.0
         self.last_step: Optional[int] = None
         self.errors = 0
+        self.write_retries = 0
         self.last_error: Optional[BaseException] = None
         self._thread = threading.Thread(target=self._run, name=name,
                                         daemon=True)
@@ -113,7 +123,13 @@ class AsyncCheckpointWriter:
                 "write_seconds": self.write_seconds,
                 "last_step": self.last_step,
                 "errors": self.errors,
+                "write_retries": self.write_retries,
             }
+
+    def _count_retry(self, attempt: int, exc: BaseException,
+                     delay_s: float) -> None:
+        with self._lock:
+            self.write_retries += 1
 
     # ------------------------------------------------------------ consumer
     def _run(self) -> None:
@@ -130,7 +146,10 @@ class AsyncCheckpointWriter:
             nbytes, err = 0, None
             t0 = time.perf_counter()
             try:
-                nbytes = int(self._write_fn(step, tree, metadata) or 0)
+                nbytes = int(call_with_retry(
+                    self._retry, self._write_fn, step, tree, metadata,
+                    label=f"ckpt-step-{step}",
+                    on_retry=self._count_retry) or 0)
             except BaseException as e:          # keep the run alive
                 err = e
             dt = time.perf_counter() - t0

@@ -13,10 +13,27 @@ from __future__ import annotations
 import json
 import os
 import tempfile
-from typing import Any
+import warnings
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
+
+from repro import faults
+
+#: Signature of the optional I/O-warning sink threaded through the commit
+#: path: ``sink(kind, path, exc)``. The default emits a RuntimeWarning so
+#: swallowed cleanup failures are at least visible; TrainingCheckpointer
+#: installs a counting sink so they land in FitResult.extras["ckpt"].
+IOWarningSink = Callable[[str, str, BaseException], None]
+
+
+def _warn_io(kind: str, path: str, exc: BaseException,
+             sink: Optional[IOWarningSink]) -> None:
+    warnings.warn(f"checkpoint I/O problem ({kind}) on {path}: {exc!r}",
+                  RuntimeWarning, stacklevel=3)
+    if sink is not None:
+        sink(kind, path, exc)
 
 
 def _key_str(path) -> str:
@@ -32,13 +49,25 @@ def _fsync_dir(dirname: str) -> None:
 
 
 def save_checkpoint(path: str, tree: Any, metadata: dict | None = None,
-                    *, fsync: bool = True) -> int:
+                    *, fsync: bool = True,
+                    on_io_warning: Optional[IOWarningSink] = None) -> int:
     """Atomically write ``tree`` (+ JSON-able ``metadata``) to ``path``.
 
     Returns the committed file size in bytes. ``fsync=False`` skips the
     durability syncs (still atomic against concurrent readers via the
     rename, but a machine crash may lose the write) — useful in tests.
+    Secondary I/O failures that don't fail the commit itself (e.g. a tmp
+    file that can't be unlinked after a failed write) are reported through
+    ``on_io_warning`` instead of being silently swallowed.
     """
+    if faults.fire("ckpt.commit", detail=path) == "torn":
+        # Simulate a non-atomic writer dying mid-commit: garbage lands at
+        # the destination (which load_latest must skip over) and the
+        # caller sees a failed write.
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "wb") as fh:
+            fh.write(b"PK\x03\x04 torn by fault plan")
+        raise OSError(f"injected torn commit: {path}")
     leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
     arrays = {_key_str(p): np.asarray(v) for p, v in leaves_with_paths}
     manifest = {"keys": list(arrays.keys()), "metadata": metadata or {}}
@@ -60,8 +89,11 @@ def save_checkpoint(path: str, tree: Any, metadata: dict | None = None,
     except BaseException:
         try:
             os.unlink(tmp)
-        except OSError:
-            pass
+        except OSError as cleanup_exc:
+            # The commit failure propagates below; the leaked tmp file is a
+            # secondary problem — surfaced, not swallowed, so disk slowly
+            # filling with .tmp-ckpt-* orphans is observable.
+            _warn_io("tmp-cleanup", tmp, cleanup_exc, on_io_warning)
         raise
     if fsync:
         _fsync_dir(dirname)

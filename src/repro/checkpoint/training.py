@@ -38,14 +38,21 @@ from __future__ import annotations
 import dataclasses
 import os
 import re
+import threading
 import time
 from typing import Any, List, Optional, Tuple
 
 import numpy as np
 
 from repro.checkpoint.async_writer import AsyncCheckpointWriter
-from repro.checkpoint.ckpt import load_arrays, save_checkpoint
+from repro.checkpoint.ckpt import (IOWarningSink, _warn_io, load_arrays,
+                                   save_checkpoint)
 from repro.core.tron import TronSnapshot
+from repro.util.retry import RetryPolicy, call_with_retry
+
+#: Default transient-I/O policy for step-file commits: a flaky disk gets
+#: three chances per snapshot before the failure lands in ``errors``.
+COMMIT_RETRY = RetryPolicy(max_attempts=3, backoff_s=0.05, max_backoff_s=1.0)
 
 TRAIN_CKPT_FORMAT = "train-ckpt-1"
 _STEP_RE = re.compile(r"^step-(\d{8})\.npz$")
@@ -123,7 +130,8 @@ def list_steps(dir: str) -> List[Tuple[int, str]]:
 
 
 def write_step(dir: str, step: int, tree: dict, metadata: dict, *,
-               fsync: bool = True, keep: int = 0) -> int:
+               fsync: bool = True, keep: int = 0,
+               on_io_warning: Optional[IOWarningSink] = None) -> int:
     """Commit one step file atomically; prune to the newest ``keep``.
 
     Returns bytes written. ``metadata`` gains ``format``/``step``/
@@ -134,22 +142,28 @@ def write_step(dir: str, step: int, tree: dict, metadata: dict, *,
     md["step"] = int(step)
     md["wall_time"] = time.time()
     nbytes = save_checkpoint(step_path(dir, step), tree, metadata=md,
-                             fsync=fsync)
+                             fsync=fsync, on_io_warning=on_io_warning)
     if keep > 0:
-        prune_steps(dir, keep)
+        prune_steps(dir, keep, on_io_warning=on_io_warning)
     return nbytes
 
 
-def prune_steps(dir: str, keep: int) -> int:
-    """Unlink all but the newest ``keep`` committed step files."""
+def prune_steps(dir: str, keep: int, *,
+                on_io_warning: Optional[IOWarningSink] = None) -> int:
+    """Unlink all but the newest ``keep`` committed step files.
+
+    A step that can't be unlinked is not fatal (the commit already
+    succeeded; retention is best-effort) but it is reported through
+    ``on_io_warning`` — a retention policy that silently stops pruning
+    fills the disk invisibly."""
     steps = list_steps(dir)
     removed = 0
     for _, path in steps[:max(0, len(steps) - keep)]:
         try:
             os.unlink(path)
             removed += 1
-        except OSError:
-            pass
+        except OSError as exc:
+            _warn_io("prune-unlink", path, exc, on_io_warning)
     return removed
 
 
@@ -223,10 +237,14 @@ class TrainingCheckpointer:
         self._sync_written = 0
         self._sync_bytes = 0
         self._sync_seconds = 0.0
+        self._sync_retries = 0
         self._last_step: Optional[int] = None
+        self._io_lock = threading.Lock()
+        self._io_warnings = 0
         self._writer: Optional[AsyncCheckpointWriter] = None
         if cfg.background and cfg.write:
-            self._writer = AsyncCheckpointWriter(self._commit)
+            self._writer = AsyncCheckpointWriter(self._commit,
+                                                 retry=COMMIT_RETRY)
 
     @property
     def interval(self) -> int:
@@ -244,7 +262,19 @@ class TrainingCheckpointer:
 
     def _commit(self, step: int, tree: dict, metadata: dict) -> int:
         return write_step(self.cfg.dir, step, tree, metadata,
-                          fsync=self.cfg.fsync, keep=self.cfg.keep)
+                          fsync=self.cfg.fsync, keep=self.cfg.keep,
+                          on_io_warning=self._note_io_warning)
+
+    def _note_io_warning(self, kind: str, path: str,
+                         exc: BaseException) -> None:
+        # Sink for swallowed-but-reported I/O problems (tmp cleanup, prune
+        # unlink) — counted so they surface in FitResult.extras["ckpt"].
+        with self._io_lock:
+            self._io_warnings += 1
+
+    def _note_sync_retry(self, attempt: int, exc: BaseException,
+                         delay_s: float) -> None:
+        self._sync_retries += 1
 
     def on_snapshot(self, snap: TronSnapshot) -> None:
         """The TRON drivers' callback: package and commit one snapshot."""
@@ -259,7 +289,10 @@ class TrainingCheckpointer:
             self._writer.submit(snap.it, tree, md)
         else:
             t0 = time.perf_counter()
-            nbytes = self._commit(snap.it, tree, md)
+            nbytes = call_with_retry(COMMIT_RETRY, self._commit,
+                                     snap.it, tree, md,
+                                     label=f"ckpt-sync-step-{snap.it}",
+                                     on_retry=self._note_sync_retry)
             self._sync_seconds += time.perf_counter() - t0
             self._sync_written += 1
             self._sync_bytes += nbytes
@@ -283,5 +316,8 @@ class TrainingCheckpointer:
                         snapshots_dropped=0,
                         bytes_written=self._sync_bytes,
                         write_seconds=self._sync_seconds,
-                        last_step=self._last_step, errors=0)
+                        last_step=self._last_step, errors=0,
+                        write_retries=self._sync_retries)
+        with self._io_lock:
+            base["io_warnings"] = self._io_warnings
         return base

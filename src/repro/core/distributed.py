@@ -58,6 +58,13 @@ from repro.core.losses import Loss, get_loss
 from repro.core.nystrom import KernelSpec, gram
 from repro.core.tron import TronConfig, TronResult, tron, tron_host
 from repro.sharding import multihost
+from repro.util.retry import RetryPolicy, call_with_retry
+
+#: Transient-read policy for the per-iteration chunk stream. Matches
+#: ``repro.data.chunks.READ_RETRY`` (the take_rows/basis path) so the
+#: whole stream fit tolerates the same fault budget end to end.
+_FEEDER_RETRY = RetryPolicy(max_attempts=3, backoff_s=0.02,
+                            max_backoff_s=0.5)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -173,6 +180,9 @@ class _ChunkFeeder:
         self._host: dict = {}   # i -> (padded X | None, targets, mask)
         self._dev: dict = {}    # i -> (Xd, yd, wd) resident device arrays
         self.h2d_bytes = 0
+        self.read_retries = 0
+        self._retry = _FEEDER_RETRY
+        self._retry_lock = threading.Lock()
 
     # ------------------------------------------------------------ checkpoint
     def state(self) -> dict:
@@ -187,6 +197,7 @@ class _ChunkFeeder:
                 "chunk_rows": int(self.cr),
                 "n_chunks": int(self.source.n_chunks),
                 "h2d_bytes": int(self.h2d_bytes),
+                "read_retries": int(self.read_retries),
                 "classes": None if self.classes is None
                 else np.asarray(self.classes).tolist()}
 
@@ -203,6 +214,7 @@ class _ChunkFeeder:
                 f"source is n={self.source.n} d={self.source.d} — resume "
                 f"must re-read the same dataset")
         self.h2d_bytes = int(state.get("h2d_bytes", 0))
+        self.read_retries = int(state.get("read_retries", 0))
 
     def _targets(self, yc):
         if self.classes is None:
@@ -210,14 +222,25 @@ class _ChunkFeeder:
         from repro.data.chunks import ovr_targets
         return ovr_targets(yc, self.classes, dtype=self.dtype)
 
+    def _read_chunk(self, i):
+        """One chunk read, retried per ``_FEEDER_RETRY`` — transient disk
+        faults below the cap re-read identical bytes, so the training
+        trajectory is bit-for-bit unaffected. Retries are counted (they
+        run on the prefetch thread too, hence the lock)."""
+        def _count(attempt, exc, delay_s):
+            with self._retry_lock:
+                self.read_retries += 1
+        return call_with_retry(self._retry, self.source.chunk, i,
+                               label=f"stream-chunk-{i}", on_retry=_count)
+
     def _host_chunk(self, i):
         hit = self._host.get(i)
         if hit is not None:
             Xc, yc, wc = hit
             if Xc is None:                     # full chunk: re-read, no pad
-                Xc = np.asarray(self.source.chunk(i)[0], self.dtype)
+                Xc = np.asarray(self._read_chunk(i)[0], self.dtype)
             return Xc, yc, wc
-        Xc, yc = self.source.chunk(i)
+        Xc, yc = self._read_chunk(i)
         rows = Xc.shape[0]
         pad = self.pad_rows
         Xc = np.asarray(Xc, self.dtype).reshape(rows, self.source.d)

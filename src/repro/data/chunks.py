@@ -29,7 +29,23 @@ from typing import Iterator, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import faults
+from repro.util.retry import RetryPolicy, call_with_retry
+
 _SHARD_RE = re.compile(r"^X_(\d+)\.npy$")
+
+#: Transient-read policy for chunk gathers outside the stream feeder
+#: (basis selection via ``take_rows``). The feeder applies its own copy of
+#: this policy to the per-iteration chunk stream; together every disk read
+#: on the stream-plan fit path survives faults below the retry cap.
+READ_RETRY = RetryPolicy(max_attempts=3, backoff_s=0.02, max_backoff_s=0.5)
+
+
+def _fire_read(i: int) -> None:
+    # Chaos hook: every chunk read across source types funnels through
+    # this one site so a FaultPlan rule covers mmap, in-memory and
+    # partitioned layouts alike.
+    faults.fire("chunk.read", detail=f"chunk={i}")
 
 
 class ChunkSource:
@@ -72,6 +88,7 @@ class ChunkSource:
         """(X_chunk, y_chunk) for chunk ``i``; the last chunk may be short."""
         if not 0 <= i < self.n_chunks:
             raise IndexError(f"chunk {i} out of range [0, {self.n_chunks})")
+        _fire_read(i)
         lo = i * self.chunk_rows
         return self._rows(lo, min(self.n, lo + self.chunk_rows))
 
@@ -111,7 +128,8 @@ class ChunkSource:
             while (hi < sorted_idx.shape[0]
                    and int(sorted_idx[hi]) // self.chunk_rows == c):
                 hi += 1
-            Xc, _ = self.chunk(c)
+            Xc, _ = call_with_retry(READ_RETRY, self.chunk, c,
+                                    label=f"take-rows-chunk-{c}")
             local = sorted_idx[lo:hi] - c * self.chunk_rows
             out[order[lo:hi]] = np.asarray(Xc)[local]
             lo = hi
@@ -389,6 +407,7 @@ class HostPartition(ChunkSource):
         tail chunk) or empty (tail shorter than this host's slot)."""
         if not 0 <= i < self.n_chunks:
             raise IndexError(f"chunk {i} out of range [0, {self.n_chunks})")
+        _fire_read(i)
         gl = i * self.chunk_rows
         a, b = _span_block(gl, min(self.n, gl + self.chunk_rows),
                            self.chunk_rows, *self.process_span)
@@ -460,6 +479,7 @@ class PartitionChunkSource(ChunkSource):
     def chunk(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
         if not 0 <= i < self.n_chunks:
             raise IndexError(f"chunk {i} out of range [0, {self.n_chunks})")
+        _fire_read(i)
         lo = int(self.local._offsets[i])
         hi = int(self.local._offsets[i + 1])
         if lo >= hi:

@@ -1,0 +1,52 @@
+"""Seeded, deterministic fault injection (the chaos harness).
+
+The paper's deployment claim — "conjoining with Map-Reduce gives the
+fault tolerance necessary for operation on large clusters" (§4) — is a
+promise about surviving failures. This package provides the failures:
+a :class:`FaultPlan` describes, deterministically and per-seed, which
+instrumented call sites throw, which checkpoint commits are torn, which
+fleet workers get SIGKILLed or stalled, and when. The recovery machinery
+(`repro.util.retry`, `repro.sharding.supervisor`, the serve engine's
+circuit breaker) is validated against it in tests/test_faults.py,
+tests/test_supervisor.py and tests/test_serve_health.py.
+
+Instrumented in-process sites:
+
+==============  ==========================================================
+``chunk.read``    ``repro.data.chunks.ChunkSource.chunk`` (and the
+                  partition wrappers) — every stream-plan disk read
+``ckpt.commit``   ``repro.checkpoint.ckpt.save_checkpoint`` — before the
+                  atomic tmp-write/rename commit
+``serve.dispatch``  ``repro.serve.engine.ServeEngine._dispatch`` — before
+                  the batched decide call
+==============  ==========================================================
+
+Fleet-level events (SIGKILL / SIGSTOP-SIGCONT stalls) ride on the plan's
+``schedule`` and are executed from outside the victim by
+``tests/multihost/rig.run_fleet(faults=...)``.
+
+Cross-process activation: export ``REPRO_FAULTS`` (the plan's
+:meth:`FaultPlan.to_json`) and every python process that imports
+``repro.faults`` installs the plan at import time — this is how the
+supervisor smoke injects a suicide rule into spawned training workers.
+Stdlib-only: importing this package never touches jax or numpy.
+"""
+from repro.faults.plan import (
+    FAULT_ENV,
+    FaultPlan,
+    FaultRule,
+    active,
+    fire,
+    install,
+    uninstall,
+)
+
+__all__ = [
+    "FAULT_ENV",
+    "FaultPlan",
+    "FaultRule",
+    "active",
+    "fire",
+    "install",
+    "uninstall",
+]

@@ -1,0 +1,260 @@
+"""FaultPlan: deterministic, seeded fault schedules for chaos tests.
+
+A plan is a list of :class:`FaultRule`\\ s (in-process faults fired at
+instrumented call sites) plus a fleet ``schedule`` (kill/stall events a
+process supervisor or test rig executes from outside the victim). Rules
+are counted, not random, unless an explicit ``probability`` is given —
+and even then the coin is seeded per (plan seed, site, rule index), so
+two runs of the same plan inject the same faults at the same calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import logging
+import os
+import random
+import signal
+import threading
+from typing import Any, Dict, List, Optional, Sequence
+
+log = logging.getLogger("repro.faults")
+
+#: Environment variable holding a JSON-serialised plan; when set, the plan
+#: is installed automatically at ``repro.faults`` import time so faults
+#: reach subprocesses (training workers, CLI runs) without code changes.
+FAULT_ENV = "REPRO_FAULTS"
+
+_EXC_TYPES: Dict[str, type] = {
+    "OSError": OSError,
+    "IOError": OSError,
+    "RuntimeError": RuntimeError,
+    "ValueError": ValueError,
+    "TimeoutError": TimeoutError,
+    "KeyError": KeyError,
+}
+
+_ACTIONS = ("raise", "torn", "kill")
+
+
+@dataclasses.dataclass
+class FaultRule:
+    """One injection rule bound to an instrumented ``site``.
+
+    Matching is by per-site call count (1-based): the first ``after``
+    calls pass clean, then the rule fires on every ``every``-th call
+    until it has fired ``times`` times (``times=None`` = persistent
+    fault, fires forever). If ``probability`` is set it replaces the
+    counting gate with a seeded coin flip per eligible call.
+
+    ``action`` selects the failure mode:
+      - ``raise``: raise ``exc`` at the call site (transient I/O error),
+      - ``torn``: the site simulates a partial write (checkpoint commits
+        leave garbage at the destination) and then raises ``exc``,
+      - ``kill``: the process SIGKILLs itself — a crash mid-operation.
+
+    ``flag`` (a file path) makes the rule fire at most once *across
+    processes and restarts*: the first process to fire creates the flag
+    file atomically and later consults — including in a restarted
+    worker — see it and stay clean. This is how "kill the worker once,
+    then let the supervisor's restart succeed" is expressed.
+    """
+    site: str
+    times: Optional[int] = 1
+    after: int = 0
+    every: int = 1
+    probability: Optional[float] = None
+    exc: str = "OSError"
+    action: str = "raise"
+    message: str = ""
+    flag: Optional[str] = None
+
+    def __post_init__(self):
+        if self.action not in _ACTIONS:
+            raise ValueError(f"unknown fault action {self.action!r}; "
+                             f"expected one of {_ACTIONS}")
+        if self.exc not in _EXC_TYPES:
+            raise ValueError(f"unknown exception name {self.exc!r}; "
+                             f"expected one of {sorted(_EXC_TYPES)}")
+        if self.every < 1:
+            raise ValueError("every must be >= 1")
+        if self.after < 0:
+            raise ValueError("after must be >= 0")
+        if self.times is not None and self.times < 1:
+            raise ValueError("times must be >= 1 (or None for persistent)")
+
+    def exc_type(self) -> type:
+        return _EXC_TYPES[self.exc]
+
+
+class FaultPlan:
+    """A deterministic schedule of in-process faults and fleet events.
+
+    Thread-safe: instrumented sites consult the plan from prefetch and
+    writer threads. Usable as a context manager (installs the plan for
+    the current process) and JSON round-trippable for the ``REPRO_FAULTS``
+    cross-process path.
+    """
+
+    def __init__(self, seed: int = 0,
+                 rules: Sequence[FaultRule] = (),
+                 schedule: Sequence[Dict[str, Any]] = ()):
+        self.seed = int(seed)
+        self.rules: List[FaultRule] = list(rules)
+        #: fleet events executed by an external watchdog (rig/supervisor):
+        #: {"kind": "kill"|"stall", "pid": proc index, "at": seconds,
+        #:  "duration": seconds (stall only)}
+        self.schedule: List[Dict[str, Any]] = [dict(e) for e in schedule]
+        self._lock = threading.Lock()
+        self._calls: Dict[str, int] = {}
+        self._fired: Dict[str, int] = {}
+        self._rule_fired: List[int] = [0] * len(self.rules)
+        self._rngs: Dict[int, random.Random] = {}
+
+    # -- construction -----------------------------------------------------
+    def inject(self, site: str, **kw) -> "FaultPlan":
+        """Append an in-process rule (chainable)."""
+        self.rules.append(FaultRule(site=site, **kw))
+        self._rule_fired.append(0)
+        return self
+
+    def kill(self, pid: int, after_s: float) -> "FaultPlan":
+        """Schedule SIGKILL of fleet process ``pid`` ``after_s`` seconds in."""
+        self.schedule.append({"kind": "kill", "pid": int(pid),
+                              "at": float(after_s)})
+        return self
+
+    def stall(self, pid: int, after_s: float,
+              duration_s: float) -> "FaultPlan":
+        """Schedule a SIGSTOP/SIGCONT stall of fleet process ``pid``."""
+        self.schedule.append({"kind": "stall", "pid": int(pid),
+                              "at": float(after_s),
+                              "duration": float(duration_s)})
+        return self
+
+    # -- consultation (hot path) ------------------------------------------
+    def consult(self, site: str) -> Optional[FaultRule]:
+        """Record one call at ``site``; return the rule to fire, if any."""
+        with self._lock:
+            n = self._calls.get(site, 0) + 1
+            self._calls[site] = n
+            for idx, rule in enumerate(self.rules):
+                if rule.site != site:
+                    continue
+                if n <= rule.after:
+                    continue
+                if rule.probability is not None:
+                    rng = self._rngs.get(idx)
+                    if rng is None:
+                        rng = random.Random(
+                            f"{self.seed}:{site}:{idx}")
+                        self._rngs[idx] = rng
+                    if rng.random() >= rule.probability:
+                        continue
+                else:
+                    k = n - rule.after
+                    if (k - 1) % rule.every != 0:
+                        continue
+                    if rule.times is not None and \
+                            self._rule_fired[idx] >= rule.times:
+                        continue
+                if rule.flag is not None and not self._claim_flag(rule.flag):
+                    continue
+                self._rule_fired[idx] += 1
+                self._fired[site] = self._fired.get(site, 0) + 1
+                return rule
+        return None
+
+    @staticmethod
+    def _claim_flag(path: str) -> bool:
+        """Atomically claim a once-across-processes flag file."""
+        try:
+            fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            return False
+        os.write(fd, str(os.getpid()).encode())
+        os.close(fd)
+        return True
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {"calls": dict(self._calls), "fired": dict(self._fired)}
+
+    # -- (de)serialisation -------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({
+            "seed": self.seed,
+            "rules": [dataclasses.asdict(r) for r in self.rules],
+            "schedule": list(self.schedule),
+        })
+
+    @classmethod
+    def from_json(cls, text: str) -> "FaultPlan":
+        doc = json.loads(text)
+        rules = [FaultRule(**r) for r in doc.get("rules", ())]
+        return cls(seed=doc.get("seed", 0), rules=rules,
+                   schedule=doc.get("schedule", ()))
+
+    @classmethod
+    def from_env(cls, environ=os.environ) -> Optional["FaultPlan"]:
+        text = environ.get(FAULT_ENV)
+        return cls.from_json(text) if text else None
+
+    # -- context manager ---------------------------------------------------
+    def __enter__(self) -> "FaultPlan":
+        install(self)
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        uninstall()
+
+
+_active: Optional[FaultPlan] = None
+
+
+def install(plan: FaultPlan) -> None:
+    """Make ``plan`` the process-wide active plan."""
+    global _active
+    _active = plan
+
+
+def uninstall() -> None:
+    global _active
+    _active = None
+
+
+def active() -> Optional[FaultPlan]:
+    return _active
+
+
+def fire(site: str, detail: str = "") -> Optional[str]:
+    """Instrumentation hook: consult the active plan at ``site``.
+
+    Returns ``None`` (no fault — also the fast path when no plan is
+    installed), raises the rule's exception (``raise`` action), SIGKILLs
+    the process (``kill``), or returns the action name (``torn``) so the
+    site can simulate its own partial-failure mode before raising.
+    """
+    plan = _active
+    if plan is None:
+        return None
+    rule = plan.consult(site)
+    if rule is None:
+        return None
+    msg = rule.message or f"injected fault at {site}" + (
+        f" ({detail})" if detail else "")
+    log.warning("fault fired: site=%s action=%s detail=%s",
+                site, rule.action, detail)
+    if rule.action == "kill":
+        os.kill(os.getpid(), signal.SIGKILL)
+    if rule.action == "raise":
+        raise rule.exc_type()(msg)
+    return rule.action
+
+
+# Cross-process activation: workers spawned with REPRO_FAULTS in their
+# environment pick the plan up on first import of repro.faults.
+_env_plan = FaultPlan.from_env()
+if _env_plan is not None:
+    install(_env_plan)
+del _env_plan

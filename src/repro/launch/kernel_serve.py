@@ -156,11 +156,13 @@ def serve_concurrent(registry: ModelRegistry, *, clients: int, requests: int,
                             max_rows=max_batch, seed=seed)
     with ServeEngine(registry, engine_config) as engine:
         report = run_load(engine_target(engine), streams, label="engine")
-        snap = engine.metrics.snapshot()
+        snap = engine.metrics.snapshot()   # health read while still live
     stats = {**report.row(),
              "occupancy": round(snap["occupancy"], 4),
              "requests_per_dispatch": round(snap["requests_per_dispatch"], 2),
-             "rejection_rate": round(snap["rejection_rate"], 4)}
+             "rejection_rate": round(snap["rejection_rate"], 4),
+             "health": snap["health"],
+             "breaker_opened": snap["breaker_opened"]}
     return report, stats
 
 

@@ -109,7 +109,19 @@ def main():
                     help="total controller processes (hosts) in this run")
     ap.add_argument("--process-id", type=int, default=0,
                     help="this host's index in [0, --num-processes)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run the fit under the fault-tolerant supervisor: "
+                         "spawn --num-processes worker processes, restart "
+                         "the fleet from the latest committed checkpoint "
+                         "when a worker dies (capped exponential backoff + "
+                         "jitter; shrinks the fleet after repeated failures "
+                         "— requires --ckpt-interval)")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="restart budget under --supervise (0 = fail fast)")
     args = ap.parse_args()
+
+    if args.supervise:
+        raise SystemExit(_supervise(ap, args))
 
     if args.num_processes > 1 and not args.coordinator:
         ap.error("--num-processes > 1 needs --coordinator host:port")
@@ -285,7 +297,8 @@ def main():
             f"({cs['bytes_written']} bytes, {cs['write_seconds']:.3f}s "
             f"{'sync' if args.ckpt_sync else 'async'}, "
             f"dropped={cs['snapshots_dropped']}, last_step={cs['last_step']}"
-            f", errors={cs['errors']})")
+            f", errors={cs['errors']}, retries={cs.get('write_retries', 0)}"
+            f", io_warnings={cs.get('io_warnings', 0)})")
 
     if multihost.active():
         _eval_multihost(km, X, y, mesh, args, say)
@@ -300,6 +313,86 @@ def main():
             print(f"[save ] {km.save(args.save)}")
         multihost.sync("save")     # checkpoint durable before anyone exits
     multihost.sync("done")
+
+
+def _supervise(ap, args) -> int:
+    """The ``--supervise`` branch: relaunch this CLI under the supervisor.
+
+    The parent never initializes a mesh — it is a pure process manager.
+    Each worker is this same command line minus the supervision flags,
+    plus per-process coordinator flags (multi-process fleets) and
+    ``--resume`` once the checkpoint directory holds a committed step.
+    """
+    import sys
+
+    from repro.sharding.supervisor import (Supervisor, SupervisorConfig,
+                                           SupervisorError)
+
+    if args.solver != "tron" or args.ckpt_interval <= 0:
+        ap.error("--supervise restarts from committed checkpoints and "
+                 "needs --solver tron with --ckpt-interval N")
+    if args.process_id != 0 or args.coordinator:
+        ap.error("--supervise owns the fleet topology; don't combine it "
+                 "with --coordinator/--process-id")
+    from repro.checkpoint import steps_dir_for
+    ckpt_dir = args.ckpt_dir or (steps_dir_for(args.save) if args.save
+                                 else None)
+    if not ckpt_dir:
+        ap.error("--supervise needs a checkpoint directory: pass "
+                 "--ckpt-dir or --save")
+
+    # Child argv = this argv minus the supervision/topology/resume flags
+    # (the supervisor decides topology and resume per attempt).
+    strip_valued = {"--max-restarts", "--coordinator", "--num-processes",
+                    "--process-id"}
+    argv, base, i = sys.argv[1:], [], 0
+    while i < len(argv):
+        tok = argv[i]
+        if tok == "--supervise":
+            i += 1
+        elif tok in strip_valued:
+            i += 2
+        elif tok == "--resume":
+            i += 1
+            if i < len(argv) and not argv[i].startswith("--"):
+                i += 1                 # nargs="?": swallow the DIR value
+        else:
+            base.append(tok)
+            i += 1
+
+    def build_cmd(pid, nproc, port, resume):
+        cmd = [sys.executable, "-m", "repro.launch.kernel_train", *base]
+        if nproc > 1:
+            cmd += ["--coordinator", f"127.0.0.1:{port}",
+                    "--num-processes", str(nproc),
+                    "--process-id", str(pid)]
+        if resume:
+            cmd += ["--resume", ckpt_dir]
+        return cmd
+
+    sup = Supervisor(build_cmd, num_processes=args.num_processes,
+                     ckpt_dir=ckpt_dir,
+                     config=SupervisorConfig(max_restarts=args.max_restarts))
+    try:
+        result = sup.run()
+    except SupervisorError as err:
+        print(err)
+        return 1
+    # surface the winning attempt's process-0 output (the say() lines a
+    # non-supervised run would have printed)
+    log0 = result.final_attempt["logs"][0]
+    try:
+        with open(log0, "r", errors="replace") as fh:
+            tail = fh.read().splitlines()[-30:]
+        for line in tail:
+            print(line)
+    except OSError:
+        pass
+    print(f"[supervise] done: restarts={result.restarts} "
+          f"processes={result.final_processes}"
+          f"{' (shrunk)' if result.shrunk else ''} "
+          f"total={result.total_s:.1f}s logs={sup.log_dir}")
+    return 0
 
 
 def _eval_multihost(km, X, y, mesh, args, say) -> None:

@@ -11,12 +11,20 @@ queue, in-flight cap, per-request deadlines) turns overload into clean
 :class:`Rejected` errors instead of collapse. ``repro.serve.loadgen``
 is the SLO harness that proves the coalescing wins
 (``benchmarks/serve_slo.py`` -> ``BENCH_serve.json``).
+
+Self-healing (``repro.serve.health``): dispatch failures are contained to
+their batch, a per-model :class:`CircuitBreaker` fast-rejects a
+persistently failing model with :class:`CircuitOpen` until a cooldown
+probe closes it again, and the engine publishes a readiness gauge
+(STARTING/READY/DEGRADED/DRAINING) through :class:`ServeMetrics`.
 """
 from repro.api.infer import BucketedDecider, bucket_rows, scatter_rows
-from repro.serve.batching import (EngineStopped, QueueFull, Rejected,
-                                  Request, RequestQueue, RequestTimeout,
-                                  ServeFuture)
+from repro.serve.batching import (CircuitOpen, EngineStopped, QueueFull,
+                                  Rejected, Request, RequestQueue,
+                                  RequestTimeout, ServeFuture)
 from repro.serve.engine import EngineConfig, ServeEngine
+from repro.serve.health import (DEGRADED, DRAINING, HEALTH_STATES, READY,
+                                STARTING, CircuitBreaker)
 from repro.serve.loadgen import (LoadReport, LoadRequest, baseline_target,
                                  engine_target, make_workload, run_load)
 from repro.serve.metrics import ServeMetrics, percentiles
@@ -29,6 +37,8 @@ __all__ = [
     "ModelRegistry", "ServedModel", "model_dim", "serving_plan",
     "ServeFuture", "Request", "RequestQueue",
     "Rejected", "QueueFull", "RequestTimeout", "EngineStopped",
+    "CircuitOpen", "CircuitBreaker", "HEALTH_STATES",
+    "STARTING", "READY", "DEGRADED", "DRAINING",
     "ServeMetrics", "percentiles",
     "LoadRequest", "LoadReport", "make_workload", "run_load",
     "baseline_target", "engine_target",

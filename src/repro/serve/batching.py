@@ -34,6 +34,12 @@ class RequestTimeout(Rejected):
     """The request's deadline expired before its rows were dispatched."""
 
 
+class CircuitOpen(Rejected):
+    """This model's circuit breaker is open after repeated dispatch
+    failures — the request is fast-rejected without queueing. Retry after
+    the breaker's cooldown (the next caller through probes the model)."""
+
+
 class EngineStopped(RuntimeError):
     """The engine shut down while this request was pending."""
 

@@ -27,19 +27,31 @@ deadlines reject queued-too-long work with
 :class:`~repro.serve.batching.RequestTimeout` before it wastes a dispatch.
 Rejections are clean — the batcher never wedges, and ``stop()`` fails
 stragglers with :class:`~repro.serve.batching.EngineStopped`.
+
+Self-healing: a dispatch exception fails only its batch (the guard in
+:meth:`ServeEngine._dispatch`), a per-model
+:class:`~repro.serve.health.CircuitBreaker` turns a persistently failing
+model into fast :class:`~repro.serve.batching.CircuitOpen` rejections at
+submit (then probes its way closed again after a cooldown), and the
+engine-level health gauge (STARTING/READY/DEGRADED/DRAINING) is exposed
+through ``ServeMetrics``.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 import time
-from typing import Optional, Sequence
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
+from repro import faults
 from repro.api.infer import scatter_rows
-from repro.serve.batching import (EngineStopped, QueueFull, Request,
-                                  RequestQueue, RequestTimeout, ServeFuture)
+from repro.serve.batching import (CircuitOpen, EngineStopped, QueueFull,
+                                  Request, RequestQueue, RequestTimeout,
+                                  ServeFuture)
+from repro.serve.health import (DEGRADED, DRAINING, READY, STARTING,
+                                CircuitBreaker)
 from repro.serve.metrics import ServeMetrics
 from repro.serve.registry import ModelRegistry
 
@@ -56,12 +68,20 @@ class EngineConfig:
     submit. ``timeout_s`` is the default per-request deadline (None =
     wait forever); ``poll_s`` is the batcher's idle wait between queue
     checks (latency floor when the queue is empty is one notify, not one
-    poll — the queue wakes the batcher on push)."""
+    poll — the queue wakes the batcher on push).
+
+    ``breaker_threshold`` consecutive dispatch failures open a model's
+    circuit (submits fast-reject with ``CircuitOpen`` until a probe
+    succeeds after ``breaker_cooldown_s``); 0 disables the breaker. The
+    default is deliberately above one so an isolated failure — a model
+    swapped out for a single batch — never trips it."""
     max_batch: int = 256
     max_queue: int = 1024
     max_inflight: int = 4096
     timeout_s: Optional[float] = None
     poll_s: float = 0.05
+    breaker_threshold: int = 5
+    breaker_cooldown_s: float = 5.0
 
 
 class ServeEngine:
@@ -86,6 +106,9 @@ class ServeEngine:
         self._inflight_lock = threading.Lock()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        self._breakers: Dict[str, CircuitBreaker] = {}
+        self._breaker_lock = threading.Lock()
+        self.metrics.set_health(STARTING)
         if autostart:
             self.start()
 
@@ -102,7 +125,8 @@ class ServeEngine:
         self._thread = threading.Thread(target=self._batch_loop,
                                         name="serve-batcher", daemon=True)
         self._thread.start()
-        return self
+        self._update_health()        # READY, or DEGRADED if circuits stayed
+        return self                  # open across a stop/start cycle
 
     def stop(self, timeout: float = 10.0) -> None:
         """Stop the batcher and fail every still-pending request with
@@ -113,6 +137,7 @@ class ServeEngine:
         :class:`EngineStopped` at push — it cannot be stranded after the
         drain with its in-flight slot leaked. ``start()`` afterwards
         restores a fully serviceable engine."""
+        self.metrics.set_health(DRAINING)
         self._queue.close()
         self._stop.set()
         self._queue.notify()
@@ -122,12 +147,35 @@ class ServeEngine:
         for req in self._queue.drain():
             self._finish(req, exc=EngineStopped("serve engine stopped"),
                          counter="cancelled")
+        self.metrics.set_health(STARTING)   # stopped = not serving yet
 
     def __enter__(self) -> "ServeEngine":
         return self.start()
 
     def __exit__(self, *exc) -> None:
         self.stop()
+
+    @property
+    def health(self) -> str:
+        """STARTING / READY / DEGRADED / DRAINING (see repro.serve.health)."""
+        return self.metrics.health
+
+    def _breaker(self, model: str) -> CircuitBreaker:
+        with self._breaker_lock:
+            br = self._breakers.get(model)
+            if br is None:
+                br = CircuitBreaker(self.config.breaker_threshold,
+                                    self.config.breaker_cooldown_s)
+                self._breakers[model] = br
+            return br
+
+    def _update_health(self) -> None:
+        if not self.running:
+            return                    # stop() owns the gauge while draining
+        with self._breaker_lock:
+            degraded = any(b.state != CircuitBreaker.CLOSED
+                           for b in self._breakers.values())
+        self.metrics.set_health(DEGRADED if degraded else READY)
 
     # ---------------------------------------------------------- admission
     def submit(self, X, *, model: Optional[str] = None,
@@ -144,6 +192,12 @@ class ServeEngine:
             raise ValueError(f"model {entry.name!r} serves (rows, {entry.d}) "
                              f"requests, got {X.shape}")
         self.metrics.add(submitted=1)
+        if not self._breaker(entry.name).allow():
+            self.metrics.add(rejected_open=1)
+            raise CircuitOpen(
+                f"model {entry.name!r}: circuit open after repeated "
+                f"dispatch failures; retry after "
+                f"{self.config.breaker_cooldown_s:g}s cooldown")
         future = ServeFuture()
         if X.shape[0] == 0:              # nothing to dispatch: empty margins
             shape = (0, entry.n_classes) if entry.n_classes else (0,)
@@ -218,14 +272,21 @@ class ServeEngine:
             # model unregistered mid-flight (or a bad request that slipped
             # admission) must fail ITS batch, not kill the batcher thread
             # with every in-flight slot still held
+            faults.fire("serve.dispatch", detail=model)
             entry = self.registry.get(model)
             block = reqs[0].X if len(reqs) == 1 \
                 else np.concatenate([r.X for r in reqs], axis=0)
             margins = np.asarray(entry.decider(block))
         except Exception as exc:         # fail the batch, keep serving
+            if self._breaker(model).record_failure():
+                self.metrics.add(breaker_opened=1)
+                self._update_health()
             for req in reqs:
                 self._finish(req, exc=exc, counter="failed")
             return
+        if self._breaker(model).record_success():
+            self.metrics.add(breaker_closed=1)
+            self._update_health()
         self.metrics.add(dispatches=1, dispatched_rows=rows,
                          padded_rows=entry.decider.padded_rows(rows),
                          coalesced_requests=len(reqs))

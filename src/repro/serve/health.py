@@ -1,0 +1,122 @@
+"""Self-healing serving: per-model circuit breaker + health states.
+
+A dispatch exception already fails only its batch (the engine thread
+survives — ``ServeEngine._dispatch``'s guard). What that alone cannot do
+is protect *callers* from a model that fails every batch: each doomed
+request still waits in queue, occupies an in-flight slot, and burns a
+dispatch before erroring. The :class:`CircuitBreaker` converts a
+persistently failing model into fast, cheap rejections at ``submit``
+(:class:`~repro.serve.batching.CircuitOpen`) and then probes its way back
+once the fault clears — the classic CLOSED → OPEN → HALF_OPEN machine.
+
+Health is the engine-level summary the ops surface (``kernel_serve``,
+``ServeMetrics.snapshot()``) exposes:
+
+    STARTING  constructed / stopped, batcher not serving
+    READY     batcher live, every model circuit closed
+    DEGRADED  batcher live, at least one circuit open or probing
+    DRAINING  stop() in progress, failing stragglers
+
+Validated against injected ``serve.dispatch`` faults in
+tests/test_serve_health.py.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable
+
+STARTING = "starting"
+READY = "ready"
+DEGRADED = "degraded"
+DRAINING = "draining"
+HEALTH_STATES = (STARTING, READY, DEGRADED, DRAINING)
+
+
+class CircuitBreaker:
+    """Thread-safe per-model circuit breaker.
+
+    CLOSED counts consecutive dispatch failures; at ``threshold`` the
+    circuit OPENs and :meth:`allow` answers False (the engine fast-rejects
+    without queueing). After ``cooldown_s`` the next :meth:`allow` admits
+    exactly one probe (HALF_OPEN); the probe's outcome either re-CLOSEs
+    the circuit or re-OPENs it for another cooldown. A probe that never
+    reports back (its request timed out in queue, the engine stopped) is
+    presumed lost after another ``cooldown_s`` and a new probe is allowed
+    — the breaker can never wedge in HALF_OPEN.
+
+    ``threshold=0`` disables the breaker (always allows, never opens).
+    """
+
+    CLOSED = "closed"
+    OPEN = "open"
+    HALF_OPEN = "half_open"
+
+    def __init__(self, threshold: int = 5, cooldown_s: float = 5.0,
+                 clock: Callable[[], float] = time.monotonic):
+        if threshold < 0:
+            raise ValueError(f"threshold must be >= 0, got {threshold}")
+        self.threshold = int(threshold)
+        self.cooldown_s = float(cooldown_s)
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._state = self.CLOSED
+        self._failures = 0          # consecutive, while CLOSED
+        self._opened_at = 0.0
+        self._probe_at = 0.0        # when the in-flight probe was admitted
+
+    @property
+    def state(self) -> str:
+        with self._lock:
+            return self._state
+
+    @property
+    def consecutive_failures(self) -> int:
+        with self._lock:
+            return self._failures
+
+    def allow(self) -> bool:
+        """May a new request for this model be admitted right now?"""
+        if self.threshold == 0:
+            return True
+        with self._lock:
+            if self._state == self.CLOSED:
+                return True
+            now = self._clock()
+            if self._state == self.OPEN:
+                if now < self._opened_at + self.cooldown_s:
+                    return False
+                self._state = self.HALF_OPEN
+                self._probe_at = now
+                return True
+            # HALF_OPEN: one probe at a time, but a lost probe expires
+            if now < self._probe_at + self.cooldown_s:
+                return False
+            self._probe_at = now
+            return True
+
+    def record_success(self) -> bool:
+        """Report a successful dispatch; True if this re-closed the circuit."""
+        with self._lock:
+            reopened = self._state != self.CLOSED
+            self._state = self.CLOSED
+            self._failures = 0
+            return reopened
+
+    def record_failure(self) -> bool:
+        """Report a failed dispatch; True if this transition OPENed the
+        circuit (first open or a failed probe re-opening it)."""
+        if self.threshold == 0:
+            return False
+        with self._lock:
+            if self._state == self.HALF_OPEN:
+                self._state = self.OPEN
+                self._opened_at = self._clock()
+                return True
+            self._failures += 1
+            if self._state == self.CLOSED and \
+                    self._failures >= self.threshold:
+                self._state = self.OPEN
+                self._opened_at = self._clock()
+                return True
+            return False

@@ -55,13 +55,26 @@ class ServeMetrics:
     """
 
     _FIELDS = ("submitted", "completed", "rejected_full", "rejected_timeout",
-               "failed", "cancelled", "dispatches", "dispatched_rows",
-               "padded_rows", "coalesced_requests")
+               "rejected_open", "failed", "cancelled", "dispatches",
+               "dispatched_rows", "padded_rows", "coalesced_requests",
+               "breaker_opened", "breaker_closed")
 
     def __init__(self):
         self._lock = threading.Lock()
         for f in self._FIELDS:
             setattr(self, f, 0)
+        # health is a gauge, not a counter: the engine's readiness state
+        # ("starting"/"ready"/"degraded"/"draining") as of the last update
+        self._health = "starting"
+
+    def set_health(self, state: str) -> None:
+        with self._lock:
+            self._health = state
+
+    @property
+    def health(self) -> str:
+        with self._lock:
+            return self._health
 
     def add(self, **deltas: int) -> None:
         with self._lock:
@@ -82,18 +95,22 @@ class ServeMetrics:
 
     def rejection_rate(self) -> float:
         with self._lock:
-            rej = self.rejected_full + self.rejected_timeout
+            rej = (self.rejected_full + self.rejected_timeout
+                   + self.rejected_open)
             return rej / self.submitted if self.submitted else 0.0
 
     def snapshot(self) -> Dict[str, float]:
         with self._lock:
             snap = {f: getattr(self, f) for f in self._FIELDS}
+            health = self._health
         snap["occupancy"] = (snap["dispatched_rows"] / snap["padded_rows"]
                             if snap["padded_rows"] else 0.0)
         snap["requests_per_dispatch"] = (
             snap["coalesced_requests"] / snap["dispatches"]
             if snap["dispatches"] else 0.0)
-        rej = snap["rejected_full"] + snap["rejected_timeout"]
+        rej = (snap["rejected_full"] + snap["rejected_timeout"]
+               + snap["rejected_open"])
         snap["rejection_rate"] = (rej / snap["submitted"]
                                   if snap["submitted"] else 0.0)
+        snap["health"] = health
         return snap

@@ -1,0 +1,6 @@
+"""Cross-cutting utilities shared by the data, checkpoint, serving and
+sharding layers. Stdlib-only: importing this package must stay cheap
+enough for process supervisors and test rigs that never touch jax."""
+from repro.util.retry import RetryPolicy, call_with_retry
+
+__all__ = ["RetryPolicy", "call_with_retry"]

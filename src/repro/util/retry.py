@@ -1,0 +1,100 @@
+"""Shared retry policy: capped exponential backoff + deterministic jitter.
+
+One policy type serves every transient-failure consumer in the repo — the
+stream chunk feeder (per-chunk disk reads), the async checkpoint writer
+(step-file commits), and the multi-host supervisor (fleet restarts reuse
+:meth:`RetryPolicy.delay` for its backoff schedule). Keeping them on one
+implementation means the retry semantics can be proven once
+(tests/test_retry.py) and fault-injection tests (tests/test_faults.py)
+exercise the same code path production uses.
+
+Jitter is *deterministic*: a hash of ``(label, attempt)`` spreads
+concurrent retriers apart without an RNG whose state would differ between
+a run and its bitwise resume. Stdlib-only by design — the supervisor and
+the multihost test rig import this without paying for jax.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import logging
+import time
+from typing import Callable, Optional
+
+log = logging.getLogger("repro.retry")
+
+
+def _is_transient_io(exc: BaseException) -> bool:
+    """Default retryable predicate: plain I/O errors (the transient class
+    chunk reads and checkpoint commits actually see). Everything else —
+    ValueError, BadZipFile, KeyboardInterrupt — is not retried."""
+    return isinstance(exc, OSError)
+
+
+def _jitter_frac(label: str, attempt: int) -> float:
+    """Deterministic pseudo-uniform fraction in [0, 1) from (label, attempt)."""
+    h = hashlib.sha256(f"{label}:{attempt}".encode()).digest()
+    return int.from_bytes(h[:8], "big") / float(1 << 64)
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """How many times to retry, how long to wait, and what counts as
+    transient.
+
+    ``max_attempts`` bounds total calls (1 = no retry). The delay before
+    attempt k+1 is ``min(max_backoff_s, backoff_s * backoff_mult**(k-1))``
+    stretched by up to ``jitter`` (a fraction) of deterministic jitter.
+    ``retryable`` is the exception predicate; the default retries
+    ``OSError`` only.
+    """
+    max_attempts: int = 3
+    backoff_s: float = 0.05
+    backoff_mult: float = 2.0
+    max_backoff_s: float = 2.0
+    jitter: float = 0.1
+    retryable: Callable[[BaseException], bool] = _is_transient_io
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(
+                f"max_attempts must be >= 1, got {self.max_attempts}")
+        if self.backoff_s < 0 or self.max_backoff_s < 0:
+            raise ValueError("backoff times must be non-negative")
+
+    def delay(self, attempt: int, label: str = "") -> float:
+        """Backoff before retrying after failed attempt ``attempt`` (1-based)."""
+        base = min(self.max_backoff_s,
+                   self.backoff_s * self.backoff_mult ** (attempt - 1))
+        return base * (1.0 + self.jitter * _jitter_frac(label, attempt))
+
+
+def call_with_retry(policy: RetryPolicy, fn: Callable, *args,
+                    label: str = "",
+                    on_retry: Optional[Callable] = None,
+                    sleep: Callable[[float], None] = time.sleep,
+                    **kwargs):
+    """Call ``fn(*args, **kwargs)``, retrying per ``policy``.
+
+    Each failed-but-retryable attempt is logged (per-attempt, with the
+    delay) and reported to ``on_retry(attempt, exc, delay_s)`` so callers
+    can count retries in their accounting. The final failure (attempt cap
+    reached, or a non-retryable exception) propagates unchanged.
+    """
+    attempt = 0
+    while True:
+        attempt += 1
+        try:
+            return fn(*args, **kwargs)
+        except BaseException as exc:
+            if attempt >= policy.max_attempts or not policy.retryable(exc):
+                raise
+            d = policy.delay(attempt, label)
+            log.warning("retryable failure in %s (attempt %d/%d): %s — "
+                        "retrying in %.3fs",
+                        label or getattr(fn, "__name__", "call"), attempt,
+                        policy.max_attempts, exc, d)
+            if on_retry is not None:
+                on_retry(attempt, exc, d)
+            if d > 0:
+                sleep(d)

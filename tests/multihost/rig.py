@@ -12,6 +12,11 @@ Hadoop deployment in miniature:
 * ``kill=(pid, after_s)`` SIGKILLs a chosen worker mid-run to prove
   worker loss surfaces as a fast, attributable :class:`FleetError`
   rather than a hang;
+* ``faults=FaultPlan`` generalizes that arm: the plan's fleet schedule
+  (``.kill(pid, after_s)`` / ``.stall(pid, after_s, duration_s)``) is
+  executed by the watchdog — SIGSTOP/SIGCONT stalls model a straggler or
+  a paused VM rather than a death — and the plan's in-process rules ride
+  into every worker via the ``REPRO_FAULTS`` environment variable;
 * per-process logs are captured and attached to every failure.
 
 Process 0's final stdout line is the worker's JSON result payload.
@@ -21,13 +26,14 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import signal
 import socket
 import subprocess
 import sys
 import tempfile
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 _HERE = os.path.dirname(os.path.abspath(__file__))
 WORKER = os.path.join(_HERE, "worker.py")
@@ -71,15 +77,25 @@ class FleetError(RuntimeError):
 def run_fleet(task: str, num_processes: int, devices_per_proc: int = 1, *,
               extra: Sequence[str] = (), timeout: float = 600.0,
               kill: Optional[Tuple[int, float]] = None,
+              faults: Optional[Any] = None,
               env_extra: Optional[Dict[str, str]] = None) -> FleetResult:
     """Run ``worker.py <task> <nproc> <pid> <port> [extra...]`` N times.
 
     ``kill=(pid, after_s)`` SIGKILLs worker ``pid`` once it has been
-    alive ``after_s`` seconds (the fault-injection arm). Raises
-    :class:`FleetError` on any nonzero exit or on timeout; the watchdog
-    guarantees the failure is reported within ~``timeout`` seconds even
-    when survivors block inside a collective.
+    alive ``after_s`` seconds (the fault-injection arm); ``faults`` (a
+    :class:`repro.faults.FaultPlan`) carries a whole schedule of kill and
+    SIGSTOP/SIGCONT stall events, plus in-process rules shipped to every
+    worker via ``REPRO_FAULTS``. Raises :class:`FleetError` on any
+    nonzero exit or on timeout; the watchdog guarantees the failure is
+    reported within ~``timeout`` seconds even when survivors block inside
+    a collective.
     """
+    events: List[Dict[str, Any]] = []
+    if kill is not None:
+        events.append({"kind": "kill", "pid": int(kill[0]),
+                       "at": float(kill[1])})
+    if faults is not None:
+        events.extend(dict(e) for e in faults.schedule)
     port = free_port()
     workdir = tempfile.mkdtemp(prefix="mh-fleet-")
     procs: List[subprocess.Popen] = []
@@ -92,6 +108,8 @@ def run_fleet(task: str, num_processes: int, devices_per_proc: int = 1, *,
                 f"--xla_force_host_platform_device_count={devices_per_proc}")
             env.setdefault("JAX_PLATFORMS", "cpu")
             env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+            if faults is not None and faults.rules:
+                env["REPRO_FAULTS"] = faults.to_json()
             env.update(env_extra or {})
             procs.append(subprocess.Popen(
                 [sys.executable, WORKER, task, str(num_processes), str(p),
@@ -100,14 +118,10 @@ def run_fleet(task: str, num_processes: int, devices_per_proc: int = 1, *,
                 env=env, cwd=workdir))
 
         t0 = time.monotonic()
-        killed = False
         while True:
             rcs = [pr.poll() for pr in procs]
             elapsed = time.monotonic() - t0
-            if kill is not None and not killed and elapsed >= kill[1] \
-                    and rcs[kill[0]] is None:
-                procs[kill[0]].kill()
-                killed = True
+            _run_events(events, elapsed, procs, rcs)
             if all(rc is not None for rc in rcs):
                 break
             if any(rc not in (None, 0) for rc in rcs) \
@@ -148,6 +162,36 @@ def run_fleet(task: str, num_processes: int, devices_per_proc: int = 1, *,
             if pr.poll() is None:
                 pr.kill()
         shutil.rmtree(workdir, ignore_errors=True)
+
+
+def _run_events(events: List[Dict[str, Any]], elapsed: float,
+                procs: Sequence[subprocess.Popen],
+                rcs: Sequence[Optional[int]]) -> None:
+    """Execute due fleet fault events (kill / stall) against live workers.
+
+    SIGKILL needs no unstick step (it terminates stopped processes too);
+    stalls send SIGSTOP at ``at`` and SIGCONT at ``at + duration`` —
+    peers block inside their next collective until the straggler resumes,
+    so stall durations must stay well under the collective timeout."""
+    for e in events:
+        pid = e["pid"]
+        if not 0 <= pid < len(procs) or rcs[pid] is not None:
+            continue
+        if e["kind"] == "kill":
+            if not e.get("done") and elapsed >= e["at"]:
+                procs[pid].kill()
+                e["done"] = True
+        elif e["kind"] == "stall":
+            if not e.get("stopped") and elapsed >= e["at"]:
+                procs[pid].send_signal(signal.SIGSTOP)
+                e["stopped"] = True
+            if e.get("stopped") and not e.get("done") \
+                    and elapsed >= e["at"] + e["duration"]:
+                try:
+                    procs[pid].send_signal(signal.SIGCONT)
+                except ProcessLookupError:
+                    pass
+                e["done"] = True
 
 
 def _read_logs(paths: Sequence[str]) -> List[str]:

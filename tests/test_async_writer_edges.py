@@ -1,0 +1,105 @@
+"""AsyncCheckpointWriter lifecycle edges (satellite 3).
+
+The happy path and the drop-oldest policy live in
+tests/test_checkpoint_resume.py; this file pins the boundary behaviors a
+preemption or slow disk actually hits: flush timeouts expiring against an
+in-flight write, close() racing an in-flight write, submit-after-close,
+and the retry accounting around a transiently failing commit.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.checkpoint import AsyncCheckpointWriter
+from repro.util.retry import RetryPolicy
+
+
+class _GatedWrite:
+    """A write_fn that blocks until released — a controllable slow disk."""
+
+    def __init__(self):
+        self.entered = threading.Event()
+        self.release = threading.Event()
+        self.calls = []
+
+    def __call__(self, step, tree, metadata):
+        self.calls.append(step)
+        self.entered.set()
+        assert self.release.wait(30.0), "test forgot to release the write"
+        return 10
+
+
+def test_flush_timeout_expires_against_inflight_write():
+    gate = _GatedWrite()
+    w = AsyncCheckpointWriter(gate)
+    w.submit(1, {}, {})
+    assert gate.entered.wait(10.0)
+    # the write is in flight and blocked: a bounded flush must give up...
+    t0 = time.monotonic()
+    assert w.flush(timeout=0.1) is False
+    assert time.monotonic() - t0 < 5.0
+    # ...and an unbounded one must succeed once the disk unblocks
+    gate.release.set()
+    assert w.flush(timeout=30.0) is True
+    assert w.stats()["snapshots_written"] == 1
+    w.close()
+
+
+def test_close_racing_inflight_write_completes_it():
+    gate = _GatedWrite()
+    w = AsyncCheckpointWriter(gate)
+    w.submit(1, {}, {})
+    assert gate.entered.wait(10.0)
+    closer = threading.Thread(target=lambda: w.close(flush=True))
+    closer.start()
+    time.sleep(0.05)                        # close() is now blocked in flush
+    assert closer.is_alive()
+    gate.release.set()
+    closer.join(30.0)
+    assert not closer.is_alive()
+    st = w.stats()
+    assert st["snapshots_written"] == 1 and st["errors"] == 0
+
+
+def test_close_without_flush_drops_pending():
+    gate = _GatedWrite()
+    w = AsyncCheckpointWriter(gate)
+    w.submit(1, {}, {})
+    assert gate.entered.wait(10.0)
+    w.submit(2, {}, {})                     # parked in the pending slot
+    gate.release.set()
+    w.close(flush=False)
+    st = w.stats()
+    # step 1 (in flight at close) commits; step 2 (pending) is dropped
+    assert st["snapshots_written"] == 1
+    assert st["snapshots_dropped"] == 1
+    assert st["last_step"] == 1
+
+
+def test_submit_after_close_raises():
+    w = AsyncCheckpointWriter(lambda s, t, m: 0)
+    w.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        w.submit(1, {}, {})
+
+
+def test_transient_write_error_retried_not_counted_as_error():
+    calls = []
+
+    def flaky(step, tree, metadata):
+        calls.append(step)
+        if len(calls) == 1:
+            raise OSError("blip")
+        return 5
+
+    w = AsyncCheckpointWriter(flaky, retry=RetryPolicy(max_attempts=3,
+                                                       backoff_s=0.01))
+    w.submit(7, {}, {})
+    assert w.flush(timeout=30.0)
+    w.close()
+    st = w.stats()
+    assert calls == [7, 7]
+    assert st["errors"] == 0
+    assert st["write_retries"] == 1
+    assert st["snapshots_written"] == 1 and st["last_step"] == 7

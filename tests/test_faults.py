@@ -1,0 +1,244 @@
+"""repro.faults: deterministic fault injection + the recovery it exercises.
+
+Three layers, in order:
+
+1. plan mechanics — counting (times/after/every), seeded probability,
+   once-across-processes flag files, JSON/env round-trips, the kill
+   action (proven in a sacrificial subprocess);
+2. retried chunk reads — a stream fit under transient ``chunk.read``
+   faults below the retry cap is *bitwise identical* to the clean fit,
+   and a persistent fault still surfaces as an OSError;
+3. checkpoint commits — transient faults are absorbed by the async
+   writer's retry, torn commits leave garbage that ``load_latest`` skips,
+   and secondary I/O failures warn instead of vanishing (satellite 1).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import faults
+from repro.api import KernelMachine, MachineConfig, StreamConfig
+from repro.checkpoint import (AsyncCheckpointWriter, list_steps, load_latest,
+                              prune_steps, save_checkpoint, write_step)
+from repro.core import KernelSpec, TronConfig, random_basis
+from repro.data import make_classification
+from repro.data.chunks import MmapChunkSource, save_chunks
+from repro.faults import FAULT_ENV, FaultPlan, FaultRule
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    yield
+    faults.uninstall()
+
+
+# ----------------------------------------------------------- plan mechanics
+def test_rule_validation():
+    with pytest.raises(ValueError, match="action"):
+        FaultRule(site="x", action="explode")
+    with pytest.raises(ValueError, match="exception"):
+        FaultRule(site="x", exc="SystemExit")
+    with pytest.raises(ValueError, match="every"):
+        FaultRule(site="x", every=0)
+    with pytest.raises(ValueError, match="times"):
+        FaultRule(site="x", times=0)
+
+
+def test_counting_gate_after_every_times():
+    plan = FaultPlan().inject("s", after=2, every=2, times=2)
+    # calls 1,2 clean (after); then every 2nd eligible call: 3,5 fire
+    fired = [plan.consult("s") is not None for _ in range(8)]
+    assert fired == [False, False, True, False, True, False, False, False]
+    assert plan.stats() == {"calls": {"s": 8}, "fired": {"s": 2}}
+
+
+def test_persistent_rule_fires_forever():
+    plan = FaultPlan().inject("s", times=None)
+    assert all(plan.consult("s") is not None for _ in range(20))
+
+
+def test_sites_are_counted_independently():
+    plan = FaultPlan().inject("a", times=1)
+    assert plan.consult("b") is None          # other site: no fire, no spend
+    assert plan.consult("a") is not None
+    assert plan.consult("a") is None          # budget of 1 spent
+
+
+def test_probability_is_seeded_and_reproducible():
+    plan1 = FaultPlan(seed=7).inject("s", probability=0.5, times=None)
+    pat1 = [plan1.consult("s") is not None for _ in range(40)]
+    plan2 = FaultPlan(seed=7).inject("s", probability=0.5, times=None)
+    pat2 = [plan2.consult("s") is not None for _ in range(40)]
+    assert pat1 == pat2
+    assert 0 < sum(pat1) < 40                 # actually a coin, not a constant
+    plan3 = FaultPlan(seed=8).inject("s", probability=0.5, times=None)
+    pat3 = [plan3.consult("s") is not None for _ in range(40)]
+    assert pat1 != pat3
+
+
+def test_flag_file_means_once_across_plans(tmp_path):
+    """The restart scenario: a restarted worker builds a *fresh* plan from
+    REPRO_FAULTS but must not re-fire a flag-guarded rule."""
+    flag = str(tmp_path / "fired-once")
+    assert FaultPlan().inject("s", flag=flag, times=None).consult("s")
+    # second process (modeled as a second plan instance), same flag: clean
+    plan2 = FaultPlan().inject("s", flag=flag, times=None)
+    assert all(plan2.consult("s") is None for _ in range(5))
+
+
+def test_json_round_trip_and_schedule():
+    plan = (FaultPlan(seed=3)
+            .inject("chunk.read", times=2, exc="TimeoutError")
+            .kill(1, 2.5).stall(0, 1.0, 0.5))
+    back = FaultPlan.from_json(plan.to_json())
+    assert back.seed == 3
+    assert back.rules == plan.rules
+    assert back.schedule == [
+        {"kind": "kill", "pid": 1, "at": 2.5},
+        {"kind": "stall", "pid": 0, "at": 1.0, "duration": 0.5}]
+
+
+def test_fire_fast_path_and_context_manager():
+    faults.uninstall()
+    assert faults.fire("anything") is None          # no plan installed
+    with FaultPlan().inject("s", exc="TimeoutError", message="boom") as plan:
+        assert faults.active() is plan
+        with pytest.raises(TimeoutError, match="boom"):
+            faults.fire("s")
+        assert faults.fire("s") is None             # budget spent
+    assert faults.active() is None                  # context exit uninstalls
+
+
+def test_kill_action_sigkills_process():
+    """kill is proven on a sacrificial subprocess; the plan rides in via
+    REPRO_FAULTS, which also covers the import-time env activation path."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env[FAULT_ENV] = FaultPlan().inject("x", action="kill").to_json()
+    p = subprocess.run(
+        [sys.executable, "-c",
+         "import repro.faults as f; f.fire('x'); print('survived')"],
+        env=env, capture_output=True, text=True, timeout=60)
+    assert p.returncode == -9
+    assert "survived" not in p.stdout
+
+
+# ------------------------------------------------- retried stream chunk I/O
+N, D, M = 256, 8, 16
+STREAM_CFG = MachineConfig(
+    kernel=KernelSpec("gaussian", sigma=2.0), lam=0.5, plan="stream",
+    tron=TronConfig(max_iter=40),
+    stream=StreamConfig(chunk_rows=64))
+
+
+@pytest.fixture(scope="module")
+def stream_setup(tmp_path_factory):
+    X, y = make_classification(jax.random.PRNGKey(0), N, D,
+                               clusters_per_class=2)
+    X, y = np.asarray(X), np.asarray(y)
+    d = tmp_path_factory.mktemp("fault-shards")
+    save_chunks(d, X, y, rows_per_shard=100)
+    basis = np.asarray(random_basis(jax.random.PRNGKey(1), jnp.asarray(X), M))
+    return d, basis
+
+
+def test_transient_chunk_faults_change_no_result_bit(stream_setup):
+    """Acceptance: transient chunk-read faults below the retry cap are
+    invisible in the result — the faulted fit's beta is bitwise identical.
+    times=2 is the max a single read survives under max_attempts=3."""
+    shard_dir, basis = stream_setup
+    clean = KernelMachine(STREAM_CFG).fit(
+        MmapChunkSource(shard_dir, chunk_rows=64), None, basis)
+    plan = FaultPlan().inject("chunk.read", times=2)
+    with plan:
+        faulted = KernelMachine(STREAM_CFG).fit(
+            MmapChunkSource(shard_dir, chunk_rows=64), None, basis)
+    assert plan.stats()["fired"].get("chunk.read", 0) >= 1
+    np.testing.assert_array_equal(np.asarray(clean.state_["beta"]),
+                                  np.asarray(faulted.state_["beta"]))
+
+
+def test_persistent_chunk_fault_exhausts_retries(stream_setup):
+    shard_dir, basis = stream_setup
+    with FaultPlan().inject("chunk.read", times=None,
+                            message="disk gone"):
+        with pytest.raises(OSError, match="disk gone"):
+            KernelMachine(STREAM_CFG).fit(
+                MmapChunkSource(shard_dir, chunk_rows=64), None, basis)
+
+
+# ------------------------------------------------------- checkpoint commits
+def _tree(step):
+    return {"beta": np.full(4, float(step)), "it": np.asarray(step)}
+
+
+def test_async_writer_absorbs_transient_commit_fault(tmp_path):
+    d = str(tmp_path / "steps")
+    with FaultPlan().inject("ckpt.commit", times=1):
+        w = AsyncCheckpointWriter(
+            lambda s, t, m: write_step(d, s, t, m, fsync=False))
+        w.submit(1, _tree(1), {})
+        assert w.flush(timeout=30.0)
+        w.close()
+    st = w.stats()
+    assert st["errors"] == 0
+    assert st["write_retries"] >= 1
+    assert st["snapshots_written"] == 1
+    assert [s for s, _ in list_steps(d)] == [1]
+
+
+def test_torn_commit_leaves_garbage_load_latest_skips(tmp_path):
+    """torn models a non-atomic writer dying mid-commit: garbage lands at
+    the destination and resume must fall back to the older clean step."""
+    d = str(tmp_path / "steps")
+    snap_tree = {"beta": np.ones(3), "delta": np.asarray(1.0),
+                 "gnorm0": np.asarray(1.0), "active": np.ones(3, bool),
+                 "it": np.asarray(1), "n_fg": np.asarray(1),
+                 "n_hd": np.asarray(1)}
+    write_step(d, 1, snap_tree, {}, fsync=False)
+    with FaultPlan().inject("ckpt.commit", action="torn", times=None):
+        with pytest.raises(OSError, match="torn"):
+            write_step(d, 2, snap_tree, {}, fsync=False)
+    # the torn file exists (it is garbage), but resume skips over it
+    assert [s for s, _ in list_steps(d)] == [1, 2]
+    assert load_latest(d).step == 1
+
+
+def test_cleanup_failure_warns_instead_of_vanishing(tmp_path, monkeypatch):
+    """Satellite 1: the commit failure propagates, and the *secondary*
+    failure (tmp file that couldn't be removed) is warned + sunk, not
+    silently swallowed."""
+    sink = []
+
+    def bad(*a, **k):
+        raise OSError("disk detached")
+
+    monkeypatch.setattr(os, "replace", bad)
+    monkeypatch.setattr(os, "unlink", bad)
+    with pytest.raises(OSError, match="disk detached"):
+        with pytest.warns(RuntimeWarning, match="tmp-cleanup"):
+            save_checkpoint(str(tmp_path / "c.npz"), _tree(1), fsync=False,
+                            on_io_warning=lambda *a: sink.append(a))
+    assert len(sink) == 1 and sink[0][0] == "tmp-cleanup"
+
+
+def test_prune_failure_warns_and_keeps_going(tmp_path, monkeypatch):
+    d = str(tmp_path / "steps")
+    for s in (1, 2, 3):
+        write_step(d, s, _tree(s), {}, fsync=False)
+    monkeypatch.setattr(
+        os, "unlink", lambda p: (_ for _ in ()).throw(OSError("ro fs")))
+    sink = []
+    with pytest.warns(RuntimeWarning, match="prune-unlink"):
+        removed = prune_steps(d, keep=1, on_io_warning=lambda *a:
+                              sink.append(a))
+    assert removed == 0
+    assert len(sink) == 2                       # steps 1 and 2 both reported
+    assert [s for s, _ in list_steps(d)] == [1, 2, 3]

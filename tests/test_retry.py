@@ -1,0 +1,100 @@
+"""repro.util.retry: the shared backoff policy every recovery path uses.
+
+The policy is proven here once; the fault-injection tests
+(test_faults.py) then only need to prove the *wiring* — that chunk reads
+and checkpoint commits actually route through it.
+"""
+import pytest
+
+from repro.util.retry import RetryPolicy, call_with_retry
+
+
+def _no_sleep(_):
+    pass
+
+
+def test_succeeds_after_transient_failures():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError("transient")
+        return "ok"
+
+    retries = []
+    out = call_with_retry(RetryPolicy(max_attempts=3), flaky,
+                          label="t", sleep=_no_sleep,
+                          on_retry=lambda a, e, d: retries.append((a, d)))
+    assert out == "ok"
+    assert len(calls) == 3
+    assert [a for a, _ in retries] == [1, 2]
+    assert all(d >= 0 for _, d in retries)
+
+
+def test_attempt_cap_raises_last_error():
+    def always():
+        raise OSError("still broken")
+
+    with pytest.raises(OSError, match="still broken"):
+        call_with_retry(RetryPolicy(max_attempts=3), always, sleep=_no_sleep)
+
+
+def test_non_retryable_raises_immediately():
+    calls = []
+
+    def bad():
+        calls.append(1)
+        raise ValueError("not transient")
+
+    with pytest.raises(ValueError):
+        call_with_retry(RetryPolicy(max_attempts=5), bad, sleep=_no_sleep)
+    assert len(calls) == 1
+
+
+def test_custom_retryable_predicate():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) == 1:
+            raise KeyError("routing miss")
+        return 42
+
+    policy = RetryPolicy(max_attempts=2,
+                         retryable=lambda e: isinstance(e, KeyError))
+    assert call_with_retry(policy, flaky, sleep=_no_sleep) == 42
+    assert len(calls) == 2
+
+
+def test_backoff_caps_and_jitter_is_deterministic():
+    p = RetryPolicy(backoff_s=0.1, backoff_mult=2.0, max_backoff_s=0.25,
+                    jitter=0.1, max_attempts=10)
+    # capped exponential: 0.1, 0.2, 0.25, 0.25, ... before jitter
+    for attempt, base in ((1, 0.1), (2, 0.2), (3, 0.25), (7, 0.25)):
+        d = p.delay(attempt, label="x")
+        assert base <= d <= base * 1.1 + 1e-12
+    # same (label, attempt) -> same delay; different label -> (almost
+    # surely) different jitter, never a different base
+    assert p.delay(2, "a") == p.delay(2, "a")
+    assert p.delay(2, "a") != p.delay(2, "b")
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(backoff_s=-1.0)
+
+
+def test_keyboard_interrupt_never_retried():
+    calls = []
+
+    def interrupted():
+        calls.append(1)
+        raise KeyboardInterrupt
+
+    with pytest.raises(KeyboardInterrupt):
+        call_with_retry(RetryPolicy(max_attempts=5), interrupted,
+                        sleep=_no_sleep)
+    assert len(calls) == 1

@@ -1,0 +1,181 @@
+"""Self-healing serving: circuit breaker + health gauge under injected
+dispatch faults.
+
+Satellite 2's regression lives here — a dispatcher that raises mid-batch
+fails exactly that batch's requests and nothing else; the engine keeps
+serving. On top of that, the tentpole's breaker contract: a persistently
+failing model OPENs its circuit (fast :class:`CircuitOpen` rejections,
+health DEGRADED), other models keep serving, and once the fault clears a
+half-open probe re-CLOSEs the circuit and health returns to READY.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import KernelMachine, MachineConfig
+from repro.core import KernelSpec, TronConfig, random_basis
+from repro.data import make_classification, make_multiclass
+from repro.faults import FaultPlan
+from repro.serve import (DEGRADED, READY, STARTING, CircuitBreaker,
+                         CircuitOpen, EngineConfig, ModelRegistry,
+                         ServeEngine)
+
+N, D, M = 256, 8, 16
+CFG = MachineConfig(kernel=KernelSpec("gaussian", sigma=2.0), lam=1.0,
+                    tron=TronConfig(max_iter=40))
+
+
+@pytest.fixture(scope="module")
+def km():
+    X, y = make_classification(jax.random.PRNGKey(0), N, D,
+                               clusters_per_class=4)
+    return KernelMachine(CFG).fit(X, y, random_basis(jax.random.PRNGKey(1),
+                                                     X, M))
+
+
+@pytest.fixture(scope="module")
+def km_mc():
+    X, y = make_multiclass(jax.random.PRNGKey(0), N, D, 3,
+                           clusters_per_class=2)
+    return KernelMachine(CFG).fit(X, y, random_basis(jax.random.PRNGKey(1),
+                                                     X, M))
+
+
+@pytest.fixture(scope="module")
+def registry(km, km_mc):
+    reg = ModelRegistry(max_batch=32)
+    reg.add("bin", km)
+    reg.add("mc3", km_mc)
+    reg.warmup()
+    return reg
+
+
+# -------------------------------------------------- breaker state machine
+def test_breaker_opens_probes_and_recloses():
+    t = [0.0]
+    br = CircuitBreaker(threshold=3, cooldown_s=1.0, clock=lambda: t[0])
+    assert br.allow()
+    assert not br.record_failure()
+    assert not br.record_failure()
+    assert br.record_failure()                  # 3rd consecutive: opens
+    assert br.state == br.OPEN
+    assert not br.allow()                       # fast-reject during cooldown
+    t[0] = 1.5
+    assert br.allow()                           # half-open: one probe
+    assert br.state == br.HALF_OPEN
+    assert not br.allow()                       # second caller: still blocked
+    assert br.record_success()                  # probe ok: re-closed
+    assert br.state == br.CLOSED
+    assert br.allow()
+
+
+def test_failed_probe_reopens():
+    t = [0.0]
+    br = CircuitBreaker(threshold=1, cooldown_s=1.0, clock=lambda: t[0])
+    assert br.record_failure()
+    t[0] = 1.1
+    assert br.allow()
+    assert br.record_failure()                  # probe failed: re-opened
+    assert br.state == br.OPEN
+    assert not br.allow()
+    t[0] = 2.5
+    assert br.allow()                           # next cooldown: probes again
+
+
+def test_lost_probe_expires():
+    """A probe whose outcome never reports (request timed out in queue)
+    must not wedge the breaker in HALF_OPEN forever."""
+    t = [0.0]
+    br = CircuitBreaker(threshold=1, cooldown_s=1.0, clock=lambda: t[0])
+    br.record_failure()
+    t[0] = 1.1
+    assert br.allow()                           # probe admitted, never reports
+    assert not br.allow()
+    t[0] = 2.5
+    assert br.allow()                           # lost probe expired: new probe
+
+
+def test_success_resets_consecutive_count():
+    br = CircuitBreaker(threshold=3, cooldown_s=1.0)
+    br.record_failure()
+    br.record_failure()
+    br.record_success()
+    assert br.consecutive_failures == 0
+    br.record_failure()
+    br.record_failure()
+    assert br.state == br.CLOSED                # never 3 *consecutive*
+
+
+def test_threshold_zero_disables():
+    br = CircuitBreaker(threshold=0)
+    for _ in range(20):
+        assert not br.record_failure()
+        assert br.allow()
+    assert br.state == br.CLOSED
+
+
+# --------------------------------------- satellite 2: mid-batch dispatch
+def test_injected_dispatch_fault_fails_only_its_batch(registry):
+    """Three coalesced requests, one injected dispatch exception: all
+    three futures fail, nothing else does, and the engine keeps serving
+    — the batcher thread never dies."""
+    engine = ServeEngine(registry, EngineConfig(max_batch=32),
+                         autostart=False)
+    X = np.zeros((2, D), np.float32)
+    futs = [engine.submit(X, model="bin") for _ in range(3)]
+    with FaultPlan().inject("serve.dispatch", exc="RuntimeError", times=1):
+        engine.start()
+        for f in futs:
+            with pytest.raises(RuntimeError, match="injected fault"):
+                f.result(30)
+    snap = engine.metrics.snapshot()
+    assert snap["failed"] == 3
+    assert snap["breaker_opened"] == 0          # 1 failure < default threshold
+    assert engine.health == READY
+    # same model serves again; the other model was never touched
+    assert engine(X, model="bin").shape == (2,)
+    assert engine(X, model="mc3").shape == (2, 3)
+    assert engine.inflight == 0
+    engine.stop()
+
+
+def test_breaker_opens_then_probe_recloses(registry):
+    """End-to-end self-healing: repeated dispatch faults trip the breaker
+    (CircuitOpen + DEGRADED), the healthy model keeps serving, and after
+    the cooldown one successful probe re-closes the circuit (READY)."""
+    cfg = EngineConfig(max_batch=32, breaker_threshold=2,
+                       breaker_cooldown_s=0.3)
+    X = np.zeros((2, D), np.float32)
+    with ServeEngine(registry, cfg) as engine:
+        with FaultPlan().inject("serve.dispatch", exc="RuntimeError",
+                                times=2):
+            for _ in range(2):
+                with pytest.raises(RuntimeError):
+                    engine(X, model="bin")
+        snap = engine.metrics.snapshot()
+        assert snap["breaker_opened"] == 1
+        assert engine.health == DEGRADED
+        assert snap["health"] == DEGRADED
+        with pytest.raises(CircuitOpen):
+            engine.submit(X, model="bin")       # fast-rejected, not queued
+        assert engine.metrics.snapshot()["rejected_open"] == 1
+        assert engine(X, model="mc3").shape == (2, 3)   # unaffected model
+        time.sleep(0.35)                        # past the cooldown
+        assert engine(X, model="bin").shape == (2,)     # probe succeeds
+        snap = engine.metrics.snapshot()
+        assert snap["breaker_closed"] == 1
+        assert engine.health == READY
+        assert snap["health"] == READY
+
+
+def test_health_transitions(registry):
+    engine = ServeEngine(registry, EngineConfig(max_batch=32),
+                         autostart=False)
+    assert engine.health == STARTING
+    engine.start()
+    assert engine.health == READY
+    assert engine.metrics.snapshot()["health"] == READY
+    engine.stop()
+    assert engine.health == STARTING

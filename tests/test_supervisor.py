@@ -1,0 +1,222 @@
+"""Supervised restarts: the Supervisor state machine (fast, stub children)
+plus the end-to-end acceptance run (slow, real CLI).
+
+Fast tests drive :class:`repro.sharding.supervisor.Supervisor` with tiny
+``python -c`` stub workers — no jax, sub-second — to pin the restart
+budget, --resume propagation, elastic shrink, backoff recording, and the
+attempt-timeout path.
+
+The slow test is the ISSUE's acceptance criterion verbatim: a supervised
+streaming ``kernel_train`` fit whose worker SIGKILLs itself mid-run (a
+``ckpt.commit`` kill rule, flag-filed so it fires exactly once across
+restarts) auto-restarts from the latest committed step and finishes with
+a beta BITWISE identical to an uninterrupted supervised run — the
+canonical-trajectory guarantee surviving an unattended crash+recovery.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.faults import FaultPlan
+from repro.sharding.supervisor import (Supervisor, SupervisorConfig,
+                                       SupervisorError)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+QUICK = SupervisorConfig(max_restarts=3, backoff_s=0.01, max_backoff_s=0.02,
+                         poll_s=0.01, attempt_timeout_s=60.0)
+
+
+def _quiet(_):
+    pass
+
+
+def _stub(code):
+    """build_cmd for a fixed python -c child (same argv for every pid)."""
+    return lambda pid, nproc, port, resume: [sys.executable, "-c", code]
+
+
+# ------------------------------------------------------------- fast units
+def test_crash_twice_then_succeed(tmp_path):
+    """A worker that dies twice and then runs clean: the supervisor eats
+    both deaths, records per-attempt forensics, and reports success."""
+    counter = tmp_path / "crashes-left"
+    counter.write_text("2")
+    code = (f"import pathlib,sys\np=pathlib.Path({str(counter)!r})\n"
+            "n=int(p.read_text())\n"
+            "if n>0: p.write_text(str(n-1)); sys.exit(1)\n")
+    sleeps = []
+    sup = Supervisor(_stub(code), config=QUICK, say=_quiet,
+                     sleep=sleeps.append)
+    res = sup.run()
+    assert res.ok and res.restarts == 2 and not res.shrunk
+    assert [a["ok"] for a in res.attempts] == [False, False, True]
+    assert res.attempts[0]["returncodes"] == [1]
+    assert res.attempts[0]["death_detect_s"] is not None
+    # backoff is recorded on the failed attempts and actually slept
+    assert len(sleeps) == 2
+    assert [a["backoff_s"] for a in res.attempts[:2]] == sleeps
+    assert all(s > 0 for s in sleeps)
+
+
+def test_restart_budget_exhausted_carries_log_tails(tmp_path):
+    code = "import sys\nprint('dying noisily')\nsys.exit(3)\n"
+    cfg = SupervisorConfig(max_restarts=1, backoff_s=0.01, poll_s=0.01)
+    sup = Supervisor(_stub(code), config=cfg, say=_quiet,
+                     sleep=_quiet)
+    with pytest.raises(SupervisorError, match="giving up") as ei:
+        sup.run()
+    assert "dying noisily" in str(ei.value)       # forensics attached
+    assert len(ei.value.attempts) == 2            # initial + 1 restart
+
+
+def test_resume_flag_follows_committed_steps(tmp_path):
+    """build_cmd sees resume=False until the checkpoint dir holds a
+    committed step file, then resume=True on the relaunch."""
+    ckpt = tmp_path / "steps"
+    ckpt.mkdir()
+    seen = []
+    code = ("import os,sys\n"
+            f"d={str(ckpt)!r}\n"
+            "if sys.argv[1]=='resume': sys.exit(0)\n"
+            "open(os.path.join(d,'step-00000004.npz'),'w').close()\n"
+            "sys.exit(1)\n")
+
+    def build(pid, nproc, port, resume):
+        seen.append(resume)
+        return [sys.executable, "-c", code, "resume" if resume else "fresh"]
+
+    res = Supervisor(build, ckpt_dir=str(ckpt), config=QUICK,
+                     say=_quiet, sleep=_quiet).run()
+    assert res.ok and res.restarts == 1
+    assert seen == [False, True]
+    assert res.attempts[0]["resumed_from"] is None
+    assert res.attempts[1]["resumed_from"] == 4
+
+
+def test_elastic_shrink_to_fewer_processes():
+    """Persistent failure at P=2 (a bad host) shrinks the fleet to P=1,
+    which succeeds — forward progress instead of a crash loop."""
+    code = ("import sys\nsys.exit(1 if sys.argv[1]=='2' else 0)\n")
+
+    def build(pid, nproc, port, resume):
+        return [sys.executable, "-c", code, str(nproc)]
+
+    cfg = SupervisorConfig(max_restarts=3, backoff_s=0.01, poll_s=0.01,
+                           shrink_after=1, min_processes=1)
+    res = Supervisor(build, num_processes=2, config=cfg, say=_quiet,
+                     sleep=_quiet).run()
+    assert res.ok and res.shrunk and res.final_processes == 1
+    assert res.attempts[0]["num_processes"] == 2
+    assert res.final_attempt["num_processes"] == 1
+
+
+def test_hung_fleet_counts_as_failure():
+    code = "import time\ntime.sleep(60)\n"
+    cfg = SupervisorConfig(max_restarts=0, poll_s=0.01,
+                           attempt_timeout_s=0.3)
+    with pytest.raises(SupervisorError, match="timed out") as ei:
+        Supervisor(_stub(code), config=cfg, say=_quiet, sleep=_quiet).run()
+    assert ei.value.attempts[0]["timed_out"]
+
+
+def test_latest_step_ignores_noise(tmp_path):
+    sup = Supervisor(_stub(""), ckpt_dir=str(tmp_path), say=_quiet)
+    assert sup.latest_step() is None
+    (tmp_path / ".tmp-ckpt-xyz.npz").write_text("")
+    (tmp_path / "model.npz").write_text("")
+    assert sup.latest_step() is None
+    (tmp_path / "step-00000002.npz").write_text("")
+    (tmp_path / "step-00000010.npz").write_text("")
+    assert sup.latest_step() == 10
+
+
+def test_rejects_bad_process_count():
+    with pytest.raises(ValueError, match="num_processes"):
+        Supervisor(_stub(""), num_processes=0)
+
+
+# ------------------------------------------- slow: end-to-end acceptance
+def _env(extra=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    env.pop("XLA_FLAGS", None)
+    env.pop("REPRO_FAULTS", None)
+    if extra:
+        env.update(extra)
+    return env
+
+
+def _supervised_cli(data_dir, save, ckpt_dir):
+    return [sys.executable, "-m", "repro.launch.kernel_train",
+            "--supervise", "--max-restarts", "2",
+            "--plan", "stream", "--data-dir", str(data_dir),
+            "--m", "32", "--max-iter", "40", "--lam", "1e-3",
+            "--sigma", "2.0", "--chunk-rows", "256",
+            "--ckpt-interval", "2", "--ckpt-keep", "0",
+            "--ckpt-dir", str(ckpt_dir), "--save", str(save)]
+
+
+def _beta(path):
+    with np.load(path, allow_pickle=True) as z:
+        return np.asarray(z["beta"], dtype=np.float64)
+
+
+@pytest.mark.slow
+def test_supervised_fit_survives_sigkill_bitwise(tmp_path):
+    """ISSUE acceptance: SIGKILL mid-run under --supervise; the run
+    auto-restarts from the latest checkpoint and the final beta is
+    bitwise identical to an uninterrupted supervised run."""
+    from repro.data.chunks import save_chunks
+    data = tmp_path / "shards"
+    rng = np.random.default_rng(7)
+    X = rng.standard_normal((2048, 16)).astype(np.float32)
+    w = rng.standard_normal(16)
+    y = np.where(X @ w + 0.3 * rng.standard_normal(2048) > 0, 1, -1)
+    save_chunks(data, X, y.astype(np.int64), rows_per_shard=512)
+
+    # reference: supervised but unfaulted (identical ckpt flags, so the
+    # canonical trajectory is shared with the faulted run)
+    ref = subprocess.run(
+        _supervised_cli(data, tmp_path / "ref.npz", tmp_path / "ref-steps"),
+        env=_env(), capture_output=True, text=True, timeout=900)
+    assert ref.returncode == 0, ref.stdout[-3000:] + ref.stderr[-3000:]
+    assert "restarting" not in ref.stdout
+
+    # faulted: the worker SIGKILLs itself inside its 2nd checkpoint
+    # commit; the flag file makes the kill fire exactly once across
+    # restarts, so the relaunched worker runs clean to completion
+    plan = FaultPlan().inject("ckpt.commit", action="kill", after=1,
+                              times=1, flag=str(tmp_path / "killed-once"))
+    faulted = subprocess.run(
+        _supervised_cli(data, tmp_path / "got.npz", tmp_path / "got-steps"),
+        env=_env({"REPRO_FAULTS": plan.to_json()}),
+        capture_output=True, text=True, timeout=900)
+    assert faulted.returncode == 0, \
+        faulted.stdout[-3000:] + faulted.stderr[-3000:]
+    assert (tmp_path / "killed-once").exists(), "the kill rule never fired"
+    assert "restarting from step" in faulted.stdout, faulted.stdout[-3000:]
+    assert "[supervise] done" in faulted.stdout
+
+    b_ref, b_got = _beta(tmp_path / "ref.npz"), _beta(tmp_path / "got.npz")
+    assert b_ref.shape == b_got.shape
+    assert np.array_equal(b_ref, b_got), \
+        f"recovery diverged: maxdiff={np.max(np.abs(b_ref - b_got))}"
+
+
+@pytest.mark.slow
+@pytest.mark.requires_devices(2)
+@pytest.mark.requires_multiprocess(timeout=1500)
+def test_fleet_stall_changes_no_result_bit():
+    """A SIGSTOP/SIGCONT straggler (paused VM) delays the fleet but must
+    not change the fit: peers block in the collective until it resumes."""
+    from multihost.rig import run_fleet
+    clean = run_fleet("fit", 2, 1, extra=["stream"]).result
+    stalled = run_fleet("fit", 2, 1, extra=["stream"],
+                        faults=FaultPlan().stall(1, 3.0, 2.0)).result
+    assert stalled["beta_sha"] == clean["beta_sha"], \
+        "a stalled worker changed the result bits"
