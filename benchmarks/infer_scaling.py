@@ -147,6 +147,51 @@ def main():
                 print(f"| {n} | {plan} | {dt:.4f} | {row['rows_per_s']:.0f} "
                       f"| {peak / 2**20:.2f} MiB |", flush=True)
 
+    # ------------------------------------------------- dtype policy sweep
+    # Accuracy-vs-speed rows: the local decide arm under each policy on the
+    # smallest n, plus checkpoint bytes fp32 vs int8-quantized. CPU step
+    # times are correctness trajectory; max_rel_err holds anywhere.
+    n0 = args.ns[0]
+    Xp = jax.random.normal(jax.random.PRNGKey(0), (n0, d))
+    print("| n_test | plan | score_s | rows/s | max_rel_err |")
+    print("|--------|------|---------|--------|-------------|")
+    ref_pol = None
+    for policy in ("fp32", "bf16", "fp16"):
+        pspec = spec._replace(policy=policy)
+        run = jax.jit(lambda X, s=pspec: decide_local(config, None, s, X))
+        out = np.asarray(run(Xp))
+        if ref_pol is None:
+            ref_pol = out
+        rel = float(np.max(np.abs(out - ref_pol)) / np.max(np.abs(ref_pol)))
+        jax.block_until_ready(run(Xp))           # warm
+        t0 = time.perf_counter()
+        jax.block_until_ready(run(Xp))
+        dt = time.perf_counter() - t0
+        row = dict(n_test=n0, plan=f"local[{policy}]", policy=policy,
+                   score_s=round(dt, 5),
+                   rows_per_s=round(n0 / max(dt, 1e-9), 1),
+                   max_rel_err=rel)
+        results.append(row)
+        print(f"| {n0} | local[{policy}] | {dt:.4f} | "
+              f"{row['rows_per_s']:.0f} | {rel:.2e} |", flush=True)
+
+    from repro.api.machine import KernelMachine
+    km = KernelMachine(MachineConfig(m=m))
+    km.state_ = {"basis": jnp.asarray(basis, jnp.float32),
+                 "beta": jnp.asarray(beta, jnp.float32)}
+    with tempfile.TemporaryDirectory() as td:
+        full = km.save(os.path.join(td, "full.npz"))
+        q8 = km.save(os.path.join(td, "q8.npz"), quantize="int8")
+        ck = dict(plan="ckpt[int8]", m=m, d=d,
+                  checkpoint_bytes_fp32=os.path.getsize(full),
+                  checkpoint_bytes_int8=os.path.getsize(q8))
+    ck["ratio"] = round(ck["checkpoint_bytes_int8"]
+                        / ck["checkpoint_bytes_fp32"], 3)
+    results.append(ck)
+    print(f"checkpoint m={m}: fp32 {ck['checkpoint_bytes_fp32']} B, "
+          f"int8 {ck['checkpoint_bytes_int8']} B "
+          f"(ratio {ck['ratio']})", flush=True)
+
     if args.smoke:
         by = {r["plan"]: r for r in results}
         dense = args.ns[0] * m * 4          # the (n, m) f32 test-gram bytes
@@ -157,8 +202,14 @@ def main():
         assert by["stream"]["peak_intermediate_bytes"] < \
             args.chunk_rows * m * 4, \
             "stream decide materialized a (chunk_rows, m)-scale block"
+        assert by["local[fp32]"]["max_rel_err"] == 0.0
+        assert by["local[bf16]"]["max_rel_err"] < 5e-2
+        assert by["local[fp16]"]["max_rel_err"] < 1e-2
+        assert by["ckpt[int8]"]["checkpoint_bytes_int8"] < \
+            by["ckpt[int8]"]["checkpoint_bytes_fp32"]
         print("[smoke] inference memory contracts hold "
-              "(dense gram seen locally; fused < n*m; stream < chunk*m)")
+              "(dense gram seen locally; fused < n*m; stream < chunk*m); "
+              "dtype policy margins bounded; int8 checkpoint smaller")
 
     from benchmarks.run import append_trajectory   # one trajectory format
     out = Path(args.out) if args.out else REPO_ROOT / "BENCH_infer.json"

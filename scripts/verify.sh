@@ -181,9 +181,30 @@ fi
 
 if [[ "$bench_smoke" -eq 1 ]]; then
     echo "== bench smoke: multi-RHS kmvp amortization + stream chunk cache =="
-    python -m benchmarks.kmvp_multirhs --smoke || status=1
+    python -m benchmarks.kmvp_multirhs --smoke --emit-json || status=1
     echo "== bench smoke: inference scaling + memory contracts =="
     python -m benchmarks.infer_scaling --smoke || status=1
+    echo "== bench smoke: dtype accuracy-vs-speed columns in trajectories =="
+    python - <<'PY' || status=1
+import json
+# the dtype-policy sweeps must land their accuracy-vs-speed columns in the
+# emitted trajectories — a silently dropped sweep fails the gate
+kmvp = json.load(open("BENCH_kmvp.json"))[-1]["results"]
+sweep = {r["policy"]: r for r in kmvp["dtype_sweep"]}
+assert set(sweep) == {"fp32", "bf16", "fp16"}, sweep
+for r in sweep.values():
+    assert {"fwd_s", "t_s", "step_vs_fp32", "max_rel_err"} <= set(r), r
+infer = json.load(open("BENCH_infer.json"))[-1]["results"]
+plans = {r["plan"] for r in infer}
+assert {"local[fp32]", "local[bf16]", "local[fp16]", "ckpt[int8]"} <= plans
+pol = [r for r in infer if r["plan"].startswith("local[")]
+for r in pol:
+    assert {"score_s", "rows_per_s", "max_rel_err"} <= set(r), r
+ck = next(r for r in infer if r["plan"] == "ckpt[int8]")
+assert ck["checkpoint_bytes_int8"] < ck["checkpoint_bytes_fp32"], ck
+print("dtype accuracy-vs-speed columns present in "
+      "BENCH_kmvp.json and BENCH_infer.json")
+PY
     echo "== bench smoke: serve SLO (continuous batching vs baseline) =="
     python -m benchmarks.serve_slo --smoke || status=1
     echo "== bench smoke: checkpoint step-time overhead =="

@@ -12,6 +12,7 @@ from typing import Any, Dict, Optional, Tuple
 from repro.core.losses import Loss, get_loss
 from repro.core.nystrom import KernelSpec
 from repro.core.tron import TronConfig
+from repro.kernels.policy import DtypePolicy, get_policy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +64,11 @@ class MachineConfig:
     tron: TronConfig = TronConfig()
     backend: str = "jnp"               # gram/kmvp backend: jnp | pallas
     seed: int = 0                      # rff draw / ppacksvm shuffle / basis pick
+    dtype_policy: str = "fp32"         # kernel compute policy by name
+                                       # (repro.kernels.policy.POLICIES):
+                                       # fp32 | bf16 | fp16. Governs the
+                                       # gram/kmvp compute dtype everywhere;
+                                       # accumulation and TRON state stay f32.
 
     # basis selection when fit() is called without an explicit basis
     m: int = 256
@@ -85,9 +91,13 @@ class MachineConfig:
 
     def __post_init__(self):
         get_loss(self.loss)  # fail fast on unknown loss names
+        get_policy(self.dtype_policy)  # fail fast on unknown policy names
 
     def get_loss(self) -> Loss:
         return get_loss(self.loss)
+
+    def get_policy(self) -> DtypePolicy:
+        return get_policy(self.dtype_policy)
 
     def replace(self, **kw) -> "MachineConfig":
         return dataclasses.replace(self, **kw)

@@ -70,6 +70,11 @@ class DecisionSpec(NamedTuple):
     decide arms then contract the features directly — O(n_q·m·K) instead
     of the O(n_q·m²) identity-gram detour — and never read ``basis``
     (it may be None).
+
+    ``policy`` names the dtype policy (``repro.kernels.policy.POLICIES``)
+    every decide arm computes under — solvers populate it from
+    ``config.dtype_policy``, so a machine fit (or loaded) with a cheap
+    policy serves through it too.
     """
     map_x: Callable
     basis: Any
@@ -77,6 +82,7 @@ class DecisionSpec(NamedTuple):
     kernel: KernelSpec
     backend: str
     identity_basis: bool = False
+    policy: str = "fp32"
 
 
 def _is_chunked(X) -> bool:
@@ -116,7 +122,8 @@ def decide_local(config, mesh, spec: DecisionSpec, X, *,
     if spec.identity_basis:
         return Xe @ spec.beta
     C = gram(Xe, spec.basis, spec.kernel,
-             backend if backend is not None else spec.backend)
+             backend if backend is not None else spec.backend,
+             policy=spec.policy if spec.policy != "fp32" else None)
     return C @ spec.beta
 
 
@@ -142,7 +149,7 @@ def make_margin_body(config, mesh, spec: DecisionSpec,
     da = tuple(config.data_axes)
     kw = dict(kind=spec.kernel.kind, sigma=spec.kernel.sigma,
               backend=backend if backend is not None else spec.backend,
-              block_rows=config.otf_block_rows)
+              block_rows=config.otf_block_rows, policy=spec.policy)
     x_spec = P(da, None)
     o_spec = x_spec if jnp.ndim(spec.beta) == 2 else P(da)
     map_x = spec.map_x
@@ -215,8 +222,14 @@ def make_stream_decider(config, mesh, spec: DecisionSpec,
         source = source.with_chunk_rows(cr)
     body = jax.jit(make_margin_body(config, mesh, spec, backend))
     da = tuple(config.data_axes)
+    from repro.kernels.policy import get_policy
+    pol = get_policy(spec.policy)
+    # Chunks transfer at the policy's compute dtype: under bf16 the feeder
+    # halves H2D bytes (and the on-device chunk) before the kernels even run.
+    x_dtype = (None if pol.compute == "float32"
+               else pol.np_compute_dtype())
     feeder = _ChunkFeeder(
-        source, cr, np.dtype(source.dtype),
+        source, cr, np.dtype(source.dtype), x_dtype=x_dtype,
         x_sh=NamedSharding(mesh, P(da, None)),
         y_sh=NamedSharding(mesh, P(da)),
         r_sh=NamedSharding(mesh, P(da)),

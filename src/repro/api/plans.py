@@ -73,9 +73,10 @@ def plan_local(config, mesh, X, y, basis, beta0,
                CW: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
                classes=None, checkpoint=None, state0=None) -> TronResult:
     del mesh, classes   # multiclass y arrives pre-expanded to (n, K) ±1
+    pol = None if config.dtype_policy == "fp32" else config.dtype_policy
     if CW is None:
-        C = build_C(X, basis, config.kernel, config.backend)
-        W = build_W(basis, config.kernel, config.backend)
+        C = build_C(X, basis, config.kernel, config.backend, policy=pol)
+        W = build_W(basis, config.kernel, config.backend, policy=pol)
     else:
         C, W = CW
     form = Formulation4(lam=config.lam, loss=config.get_loss())
@@ -131,7 +132,8 @@ def _distributed(config, mesh, X, y, basis, beta0, *, mode: str,
     dc = DistConfig(data_axes=config.data_axes, model_axis=config.model_axis,
                     mode=mode, materialize=materialize,
                     backend=config.backend, fused=fused,
-                    block_rows=config.otf_block_rows)
+                    block_rows=config.otf_block_rows,
+                    policy=config.dtype_policy)
     solver = DistributedNystrom(mesh, config.lam, config.loss, config.kernel,
                                 dc)
     return solver.solve(X, y, basis, beta0=beta0, cfg=config.tron,
@@ -189,7 +191,8 @@ def plan_stream(config, mesh, X, y, basis, beta0, CW=None,
     dc = DistConfig(data_axes=config.data_axes, model_axis=None,
                     mode="shard_map", materialize=False,
                     backend=config.backend, fused=True,
-                    block_rows=config.otf_block_rows)
+                    block_rows=config.otf_block_rows,
+                    policy=config.dtype_policy)
     solver = DistributedNystrom(mesh, config.lam, config.loss, config.kernel,
                                 dc)
     return solver.solve_stream(source, basis, beta0=beta0, cfg=config.tron,

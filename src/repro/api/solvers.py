@@ -106,7 +106,8 @@ def _spec_nystrom(config, state) -> DecisionSpec:
     ppacksvm — for the last, the 'basis' is the full training set)."""
     return DecisionSpec(map_x=lambda x: x, basis=state["basis"],
                         beta=state["beta"], kernel=config.kernel,
-                        backend=config.backend)
+                        backend=config.backend,
+                        policy=config.dtype_policy)
 
 
 def _spec_rff(config, state) -> DecisionSpec:
@@ -119,7 +120,7 @@ def _spec_rff(config, state) -> DecisionSpec:
     return DecisionSpec(map_x=lambda x: rffm.rff_features(x, basis),
                         basis=None, beta=state["beta"],
                         kernel=KernelSpec("linear"), backend="jnp",
-                        identity_basis=True)
+                        identity_basis=True, policy=config.dtype_policy)
 
 
 # -------------------------------------------------------------------- solvers

@@ -78,6 +78,14 @@ class DistConfig:
                                        # the matvec (kmvp) so not even the
                                        # per-shard C block is ever allocated
     block_rows: Optional[int] = None   # fused jnp fallback row-chunk override
+    policy: str = "fp32"               # dtype policy name for every gram/kmvp
+                                       # in the closures (kernels.policy);
+                                       # accumulation and beta stay f32
+
+    def _gram_policy(self):
+        """Policy to hand ``nystrom.gram``: None for fp32 keeps the
+        materialized paths on their exact pre-policy expression tree."""
+        return None if self.policy == "fp32" else self.policy
 
 
 class StreamClosures(NamedTuple):
@@ -158,13 +166,17 @@ class _ChunkFeeder:
 
     def __init__(self, source, chunk_rows: int, dtype, x_sh, y_sh, r_sh,
                  classes=None, cache_chunks: Optional[int] = None,
-                 prefetch: int = 2):
+                 prefetch: int = 2, x_dtype=None):
         self.source = source
         self.cr = int(chunk_rows)
         span = getattr(source, "process_span", None)
         # per-host pad target: this host's slot of a global chunk
         self.pad_rows = self.cr // (span[1] if span else 1)
         self.dtype = np.dtype(dtype)
+        # X chunks may transfer at a narrower dtype than targets/masks: a
+        # bf16 compute policy halves H2D and cache bytes without touching
+        # the ±1 targets or the 0/1 mask (exact at any float width).
+        self.x_dtype = self.dtype if x_dtype is None else np.dtype(x_dtype)
         self.x_sh, self.y_sh, self.r_sh = x_sh, y_sh, r_sh
         self.classes = None if classes is None else np.asarray(classes)
         self.prefetch = int(prefetch)
@@ -172,8 +184,8 @@ class _ChunkFeeder:
         # targets (pad[, K]) + mask (pad,) — the one-vs-rest expansion
         # widens the target block, so the HBM budget must count K columns
         ncols = 1 if self.classes is None else len(self.classes)
-        chunk_bytes = (self.pad_rows * (source.d + ncols + 1)
-                       * self.dtype.itemsize)
+        chunk_bytes = (self.pad_rows * source.d * self.x_dtype.itemsize
+                       + self.pad_rows * (ncols + 1) * self.dtype.itemsize)
         if cache_chunks is None:
             cache_chunks = _DEV_CACHE_BYTES // max(chunk_bytes, 1)
         self.cache_chunks = max(0, min(int(cache_chunks), source.n_chunks))
@@ -238,15 +250,15 @@ class _ChunkFeeder:
         if hit is not None:
             Xc, yc, wc = hit
             if Xc is None:                     # full chunk: re-read, no pad
-                Xc = np.asarray(self._read_chunk(i)[0], self.dtype)
+                Xc = np.asarray(self._read_chunk(i)[0], self.x_dtype)
             return Xc, yc, wc
         Xc, yc = self._read_chunk(i)
         rows = Xc.shape[0]
         pad = self.pad_rows
-        Xc = np.asarray(Xc, self.dtype).reshape(rows, self.source.d)
+        Xc = np.asarray(Xc, self.x_dtype).reshape(rows, self.source.d)
         if rows != pad:
             Xc = np.concatenate(
-                [Xc, np.zeros((pad - rows, self.source.d), self.dtype)])
+                [Xc, np.zeros((pad - rows, self.source.d), self.x_dtype)])
             yc = np.concatenate(
                 [np.asarray(yc), np.zeros((pad - rows,),
                                           np.asarray(yc).dtype)])
@@ -356,11 +368,12 @@ class DistributedNystrom:
         """Steps 2-3: broadcast basis, build sharded C and W."""
         sh = self.shardings()
         kern, backend = self.kernel, self.dist.backend
+        pol = self.dist._gram_policy()
 
         @partial(jax.jit, out_shardings=(sh["c"], sh["w"]))
         def _build(X, basis):
-            C = gram(X, basis, kern, backend)
-            W = gram(basis, basis, kern, backend)
+            C = gram(X, basis, kern, backend, policy=pol)
+            W = gram(basis, basis, kern, backend, policy=pol)
             return C, W
 
         return _build(X, basis)
@@ -459,8 +472,10 @@ class DistributedNystrom:
         'compute kernel elements on the fly'; TPU version = gram fused into
         the matvec, optionally via the Pallas kmvp kernel)."""
         basis_rows, basis_cols = self._slice_basis(basis, m)
-        Cb = gram(Xl, basis_cols, self.kernel, self.dist.backend)
-        Wb = gram(basis_rows, basis_cols, self.kernel, self.dist.backend)
+        pol = self.dist._gram_policy()
+        Cb = gram(Xl, basis_cols, self.kernel, self.dist.backend, policy=pol)
+        Wb = gram(basis_rows, basis_cols, self.kernel, self.dist.backend,
+                  policy=pol)
         return Cb, Wb
 
     def _row_spec_like(self, arr):
@@ -529,7 +544,8 @@ class DistributedNystrom:
         ysp = self._row_spec_like(y)
         kw = dict(kind=self.kernel.kind, sigma=self.kernel.sigma,
                   backend=self.dist.backend,
-                  block_rows=self.dist.block_rows)
+                  block_rows=self.dist.block_rows,
+                  policy=self.dist.policy)
 
         def _w_rows_slice(basis):
             """(row0, basis row-block) this device owns for W contractions."""
@@ -645,9 +661,17 @@ class DistributedNystrom:
             source = HostPartition(source, *live)
         kw = dict(kind=self.kernel.kind, sigma=self.kernel.sigma,
                   backend=self.dist.backend,
-                  block_rows=self.dist.block_rows)
+                  block_rows=self.dist.block_rows,
+                  policy=self.dist.policy)
         basis_dev = jnp.asarray(basis)
         dtype = np.dtype(source.dtype)
+        # X chunks transfer at the policy's compute dtype (bf16 halves H2D
+        # bytes); targets, masks, and beta stay at the source/param dtype —
+        # the optimizer state is deliberately outside the compute policy.
+        from repro.kernels.policy import get_policy
+        _pol = get_policy(self.dist.policy)
+        x_dtype = dtype if _pol.compute == "float32" else \
+            _pol.np_compute_dtype()
         multi = classes is not None
 
         def fg_chunk(Xl, yl, wl, basis, beta):
@@ -688,7 +712,8 @@ class DistributedNystrom:
             x_sh=NamedSharding(self.mesh, self.x_spec),
             y_sh=NamedSharding(self.mesh, ysp),
             r_sh=NamedSharding(self.mesh, self.row_spec),
-            classes=classes, cache_chunks=cache_chunks, prefetch=prefetch)
+            classes=classes, cache_chunks=cache_chunks, prefetch=prefetch,
+            x_dtype=x_dtype)
 
         # Multi-controller: every process must hit the wire with the SAME
         # collective sequence. XLA-CPU dispatches independent executions

@@ -25,6 +25,7 @@ import math
 from typing import Any, Callable, Iterator
 
 import jax
+import numpy as np
 
 
 def _aval_elems(var) -> int:
@@ -101,6 +102,47 @@ def max_intermediate_bytes(fn: Callable, *args, **kwargs) -> int:
     """Byte-sized counterpart of :func:`max_intermediate_elems`."""
     closed = jax.make_jaxpr(fn)(*args, **kwargs)
     return max_intermediate_bytes_jaxpr(closed.jaxpr)
+
+
+def _resolve_dtype(dtype) -> np.dtype:
+    """np.dtype for a dtype object or a jnp name ('bfloat16' is not a
+    numpy-native name, so strings resolve through jax.numpy first)."""
+    import jax.numpy as jnp
+    if isinstance(dtype, str):
+        dtype = getattr(jnp, dtype, dtype)
+    return np.dtype(dtype)
+
+
+def max_intermediate_elems_of_dtype_jaxpr(jaxpr, dtype: np.dtype) -> int:
+    """Largest eqn-output element count among outputs *of this dtype*.
+
+    The dtype-policy counterpart of :func:`max_intermediate_elems_jaxpr`:
+    under a bf16 policy the (rows, m) finished gram chunk is allowed to
+    exist — at bf16. What the policy forbids is that chunk at fp32, which
+    would silently give back the halved-transient win. Walking only the
+    fp32 outputs lets a test pin that contract mechanically."""
+    worst = 0
+    for eqn in jaxpr.eqns:
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            if getattr(aval, "dtype", None) == dtype:
+                worst = max(worst, _aval_elems(var))
+        if "pallas" in eqn.primitive.name:
+            continue
+        for sub in _subjaxprs(eqn.params):
+            worst = max(worst,
+                        max_intermediate_elems_of_dtype_jaxpr(sub, dtype))
+    return worst
+
+
+def max_intermediate_elems_of_dtype(fn: Callable, dtype,
+                                    *args, **kwargs) -> int:
+    """Trace ``fn(*args, **kwargs)`` and return the largest intermediate
+    of ``dtype`` (an object or a jnp name such as 'bfloat16') that the
+    computation materializes. Nothing is executed."""
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return max_intermediate_elems_of_dtype_jaxpr(closed.jaxpr,
+                                                 _resolve_dtype(dtype))
 
 
 # Primitives whose operands cross device (and, on a process-spanning

@@ -34,22 +34,35 @@ def sqdist(x: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
 
 
 def gram(x: jnp.ndarray, z: jnp.ndarray, kernel: KernelSpec,
-         backend: str = "jnp") -> jnp.ndarray:
-    """Kernel block k(x_i, z_k) with the given backend."""
+         backend: str = "jnp", policy=None) -> jnp.ndarray:
+    """Kernel block k(x_i, z_k) with the given backend.
+
+    ``policy`` (name / DtypePolicy / None) selects the compute/accumulate
+    dtypes; None is the fp32 default and leaves this function exactly as it
+    was before policies existed (including the jnp expression tree)."""
     if backend == "pallas":
         from repro.kernels import ops as kops
-        return kops.gram(x, z, kind=kernel.kind, sigma=kernel.sigma)
+        return kops.gram(x, z, kind=kernel.kind, sigma=kernel.sigma,
+                         policy=policy)
+    if policy is not None:
+        from repro.kernels.policy import get_policy
+        pol = get_policy(policy)
+        if pol.compute != "float32":
+            from repro.kernels.ops import gram_chunk_policy
+            return gram_chunk_policy(x, z, kind=kernel.kind,
+                                     sigma=kernel.sigma,
+                                     pol=pol).astype(pol.accum_dtype)
     if kernel.kind == "linear":
         return x @ z.T
     return jnp.exp(-sqdist(x, z) / (2.0 * kernel.sigma ** 2))
 
 
-def build_C(x, basis, kernel: KernelSpec, backend: str = "jnp"):
-    return gram(x, basis, kernel, backend)
+def build_C(x, basis, kernel: KernelSpec, backend: str = "jnp", policy=None):
+    return gram(x, basis, kernel, backend, policy)
 
 
-def build_W(basis, kernel: KernelSpec, backend: str = "jnp"):
-    return gram(basis, basis, kernel, backend)
+def build_W(basis, kernel: KernelSpec, backend: str = "jnp", policy=None):
+    return gram(basis, basis, kernel, backend, policy)
 
 
 def nystrom_approx_kernel(x, basis, kernel: KernelSpec,

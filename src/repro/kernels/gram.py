@@ -26,7 +26,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _gram_kernel(x_ref, z_ref, o_ref, acc_ref, *, kind: str, sigma: float,
-                 out_dtype):
+                 out_dtype, compute=jnp.float32, accum=jnp.float32):
     k = pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -34,15 +34,17 @@ def _gram_kernel(x_ref, z_ref, o_ref, acc_ref, *, kind: str, sigma: float,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[...].astype(jnp.float32)          # (bn, bd)
-    z = z_ref[...].astype(jnp.float32)          # (bm, bd)
+    x = x_ref[...].astype(compute)              # (bn, bd)
+    z = z_ref[...].astype(compute)              # (bm, bd)
     xz = jax.lax.dot_general(x, z, (((1,), (1,)), ((), ())),
-                             preferred_element_type=jnp.float32)  # (bn, bm) MXU
+                             preferred_element_type=accum)       # (bn, bm) MXU
     if kind == "linear":
         acc_ref[...] += xz
     else:
-        xx = jnp.sum(x * x, axis=1, keepdims=True)               # (bn, 1)
-        zz = jnp.sum(z * z, axis=1, keepdims=True).T             # (1, bm)
+        xa = x.astype(accum)
+        za = z.astype(accum)
+        xx = jnp.sum(xa * xa, axis=1, keepdims=True)             # (bn, 1)
+        zz = jnp.sum(za * za, axis=1, keepdims=True).T           # (1, bm)
         acc_ref[...] += xx + zz - 2.0 * xz
 
     @pl.when(k == nk - 1)
@@ -58,16 +60,20 @@ def _gram_kernel(x_ref, z_ref, o_ref, acc_ref, *, kind: str, sigma: float,
 def gram_pallas(x: jnp.ndarray, z: jnp.ndarray, *, kind: str = "gaussian",
                 sigma: float = 1.0, bn: int = 256, bm: int = 256,
                 bd: int = 256, out_dtype=jnp.float32,
-                interpret: bool = False) -> jnp.ndarray:
+                interpret: bool = False,
+                compute=jnp.float32, accum=jnp.float32) -> jnp.ndarray:
     """C = k(x, z) with explicit VMEM tiling. Shapes must divide the blocks
-    (the ops.py wrapper pads/unpads arbitrary shapes)."""
+    (the ops.py wrapper pads/unpads arbitrary shapes). ``compute``/``accum``
+    select the cross-term matmul and distance-accumulation dtypes."""
     n, d = x.shape
     m, d2 = z.shape
     assert d == d2, (d, d2)
     assert n % bn == 0 and m % bm == 0 and d % bd == 0, (x.shape, z.shape, (bn, bm, bd))
     grid = (n // bn, m // bm, d // bd)
     kernel = functools.partial(_gram_kernel, kind=kind, sigma=sigma,
-                               out_dtype=out_dtype)
+                               out_dtype=out_dtype,
+                               compute=jnp.dtype(compute),
+                               accum=jnp.dtype(accum))
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -39,17 +39,27 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _tile(x_ref, z_ref, acc_ref, k, nk, kind, sigma):
-    """Accumulate the gram tile over d-blocks; return E on the last step."""
-    x = x_ref[...].astype(jnp.float32)
-    z = z_ref[...].astype(jnp.float32)
+def _tile(x_ref, z_ref, acc_ref, k, nk, kind, sigma,
+          compute=jnp.float32, accum=jnp.float32):
+    """Accumulate the gram tile over d-blocks; return E on the last step.
+
+    ``compute`` is what the MXU multiplies (bf16 under the cheap policy),
+    ``accum`` is the ``preferred_element_type`` of the cross-term matmul and
+    the dtype the squared norms are summed in — the VMEM scratch holding the
+    running distance is always ``accum`` (f32), so only the per-tile
+    products are low-precision, never the accumulation over d-blocks.
+    """
+    x = x_ref[...].astype(compute)
+    z = z_ref[...].astype(compute)
     xz = jax.lax.dot_general(x, z, (((1,), (1,)), ((), ())),
-                             preferred_element_type=jnp.float32)
+                             preferred_element_type=accum)
     if kind == "linear":
         acc_ref[...] += xz
     else:
-        xx = jnp.sum(x * x, axis=1, keepdims=True)
-        zz = jnp.sum(z * z, axis=1, keepdims=True).T
+        xa = x.astype(accum)
+        za = z.astype(accum)
+        xx = jnp.sum(xa * xa, axis=1, keepdims=True)
+        zz = jnp.sum(za * za, axis=1, keepdims=True).T
         acc_ref[...] += xx + zz - 2.0 * xz
 
 
@@ -60,7 +70,8 @@ def _finish_tile(acc_ref, kind, sigma):
     return jnp.exp(-jnp.maximum(acc, 0.0) / (2.0 * sigma ** 2))
 
 
-def _kmvp_fwd_kernel(x_ref, z_ref, b_ref, o_ref, acc_ref, *, kind, sigma):
+def _kmvp_fwd_kernel(x_ref, z_ref, b_ref, o_ref, acc_ref, *, kind, sigma,
+                     compute, accum):
     j, k = pl.program_id(1), pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -72,15 +83,24 @@ def _kmvp_fwd_kernel(x_ref, z_ref, b_ref, o_ref, acc_ref, *, kind, sigma):
     def _init_acc():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    _tile(x_ref, z_ref, acc_ref, k, nk, kind, sigma)
+    _tile(x_ref, z_ref, acc_ref, k, nk, kind, sigma, compute, accum)
 
     @pl.when(k == nk - 1)
     def _contract():
         E = _finish_tile(acc_ref, kind, sigma)                 # (bn, bm)
-        o_ref[...] += E @ b_ref[...].astype(jnp.float32)       # (bn, k)
+        if compute == jnp.float32:
+            # fp32 policy keeps the exact pre-policy expression (bitwise).
+            o_ref[...] += E @ b_ref[...].astype(jnp.float32)   # (bn, k)
+        else:
+            # Re-cast the finished tile to compute so the RHS contraction
+            # also runs on the cheap MXU path; accumulate at accum.
+            o_ref[...] += jax.lax.dot_general(
+                E.astype(compute), b_ref[...].astype(compute),
+                (((1,), (0,)), ((), ())), preferred_element_type=accum)
 
 
-def _kmvp_t_kernel(x_ref, z_ref, v_ref, g_ref, acc_ref, *, kind, sigma):
+def _kmvp_t_kernel(x_ref, z_ref, v_ref, g_ref, acc_ref, *, kind, sigma,
+                   compute, accum):
     i, k = pl.program_id(1), pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -92,12 +112,17 @@ def _kmvp_t_kernel(x_ref, z_ref, v_ref, g_ref, acc_ref, *, kind, sigma):
     def _init_acc():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    _tile(x_ref, z_ref, acc_ref, k, nk, kind, sigma)
+    _tile(x_ref, z_ref, acc_ref, k, nk, kind, sigma, compute, accum)
 
     @pl.when(k == nk - 1)
     def _contract():
         E = _finish_tile(acc_ref, kind, sigma)                 # (bn, bm)
-        g_ref[...] += E.T @ v_ref[...].astype(jnp.float32)     # (bm, k)
+        if compute == jnp.float32:
+            g_ref[...] += E.T @ v_ref[...].astype(jnp.float32)  # (bm, k)
+        else:
+            g_ref[...] += jax.lax.dot_general(
+                E.astype(compute), v_ref[...].astype(compute),
+                (((0,), (0,)), ((), ())), preferred_element_type=accum)
 
 
 def _check_blocks(name: str, dims) -> None:
@@ -114,18 +139,23 @@ def _check_blocks(name: str, dims) -> None:
 
 
 def kmvp_fwd_pallas(x, z, beta, *, kind="gaussian", sigma=1.0,
-                    bn=256, bm=256, bd=256, interpret=False):
+                    bn=256, bm=256, bd=256, interpret=False,
+                    compute=jnp.float32, accum=jnp.float32):
     """O = C(x, z) @ B, C never materialized. B: (m, k); O: (n, k).
 
     All k right-hand-side columns share each (bn, bm) gram tile — the
-    recomputation cost is paid once per tile, not once per column."""
+    recomputation cost is paid once per tile, not once per column.
+    ``compute``/``accum`` select the tile-matmul and accumulation dtypes
+    (see ``repro.kernels.policy``); the output is always ``accum`` f32."""
     n, d = x.shape
     m, _ = z.shape
     k = beta.shape[1]
     _check_blocks("kmvp_fwd_pallas", [("n", n, bn), ("m", m, bm),
                                       ("d", d, bd)])
     grid = (n // bn, m // bm, d // bd)
-    kernel = functools.partial(_kmvp_fwd_kernel, kind=kind, sigma=sigma)
+    kernel = functools.partial(_kmvp_fwd_kernel, kind=kind, sigma=sigma,
+                               compute=jnp.dtype(compute),
+                               accum=jnp.dtype(accum))
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -142,7 +172,8 @@ def kmvp_fwd_pallas(x, z, beta, *, kind="gaussian", sigma=1.0,
 
 
 def kmvp_t_pallas(x, z, v, *, kind="gaussian", sigma=1.0,
-                  bn=256, bm=256, bd=256, interpret=False):
+                  bn=256, bm=256, bd=256, interpret=False,
+                  compute=jnp.float32, accum=jnp.float32):
     """G = C(x, z)^T @ V, C never materialized. V: (n, k); G: (m, k).
 
     Adjoint of :func:`kmvp_fwd_pallas` over the same implicit C; the k
@@ -153,7 +184,9 @@ def kmvp_t_pallas(x, z, v, *, kind="gaussian", sigma=1.0,
     _check_blocks("kmvp_t_pallas", [("n", n, bn), ("m", m, bm),
                                     ("d", d, bd)])
     grid = (m // bm, n // bn, d // bd)
-    kernel = functools.partial(_kmvp_t_kernel, kind=kind, sigma=sigma)
+    kernel = functools.partial(_kmvp_t_kernel, kind=kind, sigma=sigma,
+                               compute=jnp.dtype(compute),
+                               accum=jnp.dtype(accum))
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -15,10 +15,17 @@ import jax.numpy as jnp
 
 from repro.kernels import gram as _gram
 from repro.kernels import kmvp as _kmvp
+from repro.kernels.policy import DtypePolicy, get_policy
 
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _sublane(dtype) -> int:
+    """Minimum TPU sublane tile for a dtype: 8 rows at 4 bytes, 16 at 2
+    (bf16/fp16), 32 at 1 (int8) — the row-padding alignment on hardware."""
+    return max(8, 32 // max(jnp.dtype(dtype).itemsize, 1))
 
 
 def _round_up(v: int, mult: int) -> int:
@@ -72,79 +79,92 @@ def _pad_lanes(v, interpret: bool) -> jnp.ndarray:
 
 
 @functools.partial(jax.jit, static_argnames=("kind", "sigma", "bn", "bm", "bd",
-                                             "interpret"))
+                                             "interpret", "policy"))
 def gram(x, z, *, kind: str = "gaussian", sigma: float = 1.0,
          bn: int = 256, bm: int = 256, bd: int = 256,
-         interpret: bool | None = None):
-    """C[i,k] = k(x_i, z_k) via the tiled Pallas kernel. Any shapes/dtypes."""
+         interpret: bool | None = None, policy=None):
+    """C[i,k] = k(x_i, z_k) via the tiled Pallas kernel. Any shapes/dtypes.
+
+    ``policy`` (name or DtypePolicy) selects compute/accum dtypes; the
+    default fp32 policy traces exactly the pre-policy jaxpr."""
     if interpret is None:
         interpret = _interpret_default()
+    pol = get_policy(policy)
+    comp, acc = pol.compute_dtype, pol.accum_dtype
     n, d = x.shape
     m = z.shape[0]
-    bn = _block(n, bn, 8, interpret)
+    bn = _block(n, bn, _sublane(comp), interpret)
     bm = _block(m, bm, 128, interpret)
     bd = _block(d, bd, 128, interpret)
     np_, mp_, dp_ = _round_up(n, bn), _round_up(m, bm), _round_up(d, bd)
-    xp = _pad_cols(_pad_rows(x, np_), dp_)
-    zp = _pad_cols(_pad_rows(z, mp_), dp_)
+    xp = _pad_cols(_pad_rows(x.astype(comp), np_), dp_)
+    zp = _pad_cols(_pad_rows(z.astype(comp), mp_), dp_)
     out = _gram.gram_pallas(xp, zp, kind=kind, sigma=sigma, bn=bn, bm=bm,
-                            bd=bd, interpret=interpret)
+                            bd=bd, interpret=interpret, compute=comp,
+                            accum=acc)
     return out[:n, :m]
 
 
 @functools.partial(jax.jit, static_argnames=("kind", "sigma", "bn", "bm", "bd",
-                                             "interpret"))
+                                             "interpret", "policy"))
 def kmvp_fwd(x, z, beta, *, kind: str = "gaussian", sigma: float = 1.0,
              bn: int = 256, bm: int = 256, bd: int = 256,
-             interpret: bool | None = None):
+             interpret: bool | None = None, policy=None):
     """o = C(x, z) @ beta with C fused away (never in HBM).
 
     ``beta`` may be a single (m,) vector or an (m, k) block of right-hand
     sides; the k columns share every gram-tile recomputation, so a K-class
     evaluation costs ~one recompute pass. Returns (n,) or (n, k) to match.
+    ``policy`` selects compute/accum dtypes; output is always accum f32.
     """
     if interpret is None:
         interpret = _interpret_default()
+    pol = get_policy(policy)
+    comp, acc = pol.compute_dtype, pol.accum_dtype
     n, d = x.shape
     m = z.shape[0]
-    bn = _block(n, bn, 8, interpret)
+    bn = _block(n, bn, _sublane(comp), interpret)
     bm = _block(m, bm, 128, interpret)
     bd = _block(d, bd, 128, interpret)
     np_, mp_, dp_ = _round_up(n, bn), _round_up(m, bm), _round_up(d, bd)
-    xp = _pad_cols(_pad_rows(x, np_), dp_)
-    zp = _pad_cols(_pad_rows(z, mp_), dp_)
+    xp = _pad_cols(_pad_rows(x.astype(comp), np_), dp_)
+    zp = _pad_cols(_pad_rows(z.astype(comp), mp_), dp_)
     b2, squeeze = _as_cols(beta)
     k = b2.shape[1]
     bp = _pad_lanes(_pad_rows(b2, mp_), interpret)  # zero padded basis rows
     out = _kmvp.kmvp_fwd_pallas(xp, zp, bp, kind=kind, sigma=sigma, bn=bn,
-                                bm=bm, bd=bd, interpret=interpret)
+                                bm=bm, bd=bd, interpret=interpret,
+                                compute=comp, accum=acc)
     return out[:n, 0] if squeeze else out[:n, :k]
 
 
 @functools.partial(jax.jit, static_argnames=("kind", "sigma", "bn", "bm", "bd",
-                                             "interpret"))
+                                             "interpret", "policy"))
 def kmvp_t(x, z, v, *, kind: str = "gaussian", sigma: float = 1.0,
            bn: int = 256, bm: int = 256, bd: int = 256,
-           interpret: bool | None = None):
+           interpret: bool | None = None, policy=None):
     """g = C(x, z)^T @ v with C fused away (never in HBM).
 
     ``v`` may be (n,) or an (n, k) block; returns (m,) or (m, k).
     """
     if interpret is None:
         interpret = _interpret_default()
+    pol = get_policy(policy)
+    comp, acc = pol.compute_dtype, pol.accum_dtype
     n, d = x.shape
     m = z.shape[0]
-    bn = _block(n, bn, 8, interpret)
+    bn = _block(n, bn, _sublane(comp), interpret)
     bm = _block(m, bm, 128, interpret)
     bd = _block(d, bd, 128, interpret)
     np_, mp_, dp_ = _round_up(n, bn), _round_up(m, bm), _round_up(d, bd)
-    xp = _pad_cols(_pad_rows(x, np_), dp_)
-    zp = _pad_cols(_pad_rows(z, mp_), dp_)
+    xp = _pad_cols(_pad_rows(x.astype(comp), np_), dp_)
+    zp = _pad_cols(_pad_rows(z.astype(comp), mp_), dp_)
     v2, squeeze = _as_cols(v)
     k = v2.shape[1]
     vp = _pad_lanes(_pad_rows(v2, np_), interpret)  # zero padded example rows
     out = _kmvp.kmvp_t_pallas(xp, zp, vp, kind=kind, sigma=sigma, bn=bn,
-                              bm=bm, bd=bd, interpret=interpret)
+                              bm=bm, bd=bd, interpret=interpret,
+                              compute=comp, accum=acc)
     return out[:m, 0] if squeeze else out[:m, :k]
 
 
@@ -156,17 +176,20 @@ def kmvp_t(x, z, v, *, kind: str = "gaussian", sigma: float = 1.0,
 # (block_rows x m) gram chunk) and donation of the enclosing buffers works.
 
 
-def otf_block_rows(n: int, m: int, d: int, budget_bytes: int = 1 << 20) -> int:
+def otf_block_rows(n: int, m: int, d: int, budget_bytes: int = 1 << 20,
+                   itemsize: int = 4) -> int:
     """Row-chunk size for the jnp on-the-fly fallback, keyed on the
     *per-shard* row count n.
 
-    Two ceilings: the transient (rows, m) f32 gram chunk stays under
-    ``budget_bytes``, and under ~1/8 of the shard's rows (so recomputation
-    never quietly degenerates into materializing the full per-shard C
-    block). Floor of 8 rows keeps the matmuls sane.
+    Two ceilings: the transient (rows, m) gram chunk (``itemsize`` bytes
+    per element — 2 under a bf16 policy, doubling the rows per chunk for
+    the same budget) stays under ``budget_bytes``, and under ~1/8 of the
+    shard's rows (so recomputation never quietly degenerates into
+    materializing the full per-shard C block). Floor of 8 rows keeps the
+    matmuls sane.
     """
     del d
-    by_budget = max(budget_bytes // (4 * max(m, 1)), 8)
+    by_budget = max(budget_bytes // (itemsize * max(m, 1)), 8)
     by_fraction = _round_up(max(n // 8, 1), 8)
     return int(max(8, min(by_budget, by_fraction, _round_up(n, 8))))
 
@@ -188,55 +211,109 @@ def otf_tiles(n: int, m: int, d: int, k: int = 1,
     return bn, bm, bd
 
 
+def gram_chunk_policy(c, z, *, kind: str, sigma: float, pol: DtypePolicy):
+    """One (rows, m) gram chunk under a dtype policy — the jnp-fallback
+    analogue of the Pallas ``_tile``/``_finish_tile`` sequence (satellite:
+    the CPU fallback must exercise the *same* cast-compute/accumulate
+    order, not silently promote everything to f32).
+
+    The cross-term matmul runs at ``compute`` with ``accum`` accumulation;
+    the squared norms and the distance combine at ``accum`` (mirroring the
+    f32 VMEM scratch); the *finished* chunk is returned at ``compute`` — so
+    the (rows, m) transient the introspect checks see under bf16 really is
+    bf16, halving the fallback's peak bytes.
+    """
+    comp, acc = pol.compute_dtype, pol.accum_dtype
+    cc = c.astype(comp)
+    zc = z.astype(comp)
+    xz = jax.lax.dot_general(cc, zc, (((1,), (1,)), ((), ())),
+                             preferred_element_type=acc)
+    if kind == "linear":
+        return xz.astype(comp)
+    ca = cc.astype(acc)
+    za = zc.astype(acc)
+    xx = jnp.sum(ca * ca, axis=1, keepdims=True)
+    zz = jnp.sum(za * za, axis=1, keepdims=True).T
+    d2 = jnp.maximum(xx + zz - 2.0 * xz, 0.0)
+    return jnp.exp(-d2 / (2.0 * sigma ** 2)).astype(comp)
+
+
 def kmvp_fwd_chunked(x, z, beta, *, kind: str = "gaussian", sigma: float = 1.0,
-                     block_rows: int | None = None):
+                     block_rows: int | None = None, policy=None):
     """o = C(x, z) @ beta via row-chunked recomputation (jnp fallback).
 
     Peak transient is one (block_rows, m) gram chunk — the fallback keeps
     the fused kernels' memory contract on backends without Pallas. ``beta``
     may be (m,) or (m, k); every RHS column contracts against the same
     recomputed gram chunk (one recompute pass per evaluation, not k).
+    Under a low-precision ``policy`` the chunk is computed and held at the
+    policy's compute dtype with f32 accumulation, exactly like the kernels.
     """
     from repro.kernels import ref
+    pol = get_policy(policy)
     n, d = x.shape
     m = z.shape[0]
     b2, squeeze = _as_cols(beta)
     bn = block_rows or otf_block_rows(n, m, d)
     nb = -(-n // bn)
-    xp = _pad_rows(x, nb * bn).reshape(nb, bn, d)
+    if pol.compute == "float32":
+        xp = _pad_rows(x, nb * bn).reshape(nb, bn, d)
 
-    @jax.checkpoint
-    def chunk(c):
-        return ref.gram_ref(c, z, kind=kind, sigma=sigma) @ b2.astype(
-            jnp.float32)
+        @jax.checkpoint
+        def chunk(c):
+            return ref.gram_ref(c, z, kind=kind, sigma=sigma) @ b2.astype(
+                jnp.float32)
+    else:
+        comp, acc = pol.compute_dtype, pol.accum_dtype
+        xp = _pad_rows(x.astype(comp), nb * bn).reshape(nb, bn, d)
+        bc = b2.astype(comp)
+
+        @jax.checkpoint
+        def chunk(c):
+            E = gram_chunk_policy(c, z, kind=kind, sigma=sigma, pol=pol)
+            return jax.lax.dot_general(E, bc, (((1,), (0,)), ((), ())),
+                                       preferred_element_type=acc)
 
     out = jax.lax.map(chunk, xp).reshape(nb * bn, -1)[:n]
     return out[:, 0] if squeeze else out
 
 
 def kmvp_t_chunked(x, z, v, *, kind: str = "gaussian", sigma: float = 1.0,
-                   block_rows: int | None = None):
+                   block_rows: int | None = None, policy=None):
     """g = C(x, z)^T @ v via row-chunked recomputation (jnp fallback).
 
     Padded x rows have nonzero gaussian kernel values against z, but their
     v entries are zero-padded, so their contribution to g vanishes exactly.
     ``v`` may be (n,) or (n, k); the accumulator contracts the k columns
-    against each gram chunk without ever transposing it.
+    against each gram chunk without ever transposing it. The (k, m)
+    accumulator carried across chunks always stays at accum f32.
     """
     from repro.kernels import ref
+    pol = get_policy(policy)
     n, d = x.shape
     m = z.shape[0]
     v2, squeeze = _as_cols(v)
     k = v2.shape[1]
     bn = block_rows or otf_block_rows(n, m, d)
     nb = -(-n // bn)
-    xp = _pad_rows(x, nb * bn).reshape(nb, bn, d)
-    vp = _pad_rows(v2.astype(jnp.float32), nb * bn).reshape(nb, bn, k)
+    if pol.compute == "float32":
+        xp = _pad_rows(x, nb * bn).reshape(nb, bn, d)
+        vp = _pad_rows(v2.astype(jnp.float32), nb * bn).reshape(nb, bn, k)
 
-    @jax.checkpoint
-    def contrib(c, vc):
-        E = ref.gram_ref(c, z, kind=kind, sigma=sigma)          # (bn, m)
-        return jax.lax.dot_general(vc, E, (((0,), (0,)), ((), ())))  # (k, m)
+        @jax.checkpoint
+        def contrib(c, vc):
+            E = ref.gram_ref(c, z, kind=kind, sigma=sigma)      # (bn, m)
+            return jax.lax.dot_general(vc, E, (((0,), (0,)), ((), ())))  # (k, m)
+    else:
+        comp, acc = pol.compute_dtype, pol.accum_dtype
+        xp = _pad_rows(x.astype(comp), nb * bn).reshape(nb, bn, d)
+        vp = _pad_rows(v2.astype(comp), nb * bn).reshape(nb, bn, k)
+
+        @jax.checkpoint
+        def contrib(c, vc):
+            E = gram_chunk_policy(c, z, kind=kind, sigma=sigma, pol=pol)
+            return jax.lax.dot_general(vc, E, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=acc)
 
     def body(g, cv):
         return g + contrib(*cv), None
@@ -246,41 +323,48 @@ def kmvp_t_chunked(x, z, v, *, kind: str = "gaussian", sigma: float = 1.0,
 
 
 def otf_kmvp_fwd(x, z, beta, *, kind: str = "gaussian", sigma: float = 1.0,
-                 backend: str = "jnp", block_rows: int | None = None):
+                 backend: str = "jnp", block_rows: int | None = None,
+                 policy=None):
     """Backend dispatch for o = C(x, z) @ beta with C never in HBM.
 
     ``pallas`` fuses the gram tile into the matvec in VMEM (tile sizes from
     :func:`otf_tiles`); ``jnp`` recomputes row chunks. Callable inside
     shard_map bodies — x is the per-shard row block there. ``beta`` may be
-    (m,) or an (m, k) multi-RHS block on either backend.
+    (m,) or an (m, k) multi-RHS block on either backend. ``policy`` is
+    honored identically by both backends.
     """
     if backend == "pallas":
         k = 1 if beta.ndim == 1 else beta.shape[1]
         bn, bm, bd = otf_tiles(x.shape[0], z.shape[0], x.shape[1], k)
         return kmvp_fwd(x, z, beta, kind=kind, sigma=sigma,
-                        bn=bn, bm=bm, bd=bd)
+                        bn=bn, bm=bm, bd=bd, policy=policy)
     return kmvp_fwd_chunked(x, z, beta, kind=kind, sigma=sigma,
-                            block_rows=block_rows)
+                            block_rows=block_rows, policy=policy)
 
 
 def otf_kmvp_t(x, z, v, *, kind: str = "gaussian", sigma: float = 1.0,
-               backend: str = "jnp", block_rows: int | None = None):
+               backend: str = "jnp", block_rows: int | None = None,
+               policy=None):
     """Backend dispatch for g = C(x, z)^T @ v with C never in HBM.
 
     ``v`` may be (n,) or an (n, k) multi-RHS block on either backend."""
     if backend == "pallas":
         k = 1 if v.ndim == 1 else v.shape[1]
         bn, bm, bd = otf_tiles(x.shape[0], z.shape[0], x.shape[1], k)
-        return kmvp_t(x, z, v, kind=kind, sigma=sigma, bn=bn, bm=bm, bd=bd)
+        return kmvp_t(x, z, v, kind=kind, sigma=sigma, bn=bn, bm=bm, bd=bd,
+                      policy=policy)
     return kmvp_t_chunked(x, z, v, kind=kind, sigma=sigma,
-                          block_rows=block_rows)
+                          block_rows=block_rows, policy=policy)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def ssd_chunk(Cc, Bc, dA, xdt, *, interpret: bool | None = None):
+@functools.partial(jax.jit, static_argnames=("interpret", "policy"))
+def ssd_chunk(Cc, Bc, dA, xdt, *, interpret: bool | None = None, policy=None):
     """Mamba-2 SSD within-chunk term via the Pallas kernel (any shapes with
     Q multiple of 8 recommended; grid = (G, H))."""
     from repro.kernels import ssd as _ssd
     if interpret is None:
         interpret = _interpret_default()
-    return _ssd.ssd_chunk_pallas(Cc, Bc, dA, xdt, interpret=interpret)
+    pol = get_policy(policy)
+    return _ssd.ssd_chunk_pallas(Cc, Bc, dA, xdt, interpret=interpret,
+                                 compute=pol.compute_dtype,
+                                 accum=pol.accum_dtype)

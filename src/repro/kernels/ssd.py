@@ -24,30 +24,39 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _ssd_chunk_kernel(c_ref, b_ref, da_ref, xdt_ref, o_ref):
+def _ssd_chunk_kernel(c_ref, b_ref, da_ref, xdt_ref, o_ref, *,
+                      compute=jnp.float32, accum=jnp.float32):
     # blocks: c/b (1, Q, N); da (1, Q); xdt/o (1, Q, P)
-    C = c_ref[0].astype(jnp.float32)                     # (Q, N)
-    B = b_ref[0].astype(jnp.float32)                     # (Q, N)
-    dA = da_ref[0, 0].astype(jnp.float32)                # (Q,)
-    X = xdt_ref[0, 0].astype(jnp.float32)                # (Q, P)
+    C = c_ref[0].astype(compute)                         # (Q, N)
+    B = b_ref[0].astype(compute)                         # (Q, N)
+    dA = da_ref[0, 0].astype(accum)                      # (Q,)
+    X = xdt_ref[0, 0].astype(compute)                    # (Q, P)
     Q = C.shape[0]
 
     scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
-                                 preferred_element_type=jnp.float32)  # MXU
+                                 preferred_element_type=accum)  # MXU
     # segsum via triangular-ones matmul: cs[i] = sum_{k<=i} dA[k]
+    # The decay matrix stays at accum: exp() of low-precision cumulative
+    # sums is where an SSD chunk actually loses accuracy, not the matmuls.
     ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
     jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
-    tril = (ii >= jj).astype(jnp.float32)
+    tril = (ii >= jj).astype(accum)
     cs = tril @ dA[:, None]                              # (Q, 1) inclusive
     diff = cs - cs.T                                     # cs_i - cs_j
     # segsum semantics: sum_{j<k<=i} dA_k = cs_i - cs_j (both inclusive)
     L = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
-    y = jax.lax.dot_general(scores * L, X, (((1,), (0,)), ((), ())),
-                            preferred_element_type=jnp.float32)
+    if compute == jnp.float32:
+        y = jax.lax.dot_general(scores * L, X, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    else:
+        y = jax.lax.dot_general((scores * L).astype(compute), X,
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=accum)
     o_ref[0, 0] = y.astype(o_ref.dtype)
 
 
-def ssd_chunk_pallas(Cc, Bc, dA, xdt, *, interpret: bool = False):
+def ssd_chunk_pallas(Cc, Bc, dA, xdt, *, interpret: bool = False,
+                     compute=jnp.float32, accum=jnp.float32):
     """Within-chunk SSD term, batched over (G, H) grid.
 
     Cc, Bc: (G, Q, N); dA: (G, H, Q); xdt: (G, H, Q, P) -> y: (G, H, Q, P).
@@ -57,7 +66,8 @@ def ssd_chunk_pallas(Cc, Bc, dA, xdt, *, interpret: bool = False):
     P = xdt.shape[-1]
     grid = (G, H)
     return pl.pallas_call(
-        _ssd_chunk_kernel,
+        functools.partial(_ssd_chunk_kernel, compute=jnp.dtype(compute),
+                          accum=jnp.dtype(accum)),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, Q, N), lambda g, h: (g, 0, 0)),

@@ -45,6 +45,7 @@ from repro.core.compat import make_mesh
 from repro.data import PAPER_DATASETS, make_dataset, make_multiclass
 from repro.data.chunks import (MmapChunkSource, is_partition_dir,
                                open_partition, save_chunks)
+from repro.kernels.policy import POLICIES
 from repro.launch.cli import plan_choices, registry_epilog, solver_choices
 from repro.sharding import multihost
 
@@ -82,6 +83,15 @@ def main():
     ap.add_argument("--chunk-rows", type=int, default=None,
                     help="rows streamed per step under plan 'stream' "
                          "(bounds every intermediate at chunk_rows x m)")
+    ap.add_argument("--policy", default="fp32",
+                    choices=sorted(POLICIES),
+                    help="dtype policy for the kernel compute path "
+                         "(bf16/fp16 cut the tile matmul precision; "
+                         "accumulation and TRON state stay fp32)")
+    ap.add_argument("--quantize", default=None, choices=["int8"],
+                    help="store the saved checkpoint's basis/beta as "
+                         "symmetric per-column int8 (serving checkpoints "
+                         "~4x smaller; load dequantizes transparently)")
     ap.add_argument("--save", default=None,
                     help="checkpoint path for repro.launch.kernel_serve")
     ap.add_argument("--ckpt-interval", type=int, default=0,
@@ -204,6 +214,7 @@ def main():
             solver=args.solver, plan=args.plan,
             tron=TronConfig(max_iter=args.max_iter),
             m=m, rff_features=m, model_axis=model_axis,
+            dtype_policy=args.policy,
             stream=StreamConfig(chunk_rows=args.chunk_rows))
 
     # fail on an invalid solver/plan pair before any data work
@@ -310,7 +321,7 @@ def main():
             f"test_acc={km.score(Xt, yt):.4f}")
     if args.save:
         if multihost.is_primary():
-            print(f"[save ] {km.save(args.save)}")
+            print(f"[save ] {km.save(args.save, quantize=args.quantize)}")
         multihost.sync("save")     # checkpoint durable before anyone exits
     multihost.sync("done")
 

@@ -88,7 +88,7 @@ def make_workload(registry: ModelRegistry, *, clients: int,
             entry = registry.get(name)
             n = int(rng.integers(1, max_rows + 1))
             X = rng.standard_normal((n, entry.d or d_fallback)) \
-                   .astype(np.float32)
+                   .astype(entry.dtype)
             ref = np.asarray(entry.decider(X)) if verify else None
             stream.append(LoadRequest(model=name, X=X, reference=ref))
         streams.append(stream)

@@ -12,6 +12,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
+import numpy as np
+
 from repro.api.infer import BucketedDecider
 from repro.api.machine import KernelMachine
 
@@ -45,6 +47,10 @@ class ServedModel:
     d: int
     n_classes: int
     decider: BucketedDecider
+    #: Request payload dtype: the machine's compute dtype, so clients under
+    #: a bf16 policy ship half the wire bytes and warmup compiles the same
+    #: jit family live traffic hits (dtype is part of the executable key).
+    dtype: np.dtype = np.dtype(np.float32)
 
 
 class ModelRegistry:
@@ -71,7 +77,8 @@ class ModelRegistry:
             n_classes=int(beta.shape[1]) if beta.ndim == 2 else 0,
             decider=BucketedDecider(
                 km.decider(plan=resolved, backend=backend),
-                max_batch=self.max_batch if max_batch is None else max_batch))
+                max_batch=self.max_batch if max_batch is None else max_batch),
+            dtype=km.config.get_policy().np_compute_dtype())
         self._models[name] = entry
         if self._default is None:
             self._default = name
@@ -112,5 +119,5 @@ class ModelRegistry:
         """Precompile every bucket of every registered model; returns
         model -> executable count. Called by ``kernel_serve`` before it
         accepts traffic (``--no-warmup`` opts out)."""
-        return {name: entry.decider.warmup(entry.d)
+        return {name: entry.decider.warmup(entry.d, entry.dtype)
                 for name, entry in sorted(self._models.items())}

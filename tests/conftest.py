@@ -78,7 +78,7 @@ def pytest_runtest_call(item):
 
 
 # ------------------------------------------------------- shared parity asserts
-_DTYPE_TOL = {"float32": 2e-4, "bfloat16": 3e-2}
+_DTYPE_TOL = {"float32": 2e-4, "bfloat16": 3e-2, "float16": 4e-3}
 
 
 def assert_allclose_dtype(got, want, dtype, *, rtol=None, atol=None):

@@ -182,6 +182,117 @@ def test_multirhs_adjoint(k, kind, impl):
     assert abs(lhs - rhs) / scale < 1e-5, (lhs, rhs)
 
 
+# ----------------------------------------------------- dtype-policy parity
+# The policy axis is orthogonal to the input-dtype axis above: inputs stay
+# fp32 and the *policy* decides what the tiles cast to / accumulate in.
+POLICY_COMPUTE = {"bf16": jnp.bfloat16, "fp16": jnp.float16}
+
+
+@pytest.mark.dtype
+@pytest.mark.parametrize("shape", ODD_SHAPES)
+@pytest.mark.parametrize("kind", KINDS)
+def test_policy_fp32_bitwise(shape, kind):
+    """policy='fp32' must be the identity: every cast is a trace-time
+    no-op, so outputs are bitwise equal to the unpolicied call — the
+    default-path guarantee the whole policy layer rests on."""
+    n, m, d = shape
+    x, z, beta, v = _data(n, m, d, jnp.float32)
+    kw = dict(kind=kind, sigma=_sigma(d))
+    pairs = [
+        (ops.gram(x, z, **kw), ops.gram(x, z, policy="fp32", **kw)),
+        (ops.kmvp_fwd(x, z, beta, **kw),
+         ops.kmvp_fwd(x, z, beta, policy="fp32", **kw)),
+        (ops.kmvp_t(x, z, v, **kw),
+         ops.kmvp_t(x, z, v, policy="fp32", **kw)),
+        (ops.kmvp_fwd_chunked(x, z, beta, **kw),
+         ops.kmvp_fwd_chunked(x, z, beta, policy="fp32", **kw)),
+        (ops.kmvp_t_chunked(x, z, v, **kw),
+         ops.kmvp_t_chunked(x, z, v, policy="fp32", **kw)),
+    ]
+    for base, policied in pairs:
+        assert np.array_equal(np.asarray(base), np.asarray(policied))
+
+
+@pytest.mark.dtype
+@pytest.mark.parametrize("k", MULTI_KS)
+@pytest.mark.parametrize("policy", sorted(POLICY_COMPUTE))
+@pytest.mark.parametrize("kind", KINDS)
+def test_policy_parity_grid(k, policy, kind):
+    """bf16/fp16 policies vs the fp32 dense oracle at per-dtype tolerance,
+    Pallas and chunked-jnp backends, odd shapes x kinds x k."""
+    comp = POLICY_COMPUTE[policy]
+    for shape in [(1, 3, 127), (129, 257, 3), (257, 127, 129)]:
+        n, m, d = shape
+        x, z, B, V = _multi_data(n, m, d, k, jnp.float32)
+        kw = dict(kind=kind, sigma=_sigma(d))
+        G = np.asarray(ref.gram_ref(x, z, **kw))
+        assert_allclose_dtype(ops.gram(x, z, policy=policy, **kw), G, comp)
+        for fwd, t in [(ops.kmvp_fwd, ops.kmvp_t),
+                       (ops.kmvp_fwd_chunked, ops.kmvp_t_chunked)]:
+            O = fwd(x, z, B, policy=policy, **kw)
+            Gt = t(x, z, V, policy=policy, **kw)
+            assert O.dtype == jnp.float32 and Gt.dtype == jnp.float32
+            assert_allclose_dtype(O, G @ np.asarray(B), comp)
+            assert_allclose_dtype(Gt, G.T @ np.asarray(V), comp)
+
+
+@pytest.mark.dtype
+@pytest.mark.parametrize("policy", sorted(POLICY_COMPUTE))
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("impl", ["pallas", "chunked"])
+def test_policy_adjoint(policy, kind, impl):
+    """Adjointness under a low-precision policy holds to the compute
+    dtype's tolerance: fwd rounds B while t rounds V, so the pairing is
+    exact only up to one input-rounding step on each side. The gap is
+    normalized by the term mass sum(|O.V|) + sum(|B.G|), not the (heavily
+    cancelled) pairing value itself — rounding acts on the terms."""
+    from conftest import _DTYPE_TOL
+    n, m, d = 129, 64, 16
+    x, z, B, V = _multi_data(n, m, d, 3, jnp.float32)
+    kw = dict(kind=kind, sigma=_sigma(d), policy=policy)
+    if impl == "pallas":
+        O, G = ops.kmvp_fwd(x, z, B, **kw), ops.kmvp_t(x, z, V, **kw)
+    else:
+        O = ops.kmvp_fwd_chunked(x, z, B, **kw)
+        G = ops.kmvp_t_chunked(x, z, V, **kw)
+    lhs, rhs = float(jnp.sum(O * V)), float(jnp.sum(B * G))
+    scale = max(1.0, float(jnp.sum(jnp.abs(O * V)))
+                + float(jnp.sum(jnp.abs(B * G))))
+    tol = _DTYPE_TOL[np.dtype(POLICY_COMPUTE[policy]).name]
+    assert abs(lhs - rhs) / scale < tol, (lhs, rhs, scale)
+
+
+@pytest.mark.dtype
+def test_policy_otf_memory_contract():
+    """Under bf16 the Pallas otf path keeps fp32 out of HBM entirely
+    (the f32 accumulator is VMEM scratch); the jnp fallback's finished
+    chunk materializes at bf16 — its only fp32 transient is the
+    chunk-sized dot accumulator, never the full C block."""
+    from repro.core.introspect import max_intermediate_elems_of_dtype
+    n, d, m, br = 64, 8, 32, 16
+    x, z, _, _ = _data(n, m, d, jnp.float32)
+    v = jnp.ones((n, 1), jnp.float32)
+    kw = dict(kind="gaussian", sigma=_sigma(d))
+
+    def otf_pallas(x, z, v):
+        return ops.otf_kmvp_t(x, z, v, backend="pallas", block_rows=br,
+                              policy="bf16", **kw)
+
+    def otf_jnp(x, z, v):
+        return ops.kmvp_t_chunked(x, z, v, block_rows=br, policy="bf16",
+                                  **kw)
+
+    # pallas: strictly no fp32 (rows, m) block anywhere in HBM
+    worst = max_intermediate_elems_of_dtype(otf_pallas, "float32", x, z, v)
+    assert worst < br * m, worst
+    # fallback: fp32 bounded by one chunk (full C forbidden), and the
+    # finished chunk really exists at the compute dtype
+    worst32 = max_intermediate_elems_of_dtype(otf_jnp, "float32", x, z, v)
+    worst16 = max_intermediate_elems_of_dtype(otf_jnp, "bfloat16", x, z, v)
+    assert worst32 <= br * m < n * m, worst32
+    assert worst16 >= br * m, worst16
+
+
 def test_kmvp_block_divisibility_errors():
     """The raw Pallas entry points reject non-divisible dims with errors
     naming the offending dim and block (the old bare asserts said nothing)."""

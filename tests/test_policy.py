@@ -1,0 +1,260 @@
+"""DtypePolicy end to end: config plumbing, checkpoint back-compat,
+int8-quantized serving checkpoints, and the solver x plan decide
+equivalence matrix at the documented per-policy tolerances.
+
+Tolerances below are measured, not aspirational (see the precision-policy
+table in docs/paper_map.md): fp32 is plan-exact to f32 roundoff; fp16
+margins sit ~1e-3 off fp32; bf16 local decide ~8e-3 and the fused/otf
+arms ~1.3e-2 (inherent bf16 input rounding — ~0.4% per operand — not an
+accumulation artifact, since accumulation stays fp32 everywhere).
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api.config import MachineConfig
+from repro.api.machine import KernelMachine
+from repro.checkpoint import load_arrays, save_checkpoint
+from repro.checkpoint.quant import (QUANT_KEYS, dequantize_int8,
+                                    dequantize_state, quantize_int8,
+                                    quantize_state)
+from repro.core.nystrom import KernelSpec
+from repro.kernels.policy import (BF16, FP32, POLICIES, DtypePolicy,
+                                  get_policy)
+
+N, D, M = 192, 16, 48
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(7)
+    X = rng.standard_normal((N, D)).astype(np.float32)
+    w = rng.standard_normal(D).astype(np.float32)
+    y = np.sign(X @ w + 0.1 * rng.standard_normal(N)).astype(np.float32)
+    return X, y
+
+
+@pytest.fixture(scope="module")
+def fitted(data):
+    X, y = data
+    cfg = MachineConfig(kernel=KernelSpec("gaussian", sigma=float(np.sqrt(D))),
+                        solver="tron", plan="local", m=M, lam=0.1, seed=0)
+    return KernelMachine(cfg).fit(X, y)
+
+
+# ------------------------------------------------------------ policy objects
+def test_policy_objects():
+    assert get_policy(None) is FP32 and get_policy("fp32") is FP32
+    assert get_policy("bf16") is BF16 and get_policy(BF16) is BF16
+    assert FP32.is_default and not BF16.is_default
+    assert BF16.compute_dtype == jnp.bfloat16
+    assert BF16.accum_dtype == jnp.float32      # accumulation is never cut
+    assert BF16.param_dtype == jnp.float32
+    assert BF16.np_compute_dtype().itemsize == 2
+    assert set(POLICIES) == {"fp32", "bf16", "fp16"}
+    with pytest.raises(ValueError, match="unknown dtype policy"):
+        get_policy("int4")
+    with pytest.raises(TypeError):
+        get_policy(32)
+    with pytest.raises(TypeError):
+        DtypePolicy(compute="not_a_dtype")
+    DtypePolicy(store="int8")                   # quantized store is legal
+
+
+def test_config_roundtrip_and_backcompat():
+    cfg = MachineConfig(dtype_policy="bf16")
+    assert cfg.get_policy() is BF16
+    assert MachineConfig.from_dict(cfg.to_dict()).dtype_policy == "bf16"
+    # configs serialized before the policy field existed carry no key:
+    # they must load as the bitwise-unchanged fp32 default
+    legacy = cfg.to_dict()
+    del legacy["dtype_policy"]
+    assert MachineConfig.from_dict(legacy).dtype_policy == "fp32"
+    with pytest.raises(ValueError, match="unknown dtype policy"):
+        MachineConfig(dtype_policy="int4")
+
+
+# ------------------------------------------------------ checkpoint back-compat
+def test_pre_policy_checkpoint_loads_and_serves_identically(
+        tmp_path, fitted, data):
+    """A checkpoint written by the pre-policy code (no dtype_policy config
+    key, no quantization manifest) loads under the fp32 default and serves
+    bitwise-identical margins."""
+    X, _ = data
+    ref = np.asarray(fitted.decision_function(X))
+    cur = os.path.join(tmp_path, "cur.npz")
+    old = os.path.join(tmp_path, "old.npz")
+    fitted.save(cur)
+    arrays, meta = load_arrays(cur)
+    del meta["config"]["dtype_policy"]          # what an old writer produced
+    assert "quantized" not in meta
+    save_checkpoint(old, arrays, metadata=meta)
+    km = KernelMachine.load(old)
+    assert km.config.dtype_policy == "fp32"
+    for k, v in fitted.state_.items():
+        assert np.array_equal(np.asarray(km.state_[k]), np.asarray(v)), k
+    assert np.array_equal(np.asarray(km.decision_function(X)), ref)
+
+
+def test_load_policy_override(tmp_path, fitted, data):
+    X, _ = data
+    ref = np.asarray(fitted.decision_function(X))
+    path = os.path.join(tmp_path, "km.npz")
+    fitted.save(path)
+    same = KernelMachine.load(path)
+    assert np.array_equal(np.asarray(same.decision_function(X)), ref)
+    km16 = KernelMachine.load(path, policy="bf16")
+    assert km16.config.dtype_policy == "bf16"
+    got = np.asarray(km16.decision_function(X))
+    rel = np.max(np.abs(got - ref)) / np.max(np.abs(ref))
+    assert 0 < rel < 3e-2, rel                  # close, but NOT bitwise
+
+
+# ----------------------------------------------------------- int8 quantization
+def test_quantize_int8_roundtrip_bound():
+    rng = np.random.default_rng(3)
+    # wildly different per-column dynamic ranges + an all-zero column
+    A = rng.standard_normal((64, 6)).astype(np.float32)
+    A *= np.float32(10.0) ** np.arange(-3, 3, dtype=np.float32)
+    A[:, 2] = 0.0
+    q, s = quantize_int8(A)
+    assert q.dtype == np.int8 and s.dtype == np.float32 and s.shape == (6,)
+    back = dequantize_int8(q, s)
+    # symmetric rounding: per-element error <= half a quantization step,
+    # i.e. each column reconstructs within amax_j / 254
+    bound = np.maximum(np.abs(A), 0).max(axis=0) / 254.0 + 1e-12
+    assert np.all(np.abs(back - A) <= bound[None, :] * (1 + 1e-6))
+    assert np.array_equal(back[:, 2], A[:, 2])  # zero column exact
+    # 1-D beta path: one column
+    b = rng.standard_normal(32).astype(np.float32)
+    qb, sb = quantize_int8(b)
+    assert sb.shape == (1,)
+    assert np.max(np.abs(dequantize_int8(qb, sb) - b)) \
+        <= np.max(np.abs(b)) / 254.0 * (1 + 1e-6)
+
+
+def test_quantize_state_manifest_validation():
+    state = {"basis": np.ones((8, 4), np.float32),
+             "beta": np.arange(8, dtype=np.float32),
+             "classes": np.arange(3)}
+    tree, manifest = quantize_state(state)
+    assert set(manifest) == set(QUANT_KEYS)
+    assert "basis::q8" in tree and "basis::scale" in tree
+    assert np.array_equal(tree["classes"], state["classes"])  # passthrough
+    back = dequantize_state(tree, manifest)
+    assert set(back) == set(state)
+    with pytest.raises(ValueError, match="unknown quantization scheme"):
+        quantize_state(state, "int4")
+    with pytest.raises(ValueError, match="does not declare"):
+        dequantize_state(tree, {})              # undeclared quantized entry
+    with pytest.raises(ValueError, match="absent from the checkpoint"):
+        dequantize_state({"beta": state["beta"]}, {"basis": "int8"})
+
+
+@pytest.mark.dtype
+def test_quantized_checkpoint_roundtrip(tmp_path, fitted, data):
+    """save(quantize='int8') -> load serves margins within the documented
+    bound of the fp32 machine, and the loaded state is deterministic."""
+    X, _ = data
+    ref = np.asarray(fitted.decision_function(X))
+    path = os.path.join(tmp_path, "q8.npz")
+    fitted.save(path, quantize="int8")
+    km = KernelMachine.load(path)
+    got = np.asarray(km.decision_function(X))
+    rel = np.max(np.abs(got - ref)) / np.max(np.abs(ref))
+    assert rel < 5e-2, rel      # measured ~3e-2: basis rounding dominates
+    # quantized checkpoint + bf16 serving policy: the intended fleet setup.
+    # bf16 adds nothing measurable on top of int8 (3e-2 vs 3e-2): the
+    # int8 step amax/254 is coarser than bf16's relative rounding here.
+    km16 = KernelMachine.load(path, policy="bf16")
+    got16 = np.asarray(km16.decision_function(X))
+    rel16 = np.max(np.abs(got16 - ref)) / np.max(np.abs(ref))
+    assert rel16 < 6e-2, rel16
+
+
+@pytest.mark.dtype
+def test_quantized_checkpoint_size_ratio(tmp_path):
+    """At serving scale (m=1024) the int8 checkpoint is <= 0.3x the fp32
+    bytes — the acceptance point; tiny machines are zip-overhead-bound."""
+    rng = np.random.default_rng(0)
+    km = KernelMachine(MachineConfig(m=1024))
+    km.state_ = {"basis": jnp.asarray(rng.standard_normal((1024, 64)),
+                                      jnp.float32),
+                 "beta": jnp.asarray(rng.standard_normal(1024), jnp.float32)}
+    full = os.path.join(tmp_path, "full.npz")
+    q8 = os.path.join(tmp_path, "q8.npz")
+    km.save(full)
+    km.save(q8, quantize="int8")
+    ratio = os.path.getsize(q8) / os.path.getsize(full)
+    assert ratio <= 0.3, ratio
+
+
+# ------------------------------------------------- decide equivalence matrix
+#: plan -> per-policy relative-margin tolerance vs the fp32 local reference.
+#: fp32 must agree to f32 roundoff on every plan; fp16 to ~1e-3; bf16 is
+#: input-rounding-bound: ~8e-3 on the materialized local arm, ~1.3e-2 on
+#: the fused/otf/stream arms (the gram tile is evaluated at bf16 there).
+_MATRIX_TOL = {
+    "fp32": {"local": 1e-5, "otf": 1e-5, "otf_shard": 1e-5,
+             "shard_map": 1e-5, "stream": 1e-5},
+    "fp16": {"local": 4e-3, "otf": 4e-3, "otf_shard": 4e-3,
+             "shard_map": 4e-3, "stream": 4e-3},
+    "bf16": {"local": 1e-2, "otf": 3e-2, "otf_shard": 3e-2,
+             "shard_map": 3e-2, "stream": 3e-2},
+}
+
+
+@pytest.mark.dtype
+@pytest.mark.parametrize("policy", sorted(_MATRIX_TOL))
+def test_decide_equivalence_matrix(policy, fitted, data):
+    """One fp32-trained state, every decide arm x this policy: margins stay
+    within the documented tolerance of the fp32 local reference."""
+    X, _ = data
+    ref = np.asarray(fitted.decision_function(X))
+    scale = np.max(np.abs(ref))
+    km = KernelMachine(fitted.config.replace(dtype_policy=policy))
+    km.state_ = fitted.state_
+    for plan, tol in _MATRIX_TOL[policy].items():
+        got = np.asarray(km.decision_function(X, plan=plan))
+        rel = np.max(np.abs(got - ref)) / scale
+        assert rel < tol, (policy, plan, rel)
+
+
+@pytest.mark.dtype
+def test_decide_fp32_policy_bitwise(fitted, data):
+    """The explicit fp32 policy is not merely close on the local arm — it
+    is the same trace, hence bitwise."""
+    X, _ = data
+    km = KernelMachine(fitted.config.replace(dtype_policy="fp32"))
+    km.state_ = fitted.state_
+    assert np.array_equal(np.asarray(km.decision_function(X)),
+                          np.asarray(fitted.decision_function(X)))
+
+
+# --------------------------------------------------------- serving dtype wire
+@pytest.mark.dtype
+def test_serve_registry_policy_dtype(fitted, data):
+    """Registry entries carry the machine's compute dtype; the load
+    generator ships payloads in it; warmup + verification stay coherent."""
+    from repro.serve.loadgen import baseline_target, make_workload, run_load
+    from repro.serve.registry import ModelRegistry
+
+    X, _ = data
+    reg = ModelRegistry(max_batch=32)
+    reg.add("f32", fitted)
+    km16 = KernelMachine(fitted.config.replace(dtype_policy="bf16"))
+    km16.state_ = fitted.state_
+    reg.add("b16", km16)
+    assert reg.get("f32").dtype == np.dtype(np.float32)
+    assert reg.get("b16").dtype.itemsize == 2           # ml_dtypes bfloat16
+    counts = reg.warmup()
+    assert counts["f32"] > 0 and counts["b16"] > 0
+    streams = make_workload(reg, clients=2, requests_per_client=4,
+                            max_rows=16, seed=1)
+    for stream in streams:
+        for req in stream:
+            assert req.X.dtype == reg.get(req.model).dtype
+    report = run_load(baseline_target(reg), streams, label="policy-smoke")
+    assert report.completed == 8 and report.mismatches == 0
